@@ -1,0 +1,106 @@
+"""Kernel-fusion ablation (paper §2.2/§3.2 claims, TPU-translated).
+
+The paper's wins are fewer CUDA kernel launches; the TPU equivalent is HBM
+round-trips (DESIGN.md §2). For each fusion this benchmark compares the
+fused Pallas kernel against the unfused op sequence on BOTH axes we can
+measure here:
+
+* modeled HBM bytes (the roofline-relevant quantity): unfused = every
+  intermediate makes an HBM round-trip; fused = inputs once + outputs once.
+* XLA cost-analysis bytes of the jitted unfused pipeline vs the fused
+  kernel's analytic traffic.
+
+Embedding fusion: 3 gathers + 2 adds -> 1 kernel.
+AddBias+AddResidual+LayerNorm+Quant: 4 passes -> 1.
+Dequant+bias+act+requant GEMM epilogue: 3 extra passes -> 0 (in-register).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _xla_bytes(fn, *args) -> float:
+    c = jax.jit(fn).lower(*args).compile()
+    cost = c.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    return float(cost.get("bytes accessed", 0.0))
+
+
+def embed_fusion(emit=print, N=4096, V=8192, S=512, D=768):
+    tok_t = jax.ShapeDtypeStruct((V, D), jnp.float32)
+    pos_t = jax.ShapeDtypeStruct((S, D), jnp.float32)
+    seg_t = jax.ShapeDtypeStruct((2, D), jnp.float32)
+    toks = jax.ShapeDtypeStruct((N,), jnp.int32)
+    segs = jax.ShapeDtypeStruct((N,), jnp.int32)
+
+    def unfused(tok_t, pos_t, seg_t, toks, segs):
+        a = jnp.take(tok_t, toks, axis=0)
+        b = jnp.take(pos_t, jnp.arange(N) % S, axis=0)
+        c = jnp.take(seg_t, segs, axis=0)
+        x = a + b          # each op = one HBM round-trip unfused
+        return x + c
+
+    unfused_bytes = _xla_bytes(unfused, tok_t, pos_t, seg_t, toks, segs)
+    # fused kernel traffic: 3 gathered rows in + 1 row out per token
+    fused_bytes = N * D * 4 * 4
+    emit(f"| fused_embed | {unfused_bytes / 1e6:.1f} MB | "
+         f"{fused_bytes / 1e6:.1f} MB | {unfused_bytes / fused_bytes:.2f}x |")
+    return unfused_bytes, fused_bytes
+
+
+def addnorm_fusion(emit=print, M=4096, D=768):
+    x = jax.ShapeDtypeStruct((M, D), jnp.float32)
+    g = jax.ShapeDtypeStruct((D,), jnp.float32)
+
+    def unfused(x, res, bias, gamma, beta):
+        h = x + res
+        h = h + bias
+        mu = jnp.mean(h, -1, keepdims=True)
+        var = jnp.mean(jnp.square(h - mu), -1, keepdims=True)
+        y = (h - mu) * jax.lax.rsqrt(var + 1e-6) * gamma + beta
+        q = jnp.clip(jnp.round(y / 0.05), -128, 127).astype(jnp.int8)
+        return h, q
+
+    unfused_bytes = _xla_bytes(unfused, x, x, g, g, g)
+    # fused: x,res in (f32) + h out (f32) + q out (int8)
+    fused_bytes = M * D * (4 + 4 + 4 + 1)
+    emit(f"| addnorm_quant | {unfused_bytes / 1e6:.1f} MB | "
+         f"{fused_bytes / 1e6:.1f} MB | {unfused_bytes / fused_bytes:.2f}x |")
+    return unfused_bytes, fused_bytes
+
+
+def epilogue_fusion(emit=print, M=2048, K=768, N=3072):
+    xq = jax.ShapeDtypeStruct((M, K), jnp.int8)
+    wq = jax.ShapeDtypeStruct((K, N), jnp.int8)
+    ws = jax.ShapeDtypeStruct((N,), jnp.float32)
+    b = jax.ShapeDtypeStruct((N,), jnp.float32)
+
+    def unfused(xq, wq, ws, b):
+        acc = jax.lax.dot_general(xq, wq, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.int32)
+        y = acc.astype(jnp.float32) * (0.02 * ws)      # dequant pass
+        y = y + b                                      # bias pass
+        y = jax.nn.gelu(y)                             # act pass
+        return jnp.clip(jnp.round(y / 0.05), -128, 127).astype(jnp.int8)
+
+    unfused_bytes = _xla_bytes(unfused, xq, wq, ws, b)
+    # fused: int8 in + int8 weights + int8 out; epilogue never leaves VMEM
+    fused_bytes = M * K + K * N + M * N
+    emit(f"| quant_linear epilogue | {unfused_bytes / 1e6:.1f} MB | "
+         f"{fused_bytes / 1e6:.1f} MB | "
+         f"{unfused_bytes / fused_bytes:.2f}x |")
+    return unfused_bytes, fused_bytes
+
+
+def main(emit=print):
+    emit("| fusion | unfused HBM traffic | fused | reduction |")
+    emit("|---|---|---|---|")
+    embed_fusion(emit)
+    addnorm_fusion(emit)
+    epilogue_fusion(emit)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,193 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+Reads results/dryrun/*.json (written by repro.launch.dryrun), computes the
+three roofline terms per (arch x shape) cell on the single-pod mesh
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs        (197e12 bf16)
+    memory     = HLO_bytes_per_device / HBM_bw            (819e9)
+    collective = collective_bytes_per_device / ICI_bw     (50e9 per link)
+
+plus MODEL_FLOPS = 6*N*D (train) or 2*N_active*D (inference) and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPS, and emits the markdown table
+EXPERIMENTS.md §Roofline embeds.
+
+XLA's CPU cost model counts one FLOP per MAC for dot ops (calibrated in
+``xla_flop_convention``); we normalize to the 2-flops-per-MAC convention the
+197 TFLOP/s peak uses.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import ArchConfig
+from repro.launch.shapes import SHAPES
+
+PEAK_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def xla_flop_convention() -> float:
+    """Measure XLA cost-model flops for a known matmul -> scale factor to
+    the 2*M*N*K convention."""
+    m = k = n = 256
+    f = jax.jit(lambda a, b: a @ b)
+    c = f.lower(jax.ShapeDtypeStruct((m, k), jnp.float32),
+                jax.ShapeDtypeStruct((k, n), jnp.float32)).compile()
+    flops = c.cost_analysis()["flops"]
+    return (2.0 * m * k * n) / flops
+
+
+def param_count(cfg: ArchConfig) -> tuple[float, float]:
+    """(total, active) parameter counts, embeddings included."""
+    kinds = cfg.layer_kinds()
+    D = cfg.d_model
+    total = active = cfg.vocab_size * D * (1 if cfg.tie_embeddings else 2)
+    if cfg.position == "learned":
+        total += cfg.max_position * D
+        active += cfg.max_position * D
+    for kind in kinds:
+        t = a = 0
+        if kind.body == "attn":
+            if cfg.mla is not None:
+                m = cfg.mla
+                qk = m.qk_nope_dim + m.qk_rope_dim
+                t += D * m.q_lora_rank + m.q_lora_rank * cfg.num_heads * qk \
+                    if m.q_lora_rank else D * cfg.num_heads * qk
+                t += D * (m.kv_lora_rank + m.qk_rope_dim)
+                t += m.kv_lora_rank * cfg.num_heads * (m.qk_nope_dim
+                                                       + m.v_head_dim)
+                t += cfg.num_heads * m.v_head_dim * D
+            else:
+                t += D * (cfg.q_dim + 2 * cfg.kv_dim) + cfg.q_dim * D
+            a += t
+            if kind.moe:
+                mo = cfg.moe
+                expert = 3 * D * mo.d_ff_expert
+                t += mo.num_experts * expert + D * mo.num_experts
+                a += (mo.top_k + mo.num_shared) * expert
+                if mo.num_shared:
+                    t += mo.num_shared * expert
+            elif cfg.d_ff:
+                n_mats = 3 if cfg.ffn_kind == "glu" else 2
+                f = (n_mats - 1) * D * cfg.d_ff + cfg.d_ff * D
+                t += f
+                a += f
+        elif kind.body == "rglru":
+            R = cfg.rnn_width or D
+            f = 2 * D * R + 2 * R * R + R * D + 3 * D * cfg.d_ff
+            t += f
+            a += f
+        else:   # mlstm / slstm
+            Dp = int(cfg.proj_factor * D)
+            if kind.body == "mlstm":
+                f = D * 2 * Dp + 3 * Dp * Dp + Dp * D
+            else:
+                f = 4 * D * D + D * D
+            t += f
+            a += f
+        total += t
+        active += a
+    return float(total), float(active)
+
+
+def model_flops(cfg: ArchConfig, shape_name: str) -> float:
+    """6*N*D for training, 2*N_active*D for inference steps (global)."""
+    cell = SHAPES[shape_name]
+    _, active = param_count(cfg)
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * active * tokens
+    # decode: one token per sequence
+    return 2.0 * active * cell.global_batch
+
+
+def load_records(results_dir: str = RESULTS, mesh: str = "single",
+                 policy: str = "float") -> dict:
+    out = {}
+    for path in glob.glob(os.path.join(results_dir, "*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("mesh") == mesh and r.get("policy") == policy:
+            out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def analyze(record: dict, flop_scale: float) -> dict:
+    cfg = get_config(record["arch"])
+    chips = record["num_devices"]
+    corrected = record.get("corrected", {})
+    flops_dev = corrected.get("flops") or \
+        record["cost"].get("flops", 0.0) * flop_scale
+    bytes_dev = corrected.get("bytes") or \
+        record["cost"].get("bytes accessed", 0.0)
+    coll_dev = corrected.get("collective_bytes")
+    if coll_dev is None:
+        coll_dev = sum(v["bytes"] for v in record["collectives"].values())
+    t_compute = flops_dev / PEAK_BF16
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, record["shape"])
+    mf_dev = mf / chips
+    useful = mf_dev / flops_dev if flops_dev else 0.0
+    # roofline fraction: useful model flops vs what the machine could do in
+    # the modeled step time (the score axis)
+    t_step = max(t_compute, t_memory, t_coll)
+    frac = (mf_dev / PEAK_BF16) / t_step if t_step else 0.0
+    return {"arch": record["arch"], "shape": record["shape"],
+            "t_compute": t_compute, "t_memory": t_memory,
+            "t_collective": t_coll, "dominant": dominant,
+            "model_flops_dev": mf_dev, "hlo_flops_dev": flops_dev,
+            "useful_ratio": useful, "roofline_frac": frac,
+            "temp_gb": record["memory"]["temp_bytes"] / 1e9}
+
+
+def table(results_dir: str = RESULTS, mesh: str = "single",
+          policy: str = "float") -> str:
+    scale = xla_flop_convention()
+    recs = load_records(results_dir, mesh, policy)
+    rows = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+            "dominant | useful | roofline |",
+            "|---|---|---|---|---|---|---|---|"]
+    analyses = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            r = recs.get((arch, shape))
+            if r is None or r["status"] != "ok":
+                continue
+            a = analyze(r, scale)
+            analyses.append(a)
+            rows.append(
+                f"| {a['arch']} | {a['shape']} | {a['t_compute']:.3e} | "
+                f"{a['t_memory']:.3e} | {a['t_collective']:.3e} | "
+                f"{a['dominant']} | {a['useful_ratio']:.2f} | "
+                f"{a['roofline_frac']:.2f} |")
+    return "\n".join(rows), analyses
+
+
+def main():
+    md, analyses = table()
+    print(md)
+    if analyses:
+        worst = min(analyses, key=lambda a: a["roofline_frac"])
+        coll = max(analyses, key=lambda a: a["t_collective"]
+                   / max(max(a["t_compute"], a["t_memory"]), 1e-30))
+        print(f"\nworst roofline: {worst['arch']}/{worst['shape']} "
+              f"({worst['roofline_frac']:.2f})")
+        print(f"most collective-bound: {coll['arch']}/{coll['shape']}")
+
+
+if __name__ == "__main__":
+    main()

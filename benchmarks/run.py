@@ -1,0 +1,77 @@
+"""Benchmark aggregator: one entry per paper table/figure + the roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints a `name,seconds,derived` CSV summary line per benchmark after each
+section's own table. ``--quick`` shrinks the Table-2 fine-tuning budget.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    steps = 60 if args.quick else 120
+    stride = 6 if args.quick else 4
+    summary = []
+
+    def run(name, fn):
+        t0 = time.time()
+        print(f"\n=== {name} " + "=" * max(1, 60 - len(name)))
+        derived = fn()
+        dt = time.time() - t0
+        summary.append((name, dt, derived))
+
+    from benchmarks import (figure3_speedup, fusion_ablation, roofline,
+                            softmax_range, table2_clue)
+
+    def _table2():
+        rows = table2_clue.main(steps=steps, stride=stride)
+        return f"{len(rows)} grid points"
+
+    def _fig3():
+        figure3_speedup.main()
+        return "modeled+measured grids"
+
+    def _softmax():
+        r = softmax_range.collect()
+        return (f"softmax unused {r['softmax_unused']}/256; "
+                f"mha unused {r['mha_unused']}/256; "
+                f"unsigned fix {r['softmax_unsigned_unused']}/256")
+
+    def _fusion():
+        fusion_ablation.main()
+        return "3 fusions"
+
+    def _roofline():
+        md, analyses = roofline.table()
+        print(md)
+        if not analyses:
+            return "no dry-run records (run repro.launch.dryrun first)"
+        worst = min(analyses, key=lambda a: a["roofline_frac"])
+        return (f"{len(analyses)} cells; worst roofline "
+                f"{worst['arch']}/{worst['shape']}="
+                f"{worst['roofline_frac']:.2f}")
+
+    run("table2_clue (paper Table 2)", _table2)
+    run("figure3_speedup (paper Figure 3)", _fig3)
+    run("softmax_range (paper Figure 4 / Appx B)", _softmax)
+    run("fusion_ablation (paper §2.2/§3.2)", _fusion)
+    run("roofline (deliverable g)", _roofline)
+
+    print("\n=== summary csv " + "=" * 44)
+    print("name,seconds,derived")
+    for name, dt, derived in summary:
+        print(f"{name},{dt:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

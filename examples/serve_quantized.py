@@ -1,0 +1,66 @@
+"""Serve a SAMP-quantized LM with continuous batching.
+
+    PYTHONPATH=src python examples/serve_quantized.py \
+        [--arch qwen2-0.5b] [--policy ffn] [--requests 8]
+
+Builds the (reduced) model, PTQ-calibrates it, applies the requested SAMP
+policy (default: Quant-FFN-Only on all layers — the paper's preferred mode),
+and streams a mixed batch of generation requests through the token-level
+continuous-batching engine. Requests of different prompt lengths prefill
+and decode side-by-side in the same compiled step.
+"""
+import argparse
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.precision import make_policy
+from repro.core.samp import SAMPEngine
+from repro.models import transformer as T
+from repro.serve import Request, ServeEngine
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen2-0.5b")
+ap.add_argument("--policy", default="ffn", help="float | ffn[K] | full[K]")
+ap.add_argument("--requests", type=int, default=8)
+ap.add_argument("--max-tokens", type=int, default=12)
+ap.add_argument("--slots", type=int, default=4)
+args = ap.parse_args()
+
+cfg = get_config(args.arch).reduced()
+eng = SAMPEngine(cfg, float_dtype="float32")
+params = T.init_params(jax.random.PRNGKey(0), cfg, eng.float_policy)
+
+policy = make_policy(cfg, args.policy, "float32")
+if policy.num_quant_ffn or policy.num_quant_mha:
+    calib = [{"tokens": jax.random.randint(jax.random.PRNGKey(i), (2, 32),
+                                           0, cfg.vocab_size)}
+             for i in range(4)]
+    stats = eng.calibrate(params, calib)
+    params, plan = eng.apply(params, stats, policy)
+    print(f"SAMP policy applied: {policy.describe()}")
+else:
+    plan = eng.float_plan
+
+server = ServeEngine(cfg, params, plan, batch_slots=args.slots, max_len=128)
+rng = np.random.default_rng(0)
+for i in range(args.requests):
+    prompt = rng.integers(1, cfg.vocab_size,
+                          size=int(rng.integers(2, 10))).tolist()
+    server.submit(Request(uid=i, prompt=prompt, max_tokens=args.max_tokens))
+
+t0 = time.perf_counter()
+done = server.run()
+dt = time.perf_counter() - t0
+for req in sorted(done, key=lambda r: r.uid):
+    print(f"  req{req.uid}: {len(req.prompt)}-token prompt -> {req.output}")
+s = server.stats
+print(f"{s['retired']} requests / {s['tokens']} tokens / {s['ticks']} ticks "
+      f"in {dt:.1f}s ({s['tokens'] / max(dt, 1e-9):.1f} tok/s on CPU)")

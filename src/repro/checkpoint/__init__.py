@@ -1,0 +1,6 @@
+from repro.checkpoint import store
+from repro.checkpoint.store import (all_steps, latest_step, restore,
+                                    restore_latest, save)
+
+__all__ = ["store", "all_steps", "latest_step", "restore", "restore_latest",
+           "save"]

@@ -1,0 +1,30 @@
+"""hubert-xlarge [audio] — encoder-only transformer, wav2vec2 arch
+[arXiv:2106.07447; unverified].
+
+48L, d_model=1280, 16 heads, d_ff=5120, vocab=504 (target cluster codebook).
+The conv waveform feature extractor is a STUB — ``input_specs()`` provides
+precomputed frame embeddings. Encoder-only => decode shapes skipped.
+"""
+from repro.configs.base import ArchConfig, register
+
+HUBERT_XLARGE = register(ArchConfig(
+    name="hubert-xlarge",
+    family="audio",
+    num_layers=48,
+    d_model=1280,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=80,
+    d_ff=5120,
+    vocab_size=504,
+    attention="full",
+    causal=False,                # bidirectional encoder
+    ffn_kind="gelu",
+    norm_kind="layernorm",
+    position="none",             # conv positional embedding lives in the stub
+    tie_embeddings=False,
+    frontend="audio",
+    frontend_dim=512,            # conv feature width before projection
+    supports_decode=False,
+    subquadratic=False,
+))

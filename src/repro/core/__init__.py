@@ -1,0 +1,4 @@
+"""SAMP core: quantization numerics, calibrators, the per-layer precision
+lattice, the accuracy-decay-aware allocator, and the engine tying them
+together (the paper's primary contribution)."""
+from repro.core import allocator, calibration, precision, quantize  # noqa: F401

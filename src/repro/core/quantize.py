@@ -1,0 +1,170 @@
+"""Symmetric INT8 quantization primitives (the paper's numeric substrate).
+
+SAMP uses symmetric signed-INT8 post-training quantization:
+
+    q = clip(round(x / scale), -128, 127)        (paper Appendix B)
+    x_hat = q * scale
+
+Scales come from a calibrator (see :mod:`repro.core.calibration`). Three
+granularities are supported:
+
+* per-tensor   — one scale for the whole tensor (paper's activation scheme)
+* per-channel  — one scale per output channel (paper's weight scheme, the
+                 pytorch-quantization default for weights)
+* per-token    — one scale per row, computed dynamically at runtime
+                 (beyond-paper option; see DESIGN.md §8)
+
+Beyond-paper: asymmetric *unsigned* quantization for [0, 1)-ranged tensors
+(softmax outputs) — the direct fix for the paper's Appendix-B pathology.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+INT8_MIN = -128
+INT8_MAX = 127
+UINT8_MAX = 255
+# Smallest representable scale; guards div-by-zero on all-zero tensors.
+EPS = 1e-8
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """An int8 tensor plus the metadata needed to dequantize it.
+
+    ``scale`` broadcasts against ``values`` (shape () for per-tensor,
+    (..., 1) / (1, n) for per-axis). ``zero_point`` is 0 for symmetric
+    quantization and nonzero only for the unsigned/asymmetric variant.
+    """
+
+    values: jax.Array       # int8
+    scale: jax.Array        # f32, broadcastable to values.shape
+    zero_point: Any = None  # int32 array for asymmetric; None = symmetric
+    #                         (None keeps the zero-point correction out of
+    #                         the graph entirely — it is not a traced zero)
+
+    def dequantize(self, dtype: Any = jnp.float32) -> jax.Array:
+        v = self.values.astype(jnp.int32)
+        if self.zero_point is not None:
+            v = v - self.zero_point
+        return v.astype(dtype) * self.scale.astype(dtype)
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+    def tree_flatten_with_keys(self):
+        GK = jax.tree_util.GetAttrKey
+        return (((GK("values"), self.values), (GK("scale"), self.scale),
+                 (GK("zero_point"), self.zero_point)), None)
+
+    def tree_flatten(self):
+        return (self.values, self.scale, self.zero_point), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+def compute_scale_symmetric(amax: jax.Array) -> jax.Array:
+    """scale such that +amax maps to +127 (symmetric signed int8)."""
+    return jnp.maximum(amax, EPS).astype(jnp.float32) / float(INT8_MAX)
+
+
+def quantize(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Symmetric int8 quantization with round-to-nearest-even (TPU native)."""
+    q = jnp.round(x.astype(jnp.float32) / scale.astype(jnp.float32))
+    return jnp.clip(q, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def dequantize(q: jax.Array, scale: jax.Array, dtype: Any = jnp.float32) -> jax.Array:
+    return q.astype(dtype) * scale.astype(dtype)
+
+
+def quantize_per_tensor(x: jax.Array, amax: jax.Array | None = None) -> QuantizedTensor:
+    """Per-tensor symmetric quantization. If ``amax`` is None (dynamic mode)
+    it is computed from ``x`` (max-calibration over the whole tensor)."""
+    if amax is None:
+        amax = jnp.max(jnp.abs(x))
+    scale = compute_scale_symmetric(amax)
+    return QuantizedTensor(quantize(x, scale), scale, None)
+
+
+def quantize_per_channel(x: jax.Array, axis: int = -1,
+                         amax: jax.Array | None = None) -> QuantizedTensor:
+    """Per-channel symmetric quantization along ``axis`` (weights: the
+    output-feature axis, matching pytorch-quantization's per-channel mode)."""
+    axis = axis % x.ndim
+    if amax is None:
+        reduce_axes = tuple(i for i in range(x.ndim) if i != axis)
+        amax = jnp.max(jnp.abs(x), axis=reduce_axes, keepdims=True)
+    scale = compute_scale_symmetric(amax)
+    return QuantizedTensor(quantize(x, scale), scale, None)
+
+
+def quantize_per_token(x: jax.Array) -> QuantizedTensor:
+    """Per-row dynamic quantization (beyond-paper). Rows are the leading
+    ndim-1 axes; the feature axis (-1) shares one scale per row."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = compute_scale_symmetric(amax)
+    return QuantizedTensor(quantize(x, scale), scale, None)
+
+
+def quantize_unsigned(x: jax.Array, amax: jax.Array | None = None) -> QuantizedTensor:
+    """Asymmetric *unsigned-range* quantization for [0, amax] tensors
+    (softmax outputs). Maps [0, amax] → [-128, 127] with zero_point = -128,
+    so all 256 code points are usable — the direct fix for the paper's
+    Appendix-B observation that symmetric quantization wastes [-128, 0).
+    Stored as int8 to stay MXU-compatible."""
+    if amax is None:
+        amax = jnp.max(x)
+    scale = jnp.maximum(amax, EPS).astype(jnp.float32) / float(UINT8_MAX)
+    q = jnp.round(x.astype(jnp.float32) / scale) + INT8_MIN
+    q = jnp.clip(q, INT8_MIN, INT8_MAX).astype(jnp.int8)
+    return QuantizedTensor(q, scale, jnp.int32(INT8_MIN))
+
+
+@partial(jax.jit, static_argnames=("out_dtype",))
+def int8_matmul(x_q: QuantizedTensor, w_q: QuantizedTensor,
+                out_dtype: Any = jnp.float32) -> jax.Array:
+    """W8A8 matmul with int32 accumulation (MXU-native path) and fused
+    dequantization.  x_q: (..., K) per-tensor or per-token scales;
+    w_q: (K, N) with per-channel scales shaped (1, N) or scalar.
+
+    On TPU `lax.dot_general(int8, int8, preferred_element_type=int32)`
+    lowers to MXU int8 ops at 2x bf16 throughput. The Pallas kernel in
+    repro/kernels/quant_linear.py is the fused production path; this is the
+    composable jnp fallback used by models on CPU and in oracles.
+    """
+    acc = jax.lax.dot_general(
+        x_q.values, w_q.values,
+        dimension_numbers=(((x_q.values.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    # Zero-point correction: (q_x - z_x) @ (q_w - z_w). Weights are always
+    # symmetric (z_w = None); the correction enters the graph only for
+    # unsigned-shifted activations (softmax outputs).
+    if x_q.zero_point is not None:
+        correction = x_q.zero_point * jnp.sum(
+            w_q.values.astype(jnp.int32), axis=0)
+        acc = acc - correction
+    scale = x_q.scale * w_q.scale.reshape((1,) * (acc.ndim - 1) + (-1,))
+    return (acc.astype(jnp.float32) * scale).astype(out_dtype)
+
+
+def fake_quantize(x: jax.Array, amax: jax.Array) -> jax.Array:
+    """Quantize-dequantize roundtrip (QDQ) — used by the accuracy sweep to
+    simulate int8 numerics inside an otherwise-float graph."""
+    scale = compute_scale_symmetric(amax)
+    return dequantize(quantize(x, scale), scale, x.dtype)

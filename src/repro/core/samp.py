@@ -1,0 +1,129 @@
+"""The SAMP engine: calibrate → sweep → recommend → apply (paper §3.2).
+
+Ties the substrate together:
+
+* :mod:`repro.quant.ptq` turns float params + calibration stats into
+  mixed-precision params for any :class:`EncoderPolicy`;
+* the engine sweeps the paper's candidate grid (both modes × k = 0..N
+  quantized layers), measuring (accuracy, latency) per candidate with
+  user-supplied callables — accuracy from a dev-set eval, latency from
+  wall-clock on real hardware or the roofline model on this CPU container
+  (both flow through the same interface, DESIGN.md §2);
+* :mod:`repro.core.allocator` (Algorithm 1 + Appendix-A thresholds) picks
+  the recommended combination per mode;
+* the chosen policy's params/plan are returned ready for inference.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+from repro.configs.base import ArchConfig
+from repro.core import allocator
+from repro.core.precision import EncoderPolicy, LayerMode, paper_grid
+from repro.models.transformer import QuantScheme, build_plan
+from repro.quant import ptq
+
+EvalFn = Callable[[dict, tuple, EncoderPolicy], float]
+LatencyFn = Callable[[dict, tuple, EncoderPolicy], float]
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    mode_name: str            # 'float' | 'fully_quant' | 'quant_ffn_only'
+    k: int                    # number of quantized layers
+    policy: EncoderPolicy
+    accuracy: float
+    latency: float
+
+    @property
+    def speedup_key(self):
+        return (self.mode_name, self.k)
+
+
+@dataclasses.dataclass(frozen=True)
+class SAMPResult:
+    mode_name: str
+    point: SweepPoint
+    recommendation: allocator.Recommendation
+
+
+class SAMPEngine:
+    """End-to-end self-adaptive mixed-precision driver for one model."""
+
+    def __init__(self, cfg: ArchConfig, scheme: QuantScheme = QuantScheme(),
+                 float_dtype: str = "bfloat16"):
+        self.cfg = cfg
+        self.scheme = scheme
+        self.float_dtype = float_dtype
+        self.float_policy = EncoderPolicy.full_float(cfg.num_layers,
+                                                     float_dtype)
+        self.float_plan = build_plan(cfg, self.float_policy)
+
+    # -- step 1: calibration ------------------------------------------------
+    def calibrate(self, params: dict, batches: Sequence[dict], *,
+                  calibrator: str = "minmax", **kw):
+        """Observe activation ranges on calibration batches (paper §4.1 uses
+        pytorch-quantization's min-max calibrator)."""
+        return ptq.capture_stats(params, batches, self.cfg, self.float_plan,
+                                 self.scheme, calibrator=calibrator, **kw)
+
+    # -- step 2: candidate sweep ---------------------------------------------
+    def sweep(self, params: dict, stats: dict, eval_fn: EvalFn,
+              latency_fn: LatencyFn, *, stride: int = 1,
+              modes: Sequence[LayerMode] = (LayerMode.FULLY_QUANT,
+                                            LayerMode.QUANT_FFN_ONLY),
+              ) -> list[SweepPoint]:
+        """Evaluate accuracy and latency for every (mode, k) candidate —
+        the paper's Table-2 grid. Candidate ('float', 0) is always first."""
+        points: list[SweepPoint] = []
+        grid = [g for g in paper_grid(self.cfg.num_layers, self.float_dtype,
+                                      stride)
+                if g[0] == "float"
+                or any(m.value == g[0] for m in modes)]
+        for name, k, policy in grid:
+            qparams, plan = ptq.apply_policy(
+                params, self.cfg, policy, stats, scheme=self.scheme,
+                float_plan=self.float_plan)
+            acc = eval_fn(qparams, plan, policy)
+            lat = latency_fn(qparams, plan, policy)
+            points.append(SweepPoint(name, k, policy, acc, lat))
+        return points
+
+    # -- step 3: recommendation ----------------------------------------------
+    @staticmethod
+    def recommend(points: Sequence[SweepPoint], *,
+                  max_latency: Optional[float] = None,
+                  min_accuracy: Optional[float] = None) -> list[SAMPResult]:
+        """Run the accuracy-decay-aware allocator per mode (Table 2 under-
+        lines one combination per mode), or the Appendix-A threshold policies
+        when the user states requirements."""
+        base = next(p for p in points if p.mode_name == "float")
+        results = []
+        for mode_name in ("fully_quant", "quant_ffn_only"):
+            series = sorted((p for p in points if p.mode_name == mode_name),
+                            key=lambda p: p.k)
+            if not series:
+                continue
+            cand = [base] + series
+            rec = allocator.recommend(
+                [p.accuracy for p in cand], [p.latency for p in cand],
+                max_latency=max_latency, min_accuracy=min_accuracy)
+            results.append(SAMPResult(mode_name, cand[rec.index], rec))
+        return results
+
+    def top5(self, points: Sequence[SweepPoint]) -> list[SweepPoint]:
+        """Appendix A: neither threshold set -> top-5 by speedup/accuracy-loss."""
+        base = next(p for p in points if p.mode_name == "float")
+        rest = [p for p in points if p is not base]
+        cand = [base] + rest
+        recs = allocator.top_k_by_efficiency(
+            [p.accuracy for p in cand], [p.latency for p in cand], k=5)
+        return [cand[r.index] for r in recs]
+
+    # -- step 4: apply -------------------------------------------------------
+    def apply(self, params: dict, stats: dict, policy: EncoderPolicy):
+        """Produce the production-ready (params, plan) for a chosen policy."""
+        return ptq.apply_policy(params, self.cfg, policy, stats,
+                                scheme=self.scheme,
+                                float_plan=self.float_plan)

@@ -1,0 +1,6 @@
+from repro.data import pipeline, tokenizer
+from repro.data.pipeline import TaskSpec, eval_accuracy, get_batch, make_task
+from repro.data.tokenizer import WordPieceTokenizer
+
+__all__ = ["pipeline", "tokenizer", "TaskSpec", "eval_accuracy", "get_batch",
+           "make_task", "WordPieceTokenizer"]

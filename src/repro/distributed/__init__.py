@@ -1,0 +1,4 @@
+from repro.distributed import compression, sharding
+from repro.distributed.sharding import MeshAxes, Rules, infer_axes
+
+__all__ = ["compression", "sharding", "MeshAxes", "Rules", "infer_axes"]

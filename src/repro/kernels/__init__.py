@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for SAMP's fusion contributions (+ flash attention).
+
+Each kernel module holds the pl.pallas_call + BlockSpec implementation;
+ops.py is the jit'd public wrapper; ref.py the pure-jnp oracle the test
+suite sweeps against.
+"""
+from repro.kernels import ops, ref  # noqa: F401

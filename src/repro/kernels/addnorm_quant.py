@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: fused AddResidual + AddBias + Norm + Quantize.
+
+The paper's Layer-fusion contribution (§2.2/§3.2): Quant/DeQuant ops folded
+into the AddResidual/AddBias/LayerNorm "big kernel" so the tensor crossing
+kernel (= HBM) boundaries is int8. One pass over the rows computes
+
+    h   = x + residual + bias            (f32, the residual carry)
+    y   = norm(h) * gamma (+ beta)       (rmsnorm or layernorm)
+    q   = clip(round(y / x_scale))       (int8, feeds the next quant GEMM)
+
+and writes both h (needed for the next residual add) and q. Row-parallel:
+block = (bm, D) with the full feature dim resident in VMEM (D <= a few K for
+every assigned arch, far under the ~16 MB VMEM budget at bm = 256).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, res_ref, b_ref, g_ref, beta_ref, h_ref, q_ref, *,
+            kind: str, eps: float, x_scale: float):
+    h = (x_ref[...].astype(jnp.float32) + res_ref[...].astype(jnp.float32)
+         + b_ref[...])
+    if kind == "layernorm":
+        mu = jnp.mean(h, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(h - mu), axis=-1, keepdims=True)
+        y = (h - mu) * jax.lax.rsqrt(var + eps) * g_ref[...] + beta_ref[...]
+    else:
+        var = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+        y = h * jax.lax.rsqrt(var + eps) * g_ref[...]
+    h_ref[...] = h.astype(h_ref.dtype)
+    q = jnp.round(y / x_scale)
+    q_ref[...] = jnp.clip(q, -128, 127).astype(jnp.int8)
+
+
+def addnorm_quant(x: jax.Array, residual: jax.Array, bias: jax.Array,
+                  gamma: jax.Array, beta: jax.Array | None, x_scale: float,
+                  *, kind: str = "layernorm", eps: float = 1e-6,
+                  bm: int = 256, interpret: bool = False):
+    """x, residual: (M, D); bias/gamma/beta: (D,). Returns (h f32/bf16, q int8).
+    ``kind``: 'layernorm' | 'rmsnorm'."""
+    M, D = x.shape
+    bm = min(bm, M)
+    assert M % bm == 0, (M, bm)
+    if beta is None:
+        beta = jnp.zeros((D,), jnp.float32)
+    kernel = functools.partial(_kernel, kind=kind, eps=eps,
+                               x_scale=float(x_scale))
+    row = pl.BlockSpec((bm, D), lambda i: (i, 0))
+    vec = pl.BlockSpec((1, D), lambda i: (0, 0))
+    h, q = pl.pallas_call(
+        kernel,
+        grid=(M // bm,),
+        in_specs=[row, row, vec, vec, vec],
+        out_specs=[row, row],
+        out_shape=[jax.ShapeDtypeStruct((M, D), x.dtype),
+                   jax.ShapeDtypeStruct((M, D), jnp.int8)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x, residual, bias.reshape(1, D).astype(jnp.float32),
+      gamma.reshape(1, D).astype(jnp.float32),
+      beta.reshape(1, D).astype(jnp.float32))
+    return h, q

@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: flash attention (online softmax) for the 32k shapes.
+
+The hot path for ``prefill_32k``: blockwise attention with the running
+(m, l, acc) online-softmax state held in VMEM scratch across the key grid
+axis, so the (Sq, Sk) score matrix never touches HBM. Supports causal and
+sliding-window masks (positions are block-aligned), GQA (queries carry more
+heads than keys — the head grid indexes kv heads via integer division) and
+gemma-style score softcapping.
+
+Grid: (batch * q_heads, Sq/bq, Sk/bk), key axis innermost ("arbitrary"
+semantics — it carries the accumulator). Causal masking skips fully-masked
+key blocks via ``pl.when`` on the block indices, halving compute for causal
+prefill.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: Optional[int],
+            softcap: Optional[float], bq: int, bk: int, nk: int):
+    kb = pl.program_id(2)
+    qb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Block-level mask decision: last query position vs first key position.
+    q_lo = qb * bq
+    k_lo = kb * bk
+    run = None
+    if causal:
+        run = k_lo <= q_lo + bq - 1                # else fully masked
+    if window is not None:
+        in_win = k_lo + bk - 1 > q_lo - window
+        run = in_win if run is None else jnp.logical_and(run, in_win)
+
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale   # (bq, d)
+        k = k_ref[0].astype(jnp.float32)           # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask = kpos <= qpos
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                        # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                     # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)            # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)
+        acc_ref[...] = (acc_ref[...] * alpha
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+        m_ref[...] = m_new
+
+    if run is None:
+        _body()
+    else:
+        pl.when(run)(_body)
+
+    @pl.when(kb == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    bq: int = 512, bk: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, Sq, d); k, v: (B, Hkv, Sk, d) with Hq % Hkv == 0.
+    Returns (B, Hq, Sq, d)."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert Hq % Hkv == 0
+    g = Hq // Hkv
+    bq, bk = min(bq, Sq), min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, Sk, bq, bk)
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qf = q.reshape(B * Hq, Sq, D)
+    kf = k.reshape(B * Hkv, Sk, D)
+    vf = v.reshape(B * Hkv, Sk, D)
+    nk = Sk // bk
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, softcap=softcap,
+        bq=bq, bk=bk, nk=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, Sq // bq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda h, i, j, g=g: (h // g, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda h, i, j, g=g: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, D), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, Hq, Sq, D)

@@ -1,0 +1,67 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On TPU these lower to Mosaic; on this CPU container they run in interpret
+mode (``interpret=True`` executes the kernel body in Python per grid step —
+the correctness path used by the test suite). ``KERNEL_INTERPRET`` flips
+globally so model code can call the same entry points everywhere.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import addnorm_quant as _anq
+from repro.kernels import dynamic_quant as _dq
+from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_embed as _fe
+from repro.kernels import quant_linear as _ql
+
+# CPU containers have no Mosaic backend; default to interpret off-TPU.
+KERNEL_INTERPRET = jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "x_scale", "act", "out_scale", "out_dtype", "bm", "bn", "bk"))
+def quant_linear(x_q, w_q, w_scale, x_scale: float, *, bias=None,
+                 act: Optional[str] = None, out_scale: Optional[float] = None,
+                 out_dtype=jnp.bfloat16, bm=128, bn=128, bk=128):
+    return _ql.quant_linear(x_q, w_q, w_scale, x_scale, bias=bias, act=act,
+                            out_scale=out_scale, out_dtype=out_dtype,
+                            bm=bm, bn=bn, bk=bk,
+                            interpret=KERNEL_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("x_scale", "kind", "eps", "bm"))
+def addnorm_quant(x, residual, bias, gamma, beta, x_scale: float, *,
+                  kind: str = "layernorm", eps: float = 1e-6, bm: int = 256):
+    return _anq.addnorm_quant(x, residual, bias, gamma, beta, x_scale,
+                              kind=kind, eps=eps, bm=bm,
+                              interpret=KERNEL_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "out_dtype"))
+def fused_embed(tokens, tok_table, pos_table, seg_table=None, segments=None,
+                *, scale: float = 1.0, out_dtype=jnp.float32):
+    return _fe.fused_embed(tokens, tok_table, pos_table, seg_table, segments,
+                           scale=scale, out_dtype=out_dtype,
+                           interpret=KERNEL_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def dynamic_quant(x, *, bm: int = 256):
+    return _dq.dynamic_quant(x, bm=bm, interpret=KERNEL_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "bq", "bk"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None, bq: int = 512,
+                    bk: int = 512):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, scale=scale, bq=bq, bk=bk,
+                               interpret=KERNEL_INTERPRET)

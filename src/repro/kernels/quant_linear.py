@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: fused W8A8 GEMM epilogue — the paper's "big kernel".
+
+SAMP's CUDA version fuses Quant/DeQuant into AddBias/AddResidual/LayerNorm
+so inter-kernel dataflow stays INT8 (paper Figure 2, green arrows). The TPU
+translation (DESIGN.md §2): the win is HBM round-trips, so this kernel keeps
+the int32 accumulator in VMEM scratch across the K grid axis and applies
+dequant + bias + activation + (optional) requantize **in-register** before
+the single HBM write-back. In Fully-Quant mode the layer boundary tensor is
+int8 — 1 byte/elt of HBM traffic instead of 2.
+
+Tiling: (bm x bk) @ (bk x bn) MXU tiles; all block dims multiples of the
+(8/32, 128) TPU tile grid, 128-aligned on the matmul dims.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_ACT = {
+    None: lambda x: x,
+    "silu": jax.nn.silu,
+    "gelu": functools.partial(jax.nn.gelu, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def _kernel(x_ref, w_ref, ws_ref, b_ref, o_ref, acc_ref, *,
+            nk: int, act: Optional[str], x_scale: float,
+            out_scale: Optional[float]):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        y = acc_ref[...].astype(jnp.float32)
+        y = y * (x_scale * ws_ref[...])          # dequant: per-channel w scale
+        y = y + b_ref[...]
+        y = _ACT[act](y)
+        if out_scale is not None:                # requantize: int8 stays int8
+            q = jnp.round(y / out_scale)
+            o_ref[...] = jnp.clip(q, -128, 127).astype(jnp.int8)
+        else:
+            o_ref[...] = y.astype(o_ref.dtype)
+
+
+def quant_linear(x_q: jax.Array, w_q: jax.Array, w_scale: jax.Array,
+                 x_scale: float, *, bias: Optional[jax.Array] = None,
+                 act: Optional[str] = None,
+                 out_scale: Optional[float] = None,
+                 out_dtype=jnp.bfloat16,
+                 bm: int = 128, bn: int = 128, bk: int = 128,
+                 interpret: bool = False) -> jax.Array:
+    """y = epilogue((x_q @ w_q) * x_scale * w_scale + bias).
+
+    x_q: (M, K) int8; w_q: (K, N) int8; w_scale: (N,) f32 per-channel;
+    x_scale: python float (static per-tensor activation scale — the paper's
+    calibrated scheme). ``out_scale`` requantizes the output to int8 for
+    int8 inter-layer dataflow.
+    """
+    M, K = x_q.shape
+    K2, N = w_q.shape
+    assert K == K2, (x_q.shape, w_q.shape)
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    nk = K // bk
+    if bias is None:
+        bias = jnp.zeros((N,), jnp.float32)
+    kernel = functools.partial(_kernel, nk=nk, act=act,
+                               x_scale=float(x_scale), out_scale=out_scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(M // bm, N // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(
+            (M, N), jnp.int8 if out_scale is not None else out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x_q, w_q, w_scale.reshape(1, N).astype(jnp.float32),
+      bias.reshape(1, N).astype(jnp.float32))
+    return out

@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_ACT = {
+    None: lambda x: x,
+    "silu": jax.nn.silu,
+    "gelu": functools.partial(jax.nn.gelu, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def quant_linear(x_q, w_q, w_scale, x_scale, *, bias=None, act=None,
+                 out_scale=None, out_dtype=jnp.bfloat16):
+    acc = jax.lax.dot_general(x_q, w_q, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    y = acc.astype(jnp.float32) * (x_scale * w_scale.reshape(1, -1))
+    if bias is not None:
+        y = y + bias.reshape(1, -1).astype(jnp.float32)
+    y = _ACT[act](y)
+    if out_scale is not None:
+        return jnp.clip(jnp.round(y / out_scale), -128, 127).astype(jnp.int8)
+    return y.astype(out_dtype)
+
+
+def addnorm_quant(x, residual, bias, gamma, beta, x_scale, *,
+                  kind="layernorm", eps=1e-6):
+    h = (x.astype(jnp.float32) + residual.astype(jnp.float32)
+         + bias.reshape(1, -1).astype(jnp.float32))
+    if kind == "layernorm":
+        mu = jnp.mean(h, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(h - mu), axis=-1, keepdims=True)
+        y = (h - mu) * jax.lax.rsqrt(var + eps) * gamma.reshape(1, -1)
+        if beta is not None:
+            y = y + beta.reshape(1, -1)
+    else:
+        var = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+        y = h * jax.lax.rsqrt(var + eps) * gamma.reshape(1, -1)
+    q = jnp.clip(jnp.round(y / x_scale), -128, 127).astype(jnp.int8)
+    return h.astype(x.dtype), q
+
+
+def fused_embed(tokens, tok_table, pos_table, seg_table, segments, *,
+                scale=1.0, out_dtype=jnp.float32):
+    N = tokens.shape[0]
+    S = pos_table.shape[0]
+    x = jnp.take(tok_table, tokens, axis=0).astype(jnp.float32) * scale
+    x = x + jnp.take(pos_table, jnp.arange(N) % S, axis=0).astype(jnp.float32)
+    if seg_table is not None and segments is not None:
+        x = x + jnp.take(seg_table, segments, axis=0).astype(jnp.float32)
+    return x.astype(out_dtype)
+
+
+def dynamic_quant(x):
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -128, 127).astype(jnp.int8)
+    return q, scale
+
+
+def flash_attention(q, k, v, *, causal=True, window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None):
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    g = Hq // Hkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = kp <= qp
+    if window is not None:
+        mask = mask & (kp > qp - window)
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

@@ -1,0 +1,8 @@
+from repro.models import layers, rglru, transformer, xlstm  # noqa: F401
+from repro.models.transformer import (QuantScheme, build_plan, decode_step,
+                                      forward, init_caches, init_params,
+                                      lm_loss)
+
+__all__ = ["layers", "rglru", "transformer", "xlstm", "QuantScheme",
+           "build_plan", "decode_step", "forward", "init_caches",
+           "init_params", "lm_loss"]

@@ -1,0 +1,826 @@
+"""Quantization-aware building blocks shared by every architecture family.
+
+Every GEMM in the model zoo goes through :func:`dense` (projections) or the
+quant-aware batched matmuls inside :func:`attention_core`, so the SAMP
+precision lattice (repro.core.precision) applies uniformly: a layer's
+parameters either hold float weights (``jnp.ndarray``) or
+:class:`~repro.core.quantize.QuantizedTensor` weights plus static activation
+scales, and dispatch is structural (pytree leaf type), not flag-driven.
+
+Conventions
+-----------
+* params are plain nested dicts of arrays; a "linear" is
+  ``{"w": array|QuantizedTensor, ["b": array], ["xs": scalar]}`` where ``xs``
+  is the calibrated per-tensor activation scale (absent => float GEMM, or
+  dynamic per-token quantization when ``xs`` is absent but w is quantized).
+* every function takes/returns activations in ``cfg``'s compute dtype.
+* observer capture: functions append per-site ``amax`` scalars into an
+  ``obs`` dict when one is passed (calibration mode); ``obs=None`` is the
+  production path and adds no ops.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import (QuantizedTensor, compute_scale_symmetric,
+                                 dequantize, int8_matmul, quantize,
+                                 quantize_per_token, quantize_unsigned,
+                                 INT8_MAX, UINT8_MAX)
+
+# ---------------------------------------------------------------------------
+# observer plumbing
+# ---------------------------------------------------------------------------
+
+
+def observe(obs: Optional[dict], site: str, x: jax.Array) -> None:
+    """Record max|x| for a quantization site (calibration mode only)."""
+    if obs is not None:
+        obs[site] = jnp.max(jnp.abs(x)).astype(jnp.float32)
+
+
+def observe_values(obs: Optional[dict], site: str, x: jax.Array) -> None:
+    """Record raw values for histogram calibrators (small models only)."""
+    if obs is not None and obs.get("__values__", False):
+        obs.setdefault("__raw__", {})[site] = x
+
+
+# ---------------------------------------------------------------------------
+# quant-aware GEMMs
+# ---------------------------------------------------------------------------
+
+
+def _act_quantize(x: jax.Array, xs: Optional[jax.Array]) -> QuantizedTensor:
+    """Quantize activations: static per-tensor scale when calibrated
+    (paper-faithful), per-token dynamic otherwise (beyond-paper)."""
+    if xs is not None:
+        return QuantizedTensor(quantize(x, xs), xs, None)
+    return quantize_per_token(x)
+
+
+def dense(x: jax.Array, p: dict, obs: Optional[dict] = None,
+          site: str = "x") -> jax.Array:
+    """y = x @ w (+ b). Dispatches on the weight leaf type:
+
+    * ``jnp.ndarray`` — float GEMM in x.dtype
+    * ``QuantizedTensor`` — W8A8 int8 GEMM with int32 accumulation
+    """
+    w = p["w"]
+    observe(obs, site, x)
+    observe_values(obs, site, x)
+    if isinstance(w, QuantizedTensor):
+        xq = _act_quantize(x, p.get("xs"))
+        y = int8_matmul(xq, w, out_dtype=x.dtype)
+    else:
+        y = jax.lax.dot_general(
+            x, w.astype(x.dtype),
+            dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())))
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def quant_bmm(a: jax.Array, b: jax.Array,
+              a_scale: Optional[jax.Array], b_scale: Optional[jax.Array],
+              *, transpose_b: bool = False,
+              unsigned_a: bool = False) -> jax.Array:
+    """Quantized batched matmul for the MHA score/value paths.
+
+    ``a``/``b`` are float activations; both get quantized with the provided
+    static scales (or dynamically when None), multiplied in int8 with int32
+    accumulation, and dequantized. ``unsigned_a`` uses the asymmetric
+    unsigned-range scheme for ``a`` (beyond-paper softmax fix).
+    Contracts the last dim of ``a`` with the last (transpose_b) or
+    second-to-last dim of ``b``; leading dims are batch.
+    """
+    if unsigned_a:
+        aq = quantize_unsigned(a, None if a_scale is None else a_scale * UINT8_MAX)
+    else:
+        if a_scale is None:
+            aq = quantize_per_token(a)
+        else:
+            aq = QuantizedTensor(quantize(a, a_scale), a_scale, None)
+    if b_scale is None:
+        bq_vals = quantize(b, compute_scale_symmetric(jnp.max(jnp.abs(b))))
+        b_scale = compute_scale_symmetric(jnp.max(jnp.abs(b)))
+    else:
+        bq_vals = quantize(b, b_scale)
+    bdim = b.ndim - 1 if transpose_b else b.ndim - 2
+    nbatch = a.ndim - 2
+    dn = (((a.ndim - 1,), (bdim,)),
+          (tuple(range(nbatch)), tuple(range(nbatch))))
+    acc = jax.lax.dot_general(aq.values, bq_vals, dimension_numbers=dn,
+                              preferred_element_type=jnp.int32)
+    if unsigned_a:
+        # zero-point correction: sum over the contracted axis of b.
+        bsum = jnp.sum(bq_vals.astype(jnp.int32), axis=bdim)
+        if not transpose_b:
+            acc = acc - aq.zero_point * bsum[..., None, :]
+        else:
+            acc = acc - aq.zero_point * bsum[..., None, :]
+    return (acc.astype(jnp.float32) * (aq.scale * b_scale)).astype(a.dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, p: dict, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, p: dict, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def norm(x: jax.Array, p: dict, kind: str, eps: float = 1e-6) -> jax.Array:
+    return layer_norm(x, p, eps) if kind == "layernorm" else rms_norm(x, p, eps)
+
+
+def init_norm(kind: str, dim: int, dtype=jnp.float32) -> dict:
+    p = {"scale": jnp.ones((dim,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((dim,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies for the even half of the head dim (f32)."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               heads_axis: bool = True) -> jax.Array:
+    """x: (..., S, H, hd) when ``heads_axis`` else (..., S, hd);
+    positions: (S,) int32 (uniform across batch — prefill/train) or (B, S)
+    (per-row — continuous-batching decode). Split-half convention."""
+    head_dim = x.shape[-1]
+    inv = rope_frequencies(head_dim, theta)                  # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., :, None] * inv  # (..., S, hd/2)
+    if heads_axis:
+        ang = ang[..., :, None, :]                           # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnQuant:
+    """Static quant plan for one attention block's batched matmuls.
+
+    ``softmax_mode``: 'symmetric' reproduces the paper's pathology
+    (Appendix B), 'unsigned' is the beyond-paper fix, 'none' keeps the
+    softmax output float even when the rest of MHA is quantized.
+    """
+    enabled: bool = False
+    softmax_mode: str = "symmetric"
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskSpec:
+    """Attention-visibility rule, evaluated lazily per query block so the
+    full (Sq, Sk) mask never materializes at 32k+ sequence lengths."""
+    causal: bool = True
+    window: Optional[int] = None         # sliding-window width (None = full)
+    prefix_len: int = 0                  # bidirectional prefix (prefix-LM)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return (jnp.tanh(x.astype(jnp.float32) / cap) * cap).astype(x.dtype)
+
+
+def band_mask(q_pos: jax.Array, k_pos: jax.Array, spec: MaskSpec) -> jax.Array:
+    """Boolean (..., Sq, Sk) mask: True = attend. ``q_pos``/``k_pos`` are
+    int32 position ids of shape (Sq,)/(Sk,) or (B, Sq)/(B, Sk); invalid
+    cache slots carry position -1 (masked by the causal >= 0 check)."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    valid = kp >= 0
+    if spec.causal:
+        m = kp <= qp
+        if spec.prefix_len:
+            m = m | (kp < spec.prefix_len)
+    else:
+        m = jnp.broadcast_to(jnp.asarray(True), jnp.broadcast_shapes(
+            qp.shape, kp.shape))
+    if spec.window is not None:
+        m = m & (kp > qp - spec.window)
+    return m & valid
+
+
+def attention_core(q: jax.Array, k: jax.Array, v: jax.Array,
+                   q_pos: jax.Array, k_pos: jax.Array, spec: MaskSpec, *,
+                   scale: float,
+                   attn_softcap: Optional[float] = None,
+                   quant: AttnQuant = AttnQuant(),
+                   scales: Optional[dict] = None,
+                   obs: Optional[dict] = None,
+                   constrain=lambda t, _tag: t,
+                   chunk: Optional[int] = None) -> jax.Array:
+    """softmax(q k^T / sqrt(d)) v with GQA head-group broadcast and optional
+    int8 score/value matmuls (SAMP Fully-Quant MHA path).
+
+    q: (B, Sq, Hq, d)   k,v: (B, Sk, Hkv, d);  positions per MaskSpec.
+    ``chunk``: process queries in blocks of this many rows via lax.scan so
+    the (Sq, Sk) score matrix never materializes for the full sequence
+    (memory-efficient attention; the Pallas flash kernel is the TPU
+    hot-path, this is the composable XLA fallback).
+    """
+    B, Sq, Hq, D = q.shape
+    Dv = v.shape[-1]                                # may differ (MLA)
+    Hkv = k.shape[2]
+    groups = Hq // Hkv
+    qh = q.transpose(0, 2, 1, 3)                    # (B, Hq, Sq, d)
+    kh = k.transpose(0, 2, 1, 3)                    # (B, Hkv, Sk, d)
+    vh = v.transpose(0, 2, 1, 3)
+    if groups > 1 and quant.enabled:
+        # int8 batched matmuls need matching batch ranks; GQA encoders in
+        # the paper's scope are MHA, so the repeat here is small
+        kh = jnp.repeat(kh, groups, axis=1)
+        vh = jnp.repeat(vh, groups, axis=1)
+    grouped = groups > 1 and not quant.enabled
+    sc = scales or {}
+    if q_pos.ndim == 1:
+        q_pos = q_pos[None]                         # (1, Sq)
+    if k_pos.ndim == 1:
+        k_pos = k_pos[None]
+
+    def block(qb: jax.Array, qp: jax.Array) -> jax.Array:
+        # qb: (B, Hq, bq, d); qp: (B|1, bq)
+        mb = band_mask(qp, k_pos, spec)             # (B|1, bq, Sk)
+        qs = qb * scale
+        observe(obs, "q", qs)                       # bmm operands observed in
+        observe(obs, "k", kh)                       # float calibration too
+        if quant.enabled:
+            s = quant_bmm(qs, kh, sc.get("q"), sc.get("k"), transpose_b=True)
+        elif grouped:
+            # GQA without materializing repeated K/V: fold the query-head
+            # groups into an extra einsum axis (16x less K/V HBM traffic
+            # for MQA archs, and no SPMD resharding of repeated tensors)
+            bq = qs.shape[2]
+            qg = qs.reshape(B, Hkv, groups, bq, D)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kh)
+            s = s.reshape(B, Hq, bq, -1)
+        else:
+            s = jnp.einsum("bhqd,bhkd->bhqk", qs, kh)
+        s = softcap(s, attn_softcap)
+        s = jnp.where(mb[:, None], s.astype(jnp.float32), NEG_INF)
+        # pin the score layout: without this, GSPMD may pick a different
+        # (head-split) sharding for the softmax BACKWARD and pay full
+        # score-tensor reshards each direction
+        s = constrain(s, "attn_scores")
+        p = constrain(jax.nn.softmax(s, axis=-1).astype(qb.dtype),
+                      "attn_scores")
+        observe(obs, "p", p)
+        observe_values(obs, "p", p)
+        observe(obs, "v", vh)
+        if quant.enabled and quant.softmax_mode != "none":
+            p_scale = sc.get("p")
+            o = quant_bmm(p, vh, p_scale, sc.get("v"),
+                          unsigned_a=(quant.softmax_mode == "unsigned"))
+        elif grouped:
+            bq = p.shape[2]
+            pg = p.reshape(B, Hkv, groups, bq, -1)
+            o = jnp.einsum("bhgqk,bhkd->bhgqd", pg, vh)
+            o = o.reshape(B, Hq, bq, Dv)
+        else:
+            o = jnp.einsum("bhqk,bhkd->bhqd", p, vh)
+        return o
+
+    if chunk is not None and Sq % chunk != 0:
+        # round down to the largest divisor of Sq (prefix-LM lengths etc.)
+        c = chunk
+        while c > 1 and Sq % c:
+            c -= 1
+        chunk = c if c > 1 else None
+    if chunk is None or Sq <= chunk:
+        out = block(qh, q_pos)
+    else:
+        nb = Sq // chunk
+        qb = qh.reshape(B, Hq, nb, chunk, D).transpose(2, 0, 1, 3, 4)
+        pb = q_pos.reshape(q_pos.shape[0], nb, chunk).transpose(1, 0, 2)
+
+        def body(_, qm):
+            qi, pi = qm
+            return None, jax.checkpoint(block)(qi, pi)
+
+        _, ob = jax.lax.scan(body, None, (qb, pb))
+        out = ob.transpose(1, 2, 0, 3, 4).reshape(B, Hq, Sq, Dv)
+    return out.transpose(0, 2, 1, 3)                # (B, Sq, Hq, d)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (projections + core); also MQA/full/sliding/softcap
+# ---------------------------------------------------------------------------
+
+
+def init_linear(key, d_in: int, d_out: int, bias: bool = False,
+                dtype=jnp.float32, init_scale: float = 1.0) -> dict:
+    std = init_scale / math.sqrt(d_in)
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * std}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def init_attention(key, cfg, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(ks[0], cfg.d_model, cfg.q_dim, cfg.qkv_bias, dtype),
+        "wk": init_linear(ks[1], cfg.d_model, cfg.kv_dim, cfg.qkv_bias, dtype),
+        "wv": init_linear(ks[2], cfg.d_model, cfg.kv_dim, cfg.qkv_bias, dtype),
+        "wo": init_linear(ks[3], cfg.q_dim, cfg.d_model, False, dtype),
+    }
+
+
+def _cache_write(kv_cache: dict, new: dict, positions: jax.Array,
+                 active: Optional[jax.Array]):
+    """Write new K/V(-like) tensors into a ring-buffer cache.
+
+    Two modes:
+    * uniform positions (``positions`` 1-D, prefill / synchronized decode):
+      contiguous dynamic_update_slice at slot pos%W for every row;
+    * per-row positions (``positions`` (B, 1), continuous-batching decode):
+      scatter one token per row at that row's own slot; rows with
+      ``active=False`` rewrite their old value (a no-op), so idle slots in a
+      serving batch are never corrupted.
+
+    ``new`` maps cache key -> (B, S, ...) tensor. Returns the updated cache
+    (with "k_pos"/"pos" bookkeeping).
+    """
+    W = kv_cache["k_pos"].shape[-1]
+    B = kv_cache["k_pos"].shape[0]
+    out = dict(kv_cache)
+    if positions.ndim == 1:                          # uniform path
+        S = positions.shape[0]
+        write_S = min(S, W)      # ring smaller than prefill: keep the tail
+        slot = kv_cache["pos"][0] % W
+        if write_S < S:
+            slot = slot * 0      # tail fills the whole ring from slot 0
+        for key, val in new.items():
+            val = val[:, S - write_S:]
+            out[key] = jax.lax.dynamic_update_slice(
+                kv_cache[key], val.astype(kv_cache[key].dtype),
+                (0, slot) + (0,) * (val.ndim - 2))
+        kp = jnp.broadcast_to(
+            positions.astype(jnp.int32)[None, S - write_S:], (B, write_S))
+        out["k_pos"] = jax.lax.dynamic_update_slice(
+            kv_cache["k_pos"], kp, (0, slot))
+        out["pos"] = kv_cache["pos"] + S
+    else:                                            # per-row path (S == 1)
+        rows = jnp.arange(B)
+        pos_vec = positions[:, 0]
+        slot = pos_vec % W
+        act = active if active is not None else jnp.ones((B,), bool)
+        for key, val in new.items():
+            old_row = kv_cache[key][rows, slot]      # (B, ...)
+            val_row = val[:, 0].astype(kv_cache[key].dtype)
+            val_row = jnp.where(
+                act.reshape((B,) + (1,) * (val_row.ndim - 1)),
+                val_row, old_row)
+            out[key] = kv_cache[key].at[rows, slot].set(val_row)
+        old_kp = kv_cache["k_pos"][rows, slot]
+        out["k_pos"] = kv_cache["k_pos"].at[rows, slot].set(
+            jnp.where(act, pos_vec.astype(jnp.int32), old_kp))
+        out["pos"] = kv_cache["pos"] + act.astype(kv_cache["pos"].dtype)
+    return out
+
+
+def select_state(new: dict, old: dict, active: Optional[jax.Array]):
+    """Recurrent-state update gate: rows with active=False keep their old
+    state (continuous batching over SSM/hybrid archs)."""
+    if active is None:
+        return new
+    def sel(n, o):
+        a = active.reshape((active.shape[0],) + (1,) * (n.ndim - 1))
+        return jnp.where(a, n, o.astype(n.dtype))
+    return jax.tree_util.tree_map(sel, new, old)
+
+
+def attention_block(x: jax.Array, p: dict, cfg, *, positions: jax.Array,
+                    spec: MaskSpec,
+                    quant: AttnQuant = AttnQuant(),
+                    obs: Optional[dict] = None,
+                    kv_cache: Optional[dict] = None,
+                    active: Optional[jax.Array] = None,
+                    constrain=lambda t, _tag: t,
+                    chunk: Optional[int] = None):
+    """Full GQA attention block. Returns (out, new_kv_cache|None).
+
+    ``kv_cache`` (decode): {"k": (B, W, Hkv, d), "v": ..., "k_pos": (B, W),
+    "pos": (B,)} — W is the cache capacity (a sliding-window ring buffer
+    when ``spec.window`` bounds it, else max_seq). The new token's k/v land
+    at slot ``pos % W``; ``k_pos`` carries each slot's absolute position so
+    :func:`band_mask` handles validity and window eviction. ``positions``
+    may be per-row (B, 1) for continuous-batching decode.
+    """
+    B, S, _ = x.shape
+    observe(obs, "attn_in", x)
+    observe_values(obs, "attn_in", x)
+    # explicit head sharding after the (q_dim -> H, hd) reshape: without it
+    # GSPMD may split the head_dim (contracting in qk^T) and all-reduce the
+    # score tensor — measured at +1.8 TB/step on deepseek-coder train_4k
+    q = constrain(dense(x, p["wq"], obs=None)
+                  .reshape(B, S, cfg.num_heads, cfg.head_dim), "attn_heads")
+    k = constrain(dense(x, p["wk"], obs=None)
+                  .reshape(B, S, cfg.num_kv_heads, cfg.head_dim),
+                  "attn_heads")
+    v = constrain(dense(x, p["wv"], obs=None)
+                  .reshape(B, S, cfg.num_kv_heads, cfg.head_dim),
+                  "attn_heads")
+    if cfg.position == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    new_cache = None
+    k_pos = positions
+    if kv_cache is not None:
+        new_cache = _cache_write(kv_cache, {"k": k, "v": v}, positions,
+                                 active)
+        if S == 1:
+            # decode: attend over the (ring) cache
+            k = new_cache["k"].astype(x.dtype)
+            v = new_cache["v"].astype(x.dtype)
+            k_pos = new_cache["k_pos"]
+        # prefill (S > 1): attend over in-sequence K/V (the cache may be a
+        # ring buffer narrower than S — it only feeds later decode steps)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    sc = {s: p[f"{s}_scale"] for s in ("q", "k", "p", "v")
+          if f"{s}_scale" in p} or None
+    o = attention_core(q, k, v, positions, k_pos, spec, scale=scale,
+                       attn_softcap=cfg.attn_softcap, quant=quant,
+                       scales=sc, obs=obs, constrain=constrain, chunk=chunk)
+    o = o.reshape(B, S, cfg.q_dim)
+    observe(obs, "attn_out", o)
+    out = dense(o, p["wo"], obs=None)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (deepseek-v2), with absorbed decode
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg, dtype=jnp.float32) -> dict:
+    m = cfg.mla
+    qk_dim = m.qk_nope_dim + m.qk_rope_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wkv_a": init_linear(ks[2], cfg.d_model, m.kv_lora_rank + m.qk_rope_dim,
+                             False, dtype),
+        "kv_norm": init_norm("rmsnorm", m.kv_lora_rank, dtype),
+        "wkv_b": init_linear(ks[3], m.kv_lora_rank,
+                             cfg.num_heads * (m.qk_nope_dim + m.v_head_dim),
+                             False, dtype),
+        "wo": init_linear(ks[4], cfg.num_heads * m.v_head_dim, cfg.d_model,
+                          False, dtype),
+    }
+    if m.q_lora_rank:
+        p["wq_a"] = init_linear(ks[0], cfg.d_model, m.q_lora_rank, False, dtype)
+        p["q_norm"] = init_norm("rmsnorm", m.q_lora_rank, dtype)
+        p["wq_b"] = init_linear(ks[1], m.q_lora_rank, cfg.num_heads * qk_dim,
+                                False, dtype)
+    else:
+        p["wq"] = init_linear(ks[0], cfg.d_model, cfg.num_heads * qk_dim,
+                              False, dtype)
+    return p
+
+
+def mla_block(x: jax.Array, p: dict, cfg, *, positions: jax.Array,
+              spec: MaskSpec, quant: AttnQuant = AttnQuant(),
+              obs: Optional[dict] = None,
+              kv_cache: Optional[dict] = None,
+              active: Optional[jax.Array] = None,
+              chunk: Optional[int] = None):
+    """Deepseek-v2 MLA. Prefill materializes per-head K/V from the latent;
+    decode uses the *absorbed* formulation: attention runs directly in the
+    (kv_lora + rope) latent space against a 576-wide cache, and ``wkv_b`` is
+    folded into the query/output projections — the cache stays
+    ``kv_lora_rank + qk_rope_dim`` per token (the paper-era MLA memory win).
+    Returns (out, new_cache|None); cache = {"ckv": (B,S,r), "krope": (B,S,rd),
+    "pos": ()}.
+    """
+    m = cfg.mla
+    B, S, _ = x.shape
+    H, nope, rd, vd = cfg.num_heads, m.qk_nope_dim, m.qk_rope_dim, m.v_head_dim
+    observe(obs, "attn_in", x)
+    # --- queries -----------------------------------------------------------
+    if m.q_lora_rank:
+        q_lat = dense(x, p["wq_a"])
+        q_lat = rms_norm(q_lat, p["q_norm"])
+        observe(obs, "q_lat", q_lat)
+        q = dense(q_lat, p["wq_b"])
+    else:
+        q = dense(x, p["wq"])
+    q = q.reshape(B, S, H, nope + rd)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta, heads_axis=True)
+    # --- latent kv ----------------------------------------------------------
+    kv = dense(x, p["wkv_a"])
+    ckv, k_rope = kv[..., :m.kv_lora_rank], kv[..., m.kv_lora_rank:]
+    ckv = rms_norm(ckv, p["kv_norm"])
+    observe(obs, "c_kv", ckv)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta,
+                        heads_axis=False)                    # (B,S,rd) shared
+    scale = 1.0 / math.sqrt(nope + rd)
+    wkv_b = p["wkv_b"]["w"]
+    if isinstance(wkv_b, QuantizedTensor):
+        wkv_b_f = wkv_b.dequantize(x.dtype)
+    else:
+        wkv_b_f = wkv_b.astype(x.dtype)
+    wk = wkv_b_f.reshape(m.kv_lora_rank, H, nope + vd)[..., :nope]  # (r,H,nope)
+    wv = wkv_b_f.reshape(m.kv_lora_rank, H, nope + vd)[..., nope:]  # (r,H,vd)
+
+    new_cache = None
+    if kv_cache is not None:
+        new_cache = _cache_write(kv_cache, {"ckv": ckv, "krope": k_rope},
+                                 positions, active)
+    if new_cache is not None and S == 1:
+        ckv_all = new_cache["ckv"].astype(x.dtype)
+        krope_all = new_cache["krope"].astype(x.dtype)
+        q_pos = positions if positions.ndim == 2 else positions[None]
+        mask = band_mask(q_pos, new_cache["k_pos"], spec)       # (B|1, S, T)
+        # Absorbed decode: q_nope' = q_nope @ wk  → latent space (r).
+        q_abs = jnp.einsum("bshn,rhn->bshr", q_nope, wk)
+        s = (jnp.einsum("bshr,btr->bhst", q_abs, ckv_all)
+             + jnp.einsum("bshr,btr->bhst", q_rope, krope_all)) * scale
+        s = jnp.where(mask[:, None], s.astype(jnp.float32), NEG_INF)
+        prob = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        o_lat = jnp.einsum("bhst,btr->bshr", prob, ckv_all)     # (B,S,H,r)
+        o = jnp.einsum("bshr,rhv->bshv", o_lat, wv)             # (B,S,H,vd)
+    else:
+        # Prefill: expand per-head keys/values, reuse the shared core
+        # (attends over in-sequence K/V; the latent cache was written above).
+        k_nope = jnp.einsum("btr,rhn->bthn", ckv, wk)
+        v = jnp.einsum("btr,rhv->bthv", ckv, wv)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (B, S, H, rd))], axis=-1)
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+        sc = {s_: p[f"{s_}_scale"] for s_ in ("q", "k", "p", "v")
+              if f"{s_}_scale" in p} or None
+        o = attention_core(qf, k, v, positions, positions, spec, scale=scale,
+                           quant=quant, scales=sc, obs=obs, chunk=chunk)
+    o = o.reshape(B, S, H * vd)
+    observe(obs, "attn_out", o)
+    out = dense(o, p["wo"])
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# FFN: GLU (llama/gemma), GELU (bert/hubert)
+# ---------------------------------------------------------------------------
+
+
+def init_ffn(key, cfg, d_ff: Optional[int] = None, dtype=jnp.float32) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.ffn_kind == "glu":
+        return {"wg": init_linear(ks[0], cfg.d_model, d_ff, False, dtype),
+                "wu": init_linear(ks[1], cfg.d_model, d_ff, False, dtype),
+                "wd": init_linear(ks[2], d_ff, cfg.d_model, False, dtype)}
+    return {"wi": init_linear(ks[0], cfg.d_model, d_ff, True, dtype),
+            "wo": init_linear(ks[1], d_ff, cfg.d_model, True, dtype)}
+
+
+def ffn_block(x: jax.Array, p: dict, cfg, obs: Optional[dict] = None,
+              prefix: str = "") -> jax.Array:
+    observe(obs, prefix + "ffn_in", x)
+    observe_values(obs, prefix + "ffn_in", x)
+    if cfg.ffn_kind == "glu":
+        h = jax.nn.silu(dense(x, p["wg"])) * dense(x, p["wu"])
+        observe(obs, prefix + "ffn_hidden", h)
+        return dense(h, p["wd"])
+    h = jax.nn.gelu(dense(x, p["wi"]), approximate=True)
+    observe(obs, prefix + "ffn_hidden", h)
+    return dense(h, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# MoE: sort-based capacity-bounded dispatch (TPU-native; no (T,E,C) one-hot)
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg, dtype=jnp.float32) -> dict:
+    mo = cfg.moe
+    ks = jax.random.split(key, 5)
+    E, D, F = mo.num_experts, cfg.d_model, mo.d_ff_expert
+    std = 1.0 / math.sqrt(D)
+    p = {
+        "router": {"w": jax.random.normal(ks[0], (D, E), jnp.float32) * std},
+        "wg": {"w": jax.random.normal(ks[1], (E, D, F), dtype) * std},
+        "wu": {"w": jax.random.normal(ks[2], (E, D, F), dtype) * std},
+        "wd": {"w": jax.random.normal(ks[3], (E, F, D), dtype)
+               / math.sqrt(F)},
+    }
+    if mo.num_shared:
+        p["shared"] = init_ffn(ks[4], cfg, d_ff=mo.d_ff_expert * mo.num_shared,
+                               dtype=dtype)
+    return p
+
+
+def _expert_gemm(xe: jax.Array, w, xs: Optional[jax.Array],
+                 obs: Optional[dict], site: str) -> jax.Array:
+    """Batched per-expert GEMM: xe (..., E, C, D) @ w (E, D, F) ->
+    (..., E, C, F); the optional leading axis is the token-shard group.
+    Quantized experts hold per-expert-per-channel weight scales (E, 1, F)."""
+    eq = ("gecd,edf->gecf" if xe.ndim == 4 else "ecd,edf->ecf")
+    observe(obs, site, xe)
+    if isinstance(w, QuantizedTensor):
+        if xs is not None:
+            xq = QuantizedTensor(quantize(xe, xs), xs, None)
+        else:
+            xq = quantize_per_token(xe)
+        acc = jnp.einsum(eq, xq.values, w.values,
+                         preferred_element_type=jnp.int32)
+        return (acc.astype(jnp.float32) * xq.scale * w.scale).astype(xe.dtype)
+    return jnp.einsum(eq, xe, w.astype(xe.dtype))
+
+
+def _dispatch_one(xt, logits, E, K, C, obs_unused=None):
+    """Sort-based capacity dispatch for ONE token group.
+    xt: (Tl, D); logits: (Tl, E). Returns (xe (E, C, D), st, sg, keep, slot)
+    for the combine step."""
+    Tl = xt.shape[0]
+    gates, idx = jax.lax.top_k(logits, K)                        # (Tl, K)
+    gates = jax.nn.softmax(gates, axis=-1)
+    flat_expert = idx.reshape(-1)                                # (Tl*K,)
+    flat_token = jnp.repeat(jnp.arange(Tl), K)
+    flat_gate = gates.reshape(-1)
+    order = jnp.argsort(flat_expert)                             # stable
+    se, st, sg = flat_expert[order], flat_token[order], flat_gate[order]
+    ones = jnp.ones_like(se)
+    pos_in_expert = jax.lax.associative_scan(jnp.add, ones) - 1
+    seg_start = jnp.searchsorted(se, jnp.arange(E))              # (E,)
+    pos_in_expert = pos_in_expert - seg_start[se]
+    keep = pos_in_expert < C
+    slot = se * C + jnp.where(keep, pos_in_expert, 0)            # (Tl*K,)
+    src = jnp.where(keep[:, None], xt[st], 0)
+    xe = jnp.zeros((E * C, xt.shape[1]), xt.dtype).at[slot].add(src)
+    return xe.reshape(E, C, xt.shape[1]), st, sg, keep, slot
+
+
+def _combine_one(ye, st, sg, keep, slot, Tl, D, dtype):
+    contrib = jnp.where(keep[:, None],
+                        ye.reshape(-1, D)[slot] * sg[:, None].astype(dtype),
+                        0)
+    return jnp.zeros((Tl, D), dtype).at[st].add(contrib)
+
+
+def moe_block(x: jax.Array, p: dict, cfg, obs: Optional[dict] = None,
+              constrain: Callable[[jax.Array, str], jax.Array] = lambda a, _: a
+              ) -> jax.Array:
+    """Top-k MoE with capacity-bounded sort-based dispatch.
+
+    Router (always float — it is tiny and precision-critical) picks top-k
+    experts per token; tokens are routed into per-expert capacity buffers via
+    an argsort over expert ids (the TPU-native alternative to the (T, E, C)
+    one-hot einsum, which does not fit memory at 160 experts), batched
+    expert GEMMs run over (E, C, D), and results scatter-add back with the
+    gate weights. Overflowing tokens are dropped (capacity factor bounds the
+    buffer — standard Switch/MaxText semantics).
+
+    **Distribution**: sort/gather/scatter with data-dependent indices cannot
+    cross a sharded axis without GSPMD replicating the (T*K, D) routed
+    tensor (measured: 5 all-reduces of 128 GB per MoE layer). So the
+    dispatch runs per *token group* — a leading axis aligned with the data
+    shards (``constrain`` exposes ``dsize``) — vmapped so every index op is
+    group-local; the cross-shard movement then happens only in the dense
+    expert GEMM (weight all-gather or token all-to-all, GSPMD's choice),
+    which is the production EP dataflow. Capacity becomes per-(shard,
+    expert), matching real all-to-all MoE systems.
+
+    ``constrain`` lets the distribution layer pin intermediate shardings
+    without this module importing mesh machinery.
+    """
+    mo = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    E, K = mo.num_experts, mo.top_k
+    groups = getattr(constrain, "dsize", 1)
+    if T % max(groups, 1) or groups <= 1:
+        groups = 1
+    Tl = T // groups
+    C = max(1, int(math.ceil(mo.capacity_factor * Tl * K / E)))
+    observe(obs, "ffn_in", x)
+    xg = constrain(x.reshape(groups, Tl, D), "moe_tokens")
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        p["router"]["w"])                        # f32 router
+
+    xe, st, sg, keep, slot = jax.vmap(
+        lambda xt, lg: _dispatch_one(xt, lg, E, K, C))(xg, logits)
+    xe = constrain(xe, "moe_dispatch")                  # (G, E, C, D)
+
+    # --- expert GEMMs (GLU) --------------------------------------------------
+    h = (jax.nn.silu(_expert_gemm(xe, p["wg"]["w"], p["wg"].get("xs"),
+                                  obs, "ffn_in_e"))
+         * _expert_gemm(xe, p["wu"]["w"], p["wu"].get("xs"), None, "ffn_in_e"))
+    h = constrain(h, "moe_hidden")
+    observe(obs, "ffn_hidden", h)
+    ye = _expert_gemm(h, p["wd"]["w"], p["wd"].get("xs"), None, "ffn_hidden")
+    ye = constrain(ye, "moe_dispatch")                  # (G, E, C, D)
+
+    # --- combine (group-local scatter) ----------------------------------------
+    y = jax.vmap(lambda yg, sti, sgi, ki, sli: _combine_one(
+        yg, sti, sgi, ki, sli, Tl, D, x.dtype))(ye, st, sg, keep, slot)
+    y = y.reshape(T, D)
+    if "shared" in p:
+        y = y + ffn_block(x, p["shared"], cfg, obs=obs,
+                          prefix="shared_").reshape(T, D)
+    return y.reshape(B, S, D)
+
+
+# ---------------------------------------------------------------------------
+# causal temporal conv (RG-LRU / xLSTM blocks)
+# ---------------------------------------------------------------------------
+
+
+def init_conv1d(key, width: int, channels: int, dtype=jnp.float32) -> dict:
+    return {"w": jax.random.normal(key, (width, channels), dtype)
+            / math.sqrt(width),
+            "b": jnp.zeros((channels,), dtype)}
+
+
+def causal_conv1d(x: jax.Array, p: dict,
+                  state: Optional[jax.Array] = None):
+    """Depthwise causal conv over time. x: (B, S, C); state: (B, W-1, C)
+    carries the left context for decode. Returns (y, new_state)."""
+    W = p["w"].shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                   # (B, S+W-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * p["w"][i].astype(x.dtype)
+            for i in range(W))
+    y = y + p["b"].astype(x.dtype)
+    new_state = xp[:, -(W - 1):, :] if W > 1 else pad
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+
+def init_embeddings(key, cfg, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 5)
+    p = {"tok": jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model),
+                                  dtype) * 0.02}
+    if cfg.position == "learned":
+        p["pos"] = jax.random.normal(ks[1], (cfg.max_position, cfg.d_model),
+                                     dtype) * 0.02
+    if cfg.num_segments:
+        p["seg"] = jax.random.normal(ks[2], (cfg.num_segments, cfg.d_model),
+                                     dtype) * 0.02
+    if cfg.frontend is not None:
+        p["frontend_proj"] = init_linear(ks[3], cfg.frontend_dim, cfg.d_model,
+                                         True, dtype)
+    if cfg.norm_kind == "layernorm" and cfg.family == "bert":
+        p["emb_norm"] = init_norm("layernorm", cfg.d_model, dtype)
+    return p
+
+
+def embed(tokens: jax.Array, p: dict, cfg, *, positions: jax.Array,
+          segments: Optional[jax.Array] = None,
+          compute_dtype=jnp.bfloat16) -> jax.Array:
+    """Fused token(+segment)(+position) embedding — the paper's Tensor-fusion
+    target; the Pallas `fused_embed` kernel is the TPU hot-path."""
+    x = jnp.take(p["tok"], tokens, axis=0).astype(compute_dtype)
+    if "pos" in p:
+        x = x + jnp.take(p["pos"], positions, axis=0).astype(compute_dtype)
+    if "seg" in p and segments is not None:
+        x = x + jnp.take(p["seg"], segments, axis=0).astype(compute_dtype)
+    if cfg.emb_scale_by_sqrt_dim:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), compute_dtype)
+    if "emb_norm" in p:
+        x = layer_norm(x, p["emb_norm"])
+    return x

@@ -1,0 +1,106 @@
+"""RG-LRU temporal-mixing block (Griffin / RecurrentGemma).
+
+The recurrence
+
+    r_t = sigmoid(x_t W_a)          (recurrence gate)
+    i_t = sigmoid(x_t W_i)          (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)            (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+is a diagonal linear RNN, so the full sequence is computed with one
+``jax.lax.associative_scan`` (parallel prefix) instead of a length-S loop —
+the TPU-native mapping of the paper's recurrence (log-depth, MXU-free).
+
+SAMP mapping (DESIGN.md §Arch-applicability): the block's GEMMs (input /
+gate / output projections) form the FFN quant group; the recurrence itself
+runs in f32 and is never quantized — ``a_t`` lives in (0, 1), the same
+range pathology the paper documents for softmax outputs (Appendix B).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+_RGLRU_C = 8.0
+
+
+def init_rglru(key, cfg, dtype=jnp.float32) -> dict:
+    R = cfg.rnn_width or cfg.d_model
+    ks = jax.random.split(key, 7)
+    return {
+        "wx": L.init_linear(ks[0], cfg.d_model, R, False, dtype),
+        "wg": L.init_linear(ks[1], cfg.d_model, R, False, dtype),
+        "conv": L.init_conv1d(ks[2], cfg.conv_width, R, dtype),
+        "wa": L.init_linear(ks[3], R, R, True, dtype),
+        "wi": L.init_linear(ks[4], R, R, True, dtype),
+        # Lambda init so that a = sigmoid(lam)^c spreads over (0.9, 0.999)
+        "lam": jnp.asarray(
+            jax.random.uniform(ks[5], (R,), jnp.float32, 3.0, 8.0)),
+        "wo": L.init_linear(ks[6], R, cfg.d_model, False, dtype),
+    }
+
+
+def _rglru_scan(a: jax.Array, b: jax.Array,
+                h0: Optional[jax.Array]) -> jax.Array:
+    """h_t = a_t h_{t-1} + b_t over axis 1 (time), f32. a,b: (B,S,R)."""
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    if h0 is not None:
+        # Fold the carried state in as a virtual step 0 contribution.
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_mix(x: jax.Array, p: dict, cfg, *, obs: Optional[dict] = None,
+              state: Optional[dict] = None,
+              active: Optional[jax.Array] = None):
+    """The temporal-mixing half of a recurrent block (norm/residual/FFN are
+    handled by the layer driver). x: (B, S, D) post-norm.
+
+    ``state`` (decode): {"h": (B, R) f32, "conv": (B, W-1, R)}.
+    Returns (out (B,S,D), new_state|None).
+    """
+    L.observe(obs, "rec_in", x)
+    xr = L.dense(x, p["wx"], obs=None)                       # (B,S,R)
+    gate = jax.nn.gelu(L.dense(x, p["wg"], obs=None), approximate=True)
+    conv_state = state["conv"] if state is not None else None
+    xc, new_conv = L.causal_conv1d(xr, p["conv"], conv_state)
+    L.observe(obs, "rec_gate_in", xc)
+    r = jax.nn.sigmoid(L.dense(xc, p["wa"], obs=None).astype(jnp.float32))
+    i = jax.nn.sigmoid(L.dense(xc, p["wi"], obs=None).astype(jnp.float32))
+    log_a = -_RGLRU_C * jax.nn.softplus(p["lam"]) * r         # (B,S,R) f32
+    a = jnp.exp(log_a)
+    gated_x = i * xc.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-6)) * gated_x
+    h0 = state["h"] if state is not None else None
+    h = _rglru_scan(a, b, h0)                                 # (B,S,R) f32
+    new_state = None
+    if state is not None:
+        new_state = L.select_state({"h": h[:, -1, :], "conv": new_conv},
+                                   state, active)
+    y = (h.astype(x.dtype) * gate)
+    L.observe(obs, "rec_out", y)
+    out = L.dense(y, p["wo"], obs=None)
+    return out, new_state
+
+
+def init_state(cfg, batch: int, dtype=jnp.float32) -> dict:
+    R = cfg.rnn_width or cfg.d_model
+    return {"h": jnp.zeros((batch, R), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, R), dtype)}
+
+
+def state_specs(cfg, batch: int, dtype=jnp.float32) -> dict:
+    R = cfg.rnn_width or cfg.d_model
+    return {"h": jax.ShapeDtypeStruct((batch, R), jnp.float32),
+            "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, R), dtype)}

@@ -1,0 +1,271 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, strictly sequential scan).
+
+TPU adaptation (DESIGN.md §2): the mLSTM recurrence admits a chunkwise
+formulation — quadratic attention-like compute inside fixed-size chunks plus
+an O(S/chunk) recurrent state hand-off — which keeps the MXU busy with
+(chunk x chunk) and (chunk x d) matmuls instead of a length-S scalar loop.
+The sLSTM has genuine per-step nonlinearity, so its gate GEMMs are hoisted
+out of the scan (computed for all timesteps in parallel) and only the
+elementwise recurrence + tiny per-head recurrent matvecs run inside
+``lax.scan``.
+
+All cell internals run in f32 with max-stabilized exponential gating; the
+stored state already absorbs its stabilizer m (see ``_mlstm_chunk``). Cells
+are never quantized (the gate outputs live in (0,1] — the paper's
+Appendix-B range pathology); SAMP quantizes the block's projection GEMMs,
+which form the FFN group (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+MLSTM_CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg, dtype=jnp.float32) -> dict:
+    D = cfg.d_model
+    Dp = int(cfg.proj_factor * D)
+    H = cfg.num_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "up": L.init_linear(ks[0], D, 2 * Dp, False, dtype),
+        "conv": L.init_conv1d(ks[1], cfg.conv_width, Dp, dtype),
+        "wq": L.init_linear(ks[2], Dp, Dp, False, dtype),
+        "wk": L.init_linear(ks[3], Dp, Dp, False, dtype),
+        "wv": L.init_linear(ks[4], Dp, Dp, False, dtype),
+        "wif": L.init_linear(ks[5], Dp, 2 * H, True, dtype),
+        "out_norm": L.init_norm("rmsnorm", Dp, dtype),
+        "down": L.init_linear(ks[6], Dp, D, False, dtype),
+    }
+
+
+def _mlstm_chunk(carry, inp):
+    """One chunk step. State tensors already absorb their stabilizer m:
+    C_hat = C * exp(-m), n_hat = n * exp(-m).
+
+    carry: (C (B,H,dk,dv), n (B,H,dk), m (B,H))
+    inp:   q,k,v (B,Lc,H,dh) f32; log_i, log_f (B,Lc,H) f32
+    """
+    C_p, n_p, m_p = carry
+    q, k, v, log_i, log_f = inp
+    B, Lc, H, dk = q.shape
+    b = jnp.cumsum(log_f, axis=1)                       # (B,Lc,H) inclusive
+    u = jax.lax.cummax(log_i - b, axis=1)               # running max(li_s - b_s)
+    m_t = b + jnp.maximum(m_p[:, None, :], u)           # (B,Lc,H)
+    bL = b[:, -1, :]
+    m_new = bL + jnp.maximum(m_p, u[:, -1, :])
+
+    # inter-chunk: decayed read of the carried state
+    w_inter = jnp.exp(b + m_p[:, None, :] - m_t)        # (B,Lc,H)
+    h_inter = jnp.einsum("blhk,bhkv->blhv", q, C_p) * w_inter[..., None]
+    d_inter = jnp.einsum("blhk,bhk->blh", q, n_p) * w_inter
+
+    # intra-chunk: masked decay matrix  D_ts = exp(b_t - b_s + li_s - m_t)
+    logD = (b[:, :, None, :] - b[:, None, :, :]
+            + log_i[:, None, :, :] - m_t[:, :, None, :])   # (B,Lt,Ls,H)
+    tri = jnp.tril(jnp.ones((Lc, Lc), bool))
+    logD = jnp.where(tri[None, :, :, None], logD, -jnp.inf)
+    D = jnp.exp(logD)
+    s = jnp.einsum("blhk,bshk->blsh", q, k) * D         # (B,Lt,Ls,H)
+    h_intra = jnp.einsum("blsh,bshv->blhv", s, v)
+    d_intra = jnp.einsum("blsh->blh", s)
+
+    denom = jnp.maximum(jnp.abs(d_inter + d_intra), jnp.exp(-m_t))
+    h = (h_inter + h_intra) / denom[..., None]          # (B,Lc,H,dv)
+
+    # state hand-off
+    w_key = jnp.exp(bL[:, None, :] - b + log_i - m_new[:, None, :])
+    C_new = (jnp.exp(bL + m_p - m_new)[..., None, None] * C_p
+             + jnp.einsum("bshk,bshv,bsh->bhkv", k, v, w_key))
+    n_new = (jnp.exp(bL + m_p - m_new)[..., None] * n_p
+             + jnp.einsum("bshk,bsh->bhk", k, w_key))
+    return (C_new, n_new, m_new), h
+
+
+def _mlstm_step(state, q, k, v, log_i, log_f):
+    """Single-token recurrent update (decode). q,k,v: (B,H,dh) f32;
+    log_i/log_f: (B,H). state = (C,n,m)."""
+    C_p, n_p, m_p = state
+    m_t = jnp.maximum(log_f + m_p, log_i)
+    f_ = jnp.exp(log_f + m_p - m_t)
+    i_ = jnp.exp(log_i - m_t)
+    C = f_[..., None, None] * C_p + i_[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n = f_[..., None] * n_p + i_[..., None] * k
+    d = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n)), jnp.exp(-m_t))
+    h = jnp.einsum("bhk,bhkv->bhv", q, C) / d[..., None]
+    return (C, n, m_t), h
+
+
+def mlstm_block(x: jax.Array, p: dict, cfg, *, obs: Optional[dict] = None,
+                state: Optional[dict] = None,
+                active: Optional[jax.Array] = None):
+    """Full mLSTM block (post-norm residual handled by the layer driver).
+    x: (B, S, D) post-norm. Returns (out, new_state|None)."""
+    B, S, D = x.shape
+    Dp = int(cfg.proj_factor * D)
+    H = cfg.num_heads
+    dh = Dp // H
+    L.observe(obs, "blk_in", x)
+    up = L.dense(x, p["up"], obs=None)
+    xm, z = up[..., :Dp], up[..., Dp:]
+    L.observe(obs, "xm", xm)
+    conv_state = state["conv"] if state is not None else None
+    xc, new_conv = L.causal_conv1d(xm, p["conv"], conv_state)
+    xc = jax.nn.silu(xc)
+    L.observe(obs, "qkv_in", xc)
+    q = L.dense(xc, p["wq"], obs=None).reshape(B, S, H, dh).astype(jnp.float32)
+    k = (L.dense(xc, p["wk"], obs=None).reshape(B, S, H, dh)
+         .astype(jnp.float32) / math.sqrt(dh))
+    v = L.dense(xm, p["wv"], obs=None).reshape(B, S, H, dh).astype(jnp.float32)
+    gates = L.dense(xc, p["wif"], obs=None).astype(jnp.float32)  # (B,S,2H)
+    log_i = gates[..., :H]
+    log_f = jax.nn.log_sigmoid(gates[..., H:])
+
+    if state is not None and S == 1:
+        (C, n, m), h = _mlstm_step(
+            (state["C"], state["n"], state["m"]),
+            q[:, 0], k[:, 0], v[:, 0], log_i[:, 0], log_f[:, 0])
+        h = h[:, None]                                   # (B,1,H,dh)
+        new_state = L.select_state(
+            {"C": C, "n": n, "m": m, "conv": new_conv}, state, active)
+    else:
+        Lc = min(MLSTM_CHUNK, S)
+        assert S % Lc == 0, f"S={S} not divisible by chunk={Lc}"
+        nb = S // Lc
+
+        def to_chunks(t):
+            return t.reshape(B, nb, Lc, *t.shape[2:]).transpose(
+                1, 0, *range(2, t.ndim + 1))
+
+        xs = tuple(to_chunks(t) for t in (q, k, v, log_i, log_f))
+        if state is not None:
+            carry0 = (state["C"], state["n"], state["m"])
+        else:
+            carry0 = (jnp.zeros((B, H, dh, dh), jnp.float32),
+                      jnp.zeros((B, H, dh), jnp.float32),
+                      jnp.full((B, H), 0.0, jnp.float32))
+        (C, n, m), hs = jax.lax.scan(_mlstm_chunk, carry0, xs)
+        h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
+        new_state = (None if state is None else L.select_state(
+            {"C": C, "n": n, "m": m, "conv": new_conv}, state, active))
+    h = h.astype(x.dtype).reshape(B, S, Dp)
+    h = L.rms_norm(h, p["out_norm"])
+    y = h * jax.nn.silu(z)
+    L.observe(obs, "blk_hidden", y)
+    out = L.dense(y, p["down"], obs=None)
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg, dtype=jnp.float32) -> dict:
+    D = cfg.d_model
+    H = cfg.num_heads
+    dh = D // H
+    ks = jax.random.split(key, 8)
+    std = 1.0 / math.sqrt(dh)
+    return {
+        "conv": L.init_conv1d(ks[0], cfg.conv_width, D, dtype),
+        "wz": L.init_linear(ks[1], D, D, True, dtype),
+        "wi": L.init_linear(ks[2], D, D, True, dtype),
+        "wf": L.init_linear(ks[3], D, D, True, dtype),
+        "wo": L.init_linear(ks[4], D, D, True, dtype),
+        # per-head recurrent (block-diagonal) matrices
+        "r": jax.random.normal(ks[5], (4, H, dh, dh), jnp.float32) * std,
+        "out_norm": L.init_norm("rmsnorm", D, dtype),
+        "proj": L.init_linear(ks[6], D, D, False, dtype),
+    }
+
+
+def _slstm_cell(carry, inp, r):
+    """carry: (c, n, h, m) each (B,H,dh) f32; inp: 4 pre-activations
+    (B,H,dh) f32 (z,i,f,o order); r: (4,H,dh,dh) recurrent weights."""
+    c_p, n_p, h_p, m_p = carry
+    pz, pi, pf, po = inp
+    rec = jnp.einsum("ghde,bhd->gbhe", r.astype(jnp.float32), h_p)
+    z = jnp.tanh(pz + rec[0])
+    li = pi + rec[1]                                    # log input gate
+    lf = jax.nn.log_sigmoid(pf + rec[2])                # log forget gate
+    o = jax.nn.sigmoid(po + rec[3])
+    m_t = jnp.maximum(lf + m_p, li)
+    i_ = jnp.exp(li - m_t)
+    f_ = jnp.exp(lf + m_p - m_t)
+    c = f_ * c_p + i_ * z
+    n = jnp.maximum(f_ * n_p + i_, jnp.exp(-m_t))
+    h = o * (c / n)
+    return (c, n, h, m_t), h
+
+
+def slstm_block(x: jax.Array, p: dict, cfg, *, obs: Optional[dict] = None,
+                state: Optional[dict] = None,
+                active: Optional[jax.Array] = None):
+    """sLSTM block. Gate GEMMs run for all timesteps in parallel (outside the
+    scan); the scan body is elementwise + per-head recurrent matvec only."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    dh = D // H
+    conv_state = state["conv"] if state is not None else None
+    xc, new_conv = L.causal_conv1d(x, p["conv"], conv_state)
+    xc = jax.nn.silu(xc)
+    L.observe(obs, "blk_in", x)
+    L.observe(obs, "blk_conv_in", xc)
+    # z/o read the raw input, i/f read the conv path (xLSTM §sLSTM)
+    pre = [L.dense(x, p["wz"], obs=None), L.dense(xc, p["wi"], obs=None),
+           L.dense(xc, p["wf"], obs=None), L.dense(x, p["wo"], obs=None)]
+    pre = [t.reshape(B, S, H, dh).astype(jnp.float32).transpose(1, 0, 2, 3)
+           for t in pre]                                  # (S,B,H,dh)
+    if state is not None:
+        carry0 = (state["c"], state["n"], state["h"], state["m"])
+    else:
+        zeros = jnp.zeros((B, H, dh), jnp.float32)
+        carry0 = (zeros, jnp.ones_like(zeros), zeros, zeros)
+
+    cell = lambda c, i: _slstm_cell(c, i, p["r"])
+    (c, n, h_last, m), hs = jax.lax.scan(cell, carry0, tuple(pre))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+    h = L.rms_norm(h, p["out_norm"])
+    L.observe(obs, "blk_hidden", h)
+    out = L.dense(h, p["proj"], obs=None)
+    new_state = None
+    if state is not None:
+        new_state = L.select_state(
+            {"c": c, "n": n, "h": h_last, "m": m, "conv": new_conv},
+            state, active)
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# decode-state constructors
+# ---------------------------------------------------------------------------
+
+
+def mlstm_state(cfg, batch: int, dtype=jnp.float32) -> dict:
+    Dp = int(cfg.proj_factor * cfg.d_model)
+    H, dh = cfg.num_heads, int(cfg.proj_factor * cfg.d_model) // cfg.num_heads
+    return {"C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, H, dh), jnp.float32),
+            "m": jnp.zeros((batch, H), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, Dp), dtype)}
+
+
+def slstm_state(cfg, batch: int, dtype=jnp.float32) -> dict:
+    H, dh = cfg.num_heads, cfg.d_model // cfg.num_heads
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"c": z, "n": jnp.ones_like(z), "h": z, "m": z,
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_model), dtype)}

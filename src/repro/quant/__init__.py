@@ -1,0 +1,4 @@
+from repro.quant import ptq  # noqa: F401
+from repro.quant.ptq import apply_policy, capture_stats, quantize_weight
+
+__all__ = ["ptq", "apply_policy", "capture_stats", "quantize_weight"]

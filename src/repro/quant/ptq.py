@@ -1,0 +1,250 @@
+"""Post-training quantization: apply a SAMP EncoderPolicy to float params.
+
+The flow (paper §3.2 / Appendix A):
+
+    float params --capture_stats(calibration batches)--> amax per (layer, site)
+                 --apply_policy(policy)--> mixed-precision params + plan
+
+Weights are quantized per-output-channel (pytorch-quantization's weight
+default); activations get static per-tensor scales from the calibrator
+(the paper's scheme) unless ``scheme.dynamic_acts`` — then no ``xs`` is
+stored and :func:`repro.models.layers.dense` quantizes per-token at runtime
+(beyond-paper).
+
+Which weights belong to which group (MHA vs FFN) per block kind — and which
+activations feed them — is the :data:`SITE_MAP` below; attention's batched
+matmuls (q·k^T, p·v) additionally get ``{q,k,p,v}_scale`` scalars when the
+layer is FULLY_QUANT (the paper's Figure-2(a) path, including the softmax
+quantization that Appendix B shows is the accuracy killer).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, BlockKind
+from repro.core.calibration import Calibrator, make_calibrator
+from repro.core.precision import EncoderPolicy, LayerMode
+from repro.core.quantize import (QuantizedTensor, compute_scale_symmetric,
+                                 quantize, UINT8_MAX)
+from repro.models import transformer as T
+
+# (group, param_path, site): group 'mha' honours mode.quant_mha, 'ffn'
+# honours mode.quant_ffn. Paths are within the layer dict.
+SITE_MAP: dict[str, list[tuple[str, tuple[str, ...], str]]] = {
+    "attn": [
+        ("mha", ("attn", "wq"), "attn_in"),
+        ("mha", ("attn", "wk"), "attn_in"),
+        ("mha", ("attn", "wv"), "attn_in"),
+        ("mha", ("attn", "wo"), "attn_out"),
+    ],
+    "attn_mla": [
+        ("mha", ("attn", "wq_a"), "attn_in"),
+        ("mha", ("attn", "wq_b"), "q_lat"),
+        ("mha", ("attn", "wq"), "attn_in"),        # q_lora_rank == 0 variant
+        ("mha", ("attn", "wkv_a"), "attn_in"),
+        ("mha", ("attn", "wkv_b"), "c_kv"),
+        ("mha", ("attn", "wo"), "attn_out"),
+    ],
+    "ffn_glu": [
+        ("ffn", ("ffn", "wg"), "ffn_in"),
+        ("ffn", ("ffn", "wu"), "ffn_in"),
+        ("ffn", ("ffn", "wd"), "ffn_hidden"),
+    ],
+    "ffn_gelu": [
+        ("ffn", ("ffn", "wi"), "ffn_in"),
+        ("ffn", ("ffn", "wo"), "ffn_hidden"),
+    ],
+    "moe": [
+        ("ffn", ("ffn", "wg"), "ffn_in_e"),
+        ("ffn", ("ffn", "wu"), "ffn_in_e"),
+        ("ffn", ("ffn", "wd"), "ffn_hidden"),
+        ("ffn", ("ffn", "shared", "wg"), "shared_ffn_in"),
+        ("ffn", ("ffn", "shared", "wu"), "shared_ffn_in"),
+        ("ffn", ("ffn", "shared", "wd"), "shared_ffn_hidden"),
+    ],
+    "rglru": [
+        ("ffn", ("rec", "wx"), "rec_in"),
+        ("ffn", ("rec", "wg"), "rec_in"),
+        ("ffn", ("rec", "wa"), "rec_gate_in"),
+        ("ffn", ("rec", "wi"), "rec_gate_in"),
+        ("ffn", ("rec", "wo"), "rec_out"),
+    ],
+    "mlstm": [
+        ("ffn", ("blk", "up"), "blk_in"),
+        ("ffn", ("blk", "wq"), "qkv_in"),
+        ("ffn", ("blk", "wk"), "qkv_in"),
+        ("ffn", ("blk", "wif"), "qkv_in"),
+        ("ffn", ("blk", "wv"), "xm"),
+        ("ffn", ("blk", "down"), "blk_hidden"),
+    ],
+    "slstm": [
+        ("ffn", ("blk", "wz"), "blk_in"),
+        ("ffn", ("blk", "wo"), "blk_in"),
+        ("ffn", ("blk", "wi"), "blk_conv_in"),
+        ("ffn", ("blk", "wf"), "blk_conv_in"),
+        ("ffn", ("blk", "proj"), "blk_hidden"),
+    ],
+}
+
+BMM_SITES = ("q", "k", "p", "v")    # attention batched-matmul operands
+
+
+def _kind_entries(cfg: ArchConfig, kind: BlockKind):
+    entries = []
+    if kind.body == "attn":
+        entries += SITE_MAP["attn_mla" if cfg.mla is not None else "attn"]
+        entries += SITE_MAP["moe" if kind.moe else
+                            ("ffn_glu" if cfg.ffn_kind == "glu" else "ffn_gelu")]
+    elif kind.body == "rglru":
+        entries += SITE_MAP["rglru"]
+        entries += SITE_MAP["ffn_glu" if cfg.ffn_kind == "glu" else "ffn_gelu"]
+    else:
+        entries += SITE_MAP[kind.body]
+    return entries
+
+
+def quantize_weight(w: jax.Array) -> QuantizedTensor:
+    """Per-output-channel symmetric int8. 2-D (K, N): scale (1, N);
+    3-D expert stacks (E, K, N): per-expert-per-channel scale (E, 1, N)."""
+    reduce_axes = (w.ndim - 2,) if w.ndim == 3 else tuple(range(w.ndim - 1))
+    amax = jnp.max(jnp.abs(w), axis=reduce_axes, keepdims=True)
+    scale = compute_scale_symmetric(amax)
+    return QuantizedTensor(quantize(w, scale), scale, None)
+
+
+def _get_path(d: dict, path: tuple[str, ...]):
+    for k in path:
+        if not isinstance(d, dict) or k not in d:
+            return None
+        d = d[k]
+    return d
+
+
+def _set_path(d: dict, path: tuple[str, ...], value) -> None:
+    for k in path[:-1]:
+        d = d[k]
+    d[path[-1]] = value
+
+
+def quantize_layer(lp: dict, cfg: ArchConfig, kind: BlockKind,
+                   mode: LayerMode, amax: dict[str, float],
+                   scheme: T.QuantScheme) -> dict:
+    """Return a quantized copy of one layer's params under ``mode``.
+    ``amax`` maps site name -> calibrated amax for THIS layer."""
+    if mode is LayerMode.FLOAT:
+        return lp
+    lp = _copy_dicts(lp)                     # containers copied, leaves shared
+    for group, path, site in _kind_entries(cfg, kind):
+        if group == "mha" and not mode.quant_mha:
+            continue
+        if group == "ffn" and not mode.quant_ffn:
+            continue
+        sub = _get_path(lp, path)
+        if sub is None:
+            continue
+        new = dict(sub)
+        new["w"] = quantize_weight(sub["w"])
+        if not scheme.dynamic_acts and site in amax:
+            new["xs"] = jnp.asarray(
+                compute_scale_symmetric(jnp.float32(amax[site])))
+        _set_path(lp, path, new)
+    if kind.body == "attn" and mode.quant_mha:
+        attn = lp["attn"]
+        for s in BMM_SITES:
+            if s not in amax:
+                continue
+            if s == "p" and scheme.softmax_mode == "unsigned":
+                sc = jnp.float32(max(amax[s], 1e-8)) / UINT8_MAX
+            else:
+                sc = compute_scale_symmetric(jnp.float32(amax[s]))
+            attn[f"{s}_scale"] = jnp.asarray(sc)
+    return lp
+
+
+def _copy_dicts(tree):
+    if isinstance(tree, dict):
+        return {k: _copy_dicts(v) for k, v in tree.items()}
+    if isinstance(tree, tuple):
+        return tuple(_copy_dicts(v) for v in tree)
+    if isinstance(tree, list):
+        return [_copy_dicts(v) for v in tree]
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# calibration capture
+# ---------------------------------------------------------------------------
+
+
+def capture_stats(params: dict, batches: Sequence[dict], cfg: ArchConfig,
+                  plan, scheme: T.QuantScheme = T.QuantScheme(), *,
+                  calibrator: str = "minmax",
+                  hist_sites: tuple[str, ...] = ("attn_in", "ffn_in", "p"),
+                  compute_dtype=jnp.float32,
+                  **calib_kw) -> dict[str, dict[str, float]]:
+    """Run calibration batches through the float model with observers on and
+    reduce per-(layer, site) statistics to amax values.
+
+    ``minmax`` consumes the cheap per-batch scalar amax observations (works
+    at any model size). Histogram calibrators (percentile/mse/entropy)
+    additionally consume raw values on ``hist_sites`` — that path
+    materializes activations and is intended for calibration-size models
+    only; sites without raw captures fall back to the scalar minmax amax.
+
+    Returns {"layer{i}": {site: amax}}.
+    """
+    use_hist = calibrator != "minmax"
+    cals: dict[str, Calibrator] = {}
+    scalar_amax: dict[str, float] = {}
+
+    for batch in batches:
+        obs: dict = {}
+        if use_hist:
+            obs["__values__"] = True
+        # capture mode forces unrolled execution (see transformer.run_groups)
+        quant_probe = dataclasses.replace(scheme)
+        T.forward(params, batch, cfg, plan, quant_probe, obs=obs,
+                  compute_dtype=compute_dtype)
+        raw = obs.pop("__raw__", {}) if use_hist else {}
+        obs.pop("__values__", None)
+        for key, v in obs.items():
+            if key.startswith("layer"):
+                scalar_amax[key] = max(scalar_amax.get(key, 0.0), float(v))
+        for key, v in raw.items():
+            site = key.split("/", 1)[1]
+            if site in hist_sites:
+                cals.setdefault(key, make_calibrator(calibrator, **calib_kw)
+                                ).observe(np.asarray(v))
+
+    out: dict[str, dict[str, float]] = {}
+    for key, amax in scalar_amax.items():
+        layer, site = key.split("/", 1)
+        out.setdefault(layer, {})[site] = amax
+    for key, cal in cals.items():
+        layer, site = key.split("/", 1)
+        out.setdefault(layer, {})[site] = float(cal.compute_amax())
+    return out
+
+
+def apply_policy(params: dict, cfg: ArchConfig, policy: EncoderPolicy,
+                 stats: dict[str, dict[str, float]], *,
+                 scheme: T.QuantScheme = T.QuantScheme(),
+                 float_plan=None):
+    """float params (packed under ``float_plan``) + calibration stats
+    -> (quantized params packed under the policy's plan, that plan)."""
+    float_plan = float_plan or T.build_plan(
+        cfg, EncoderPolicy.full_float(cfg.num_layers, policy.float_dtype))
+    new_plan = T.build_plan(cfg, policy)
+    kinds = cfg.layer_kinds()
+
+    def transform(i: int, lp: dict) -> dict:
+        return quantize_layer(lp, cfg, kinds[i], policy.modes[i],
+                              stats.get(f"layer{i}", {}), scheme)
+
+    qparams = T.repack(params, float_plan, new_plan, transform)
+    return qparams, new_plan

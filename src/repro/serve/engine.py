@@ -1,0 +1,171 @@
+"""Continuous-batching serving engine over the SAMP-quantized model.
+
+The inference-toolkit half of the paper, end-to-end: tokenizer -> embedding
+-> SAMP mixed-precision encoder -> generation / downstream task.
+
+Scheduling model (token-level continuous batching):
+
+* a fixed number of batch *slots* = the compiled batch size;
+* every tick runs ONE compiled decode step for the whole batch with per-slot
+  positions; each active slot consumes one token — its next *prompt* token
+  while prefilling, or its last *generated* token while decoding — so new
+  requests stream in token-by-token alongside in-flight generations, no
+  wave barriers;
+* idle slots are masked via ``active`` — the model gates their cache/state
+  writes, so they are never corrupted and never retraced;
+* finished requests free their slot immediately; the slot's cache rows are
+  reset on the next admit.
+
+One executable for the entire lifecycle (prefill shares the decode program).
+A separate bulk ``prefill()`` path runs long prompts through the
+full-sequence forward for throughput when slots start empty.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_tokens: int = 32
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+    # engine-filled:
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+    @property
+    def text_len(self) -> int:
+        return len(self.prompt) + len(self.output)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, plan, *,
+                 scheme: T.QuantScheme = T.QuantScheme(),
+                 batch_slots: int = 4, max_len: int = 256,
+                 cache_dtype=jnp.float32, compute_dtype=jnp.float32,
+                 seed: int = 0):
+        if not cfg.supports_decode:
+            raise ValueError(f"{cfg.name} is encoder-only; no decode")
+        self.cfg = cfg
+        self.params = params
+        self.plan = plan
+        self.scheme = scheme
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.compute_dtype = compute_dtype
+        self.cache_dtype = cache_dtype
+        self.queue: deque[Request] = deque()
+        self.active: list[Optional[Request]] = [None] * batch_slots
+        self.cursor = np.zeros(batch_slots, np.int64)  # tokens consumed/slot
+        self.caches = T.init_caches(params, cfg, plan, batch_slots, max_len,
+                                    cache_dtype)
+        self._fresh1 = T.init_caches(params, cfg, plan, 1, max_len,
+                                     cache_dtype)
+        self.rng = np.random.default_rng(seed)
+        self._decode = jax.jit(self._decode_impl)
+        self._stats = {"ticks": 0, "tokens": 0, "retired": 0}
+
+    def _decode_impl(self, params, caches, tokens, pos, active):
+        logits, caches = T.decode_step(params, tokens, caches, pos, self.cfg,
+                                       self.plan, self.scheme, active=active,
+                                       compute_dtype=self.compute_dtype)
+        return logits[:, -1, :], caches
+
+    # -- request lifecycle ------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) == 0:
+            raise ValueError("empty prompt")
+        if len(req.prompt) + req.max_tokens > self.max_len:
+            raise ValueError(f"prompt+max_tokens exceeds max_len "
+                             f"{self.max_len}")
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                self.active[s] = self.queue.popleft()
+                self.cursor[s] = 0
+                self._reset_slot(s)
+
+    def _reset_slot(self, s: int) -> None:
+        """Zero slot s's cache rows (leaves carry batch on axis 1, after the
+        layer-stack axis)."""
+        self.caches = jax.tree_util.tree_map(
+            lambda old, fresh: old.at[:, s:s + 1].set(
+                fresh.astype(old.dtype)),
+            self.caches, self._fresh1)
+
+    # -- the serving loop ---------------------------------------------------------
+    def step(self) -> list[Request]:
+        """One engine tick = one compiled decode step for the whole batch."""
+        self._admit()
+        live = [s for s in range(self.slots) if self.active[s] is not None]
+        if not live:
+            return []
+        tokens = np.zeros((self.slots, 1), np.int32)
+        pos = np.zeros(self.slots, np.int32)
+        active = np.zeros(self.slots, bool)
+        for s in live:
+            req = self.active[s]
+            c = int(self.cursor[s])
+            tokens[s, 0] = (req.prompt[c] if c < len(req.prompt)
+                            else req.output[-1])
+            pos[s] = c
+            active[s] = True
+        logits, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(tokens),
+            jnp.asarray(pos), jnp.asarray(active))
+        logits = np.asarray(jax.device_get(logits), np.float32)
+        self._stats["ticks"] += 1
+        self._stats["tokens"] += len(live)
+
+        retired: list[Request] = []
+        for s in live:
+            req = self.active[s]
+            self.cursor[s] += 1
+            # still consuming the prompt (and not at its last token yet)?
+            if self.cursor[s] < len(req.prompt):
+                continue
+            # this tick's logits predict the next token
+            row = logits[s]
+            if req.temperature > 0:
+                p = np.exp((row - row.max()) / req.temperature)
+                p /= p.sum()
+                nxt = int(self.rng.choice(len(p), p=p))
+            else:
+                nxt = int(row.argmax())
+            req.output.append(nxt)
+            hit_eos = req.eos_id is not None and nxt == req.eos_id
+            if hit_eos or len(req.output) >= req.max_tokens \
+                    or req.text_len >= self.max_len:
+                req.done = True
+                retired.append(req)
+                self.active[s] = None
+                self._stats["retired"] += 1
+        return retired
+
+    def run(self, max_ticks: int = 100_000) -> list[Request]:
+        """Drain queue + in-flight work; returns requests in retire order."""
+        done: list[Request] = []
+        ticks = 0
+        while (self.queue or any(a is not None for a in self.active)) \
+                and ticks < max_ticks:
+            done.extend(self.step())
+            ticks += 1
+        return done
+
+    @property
+    def stats(self) -> dict:
+        return dict(self._stats)

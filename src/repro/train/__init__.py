@@ -1,0 +1,5 @@
+from repro.train.optimizer import AdamW, AdamWState, cosine_schedule, linear_schedule
+from repro.train.trainer import TrainConfig, Trainer, TrainState
+
+__all__ = ["AdamW", "AdamWState", "cosine_schedule", "linear_schedule",
+           "TrainConfig", "Trainer", "TrainState"]

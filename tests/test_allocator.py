@@ -1,0 +1,112 @@
+"""Algorithm 1 + Appendix-A threshold policies (paper's allocator)."""
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from repro.core import allocator as A
+
+settings = hypothesis.settings(max_examples=40, deadline=None)
+
+
+def test_paper_algorithm_prefers_cheap_decay():
+    # candidate 0 = float baseline; deeper candidates trade accuracy for
+    # latency. Candidate 2 has the flattest decay slope => recommended.
+    acc = [0.90, 0.89, 0.885, 0.70, 0.50]
+    lat = [1.00, 0.95, 0.85, 0.80, 0.75]
+    rec = A.accuracy_decay_aware(acc, lat)
+    assert rec.index == 2
+    assert rec.speedup == pytest.approx(1.0 / 0.85)
+
+
+def test_negative_decay_always_accepted():
+    # accuracy IMPROVES while latency drops -> free win, must be taken
+    acc = [0.80, 0.85]
+    lat = [1.00, 0.90]
+    rec = A.accuracy_decay_aware(acc, lat)
+    assert rec.index == 1
+
+
+def test_latency_ceiling():
+    acc = [0.9, 0.88, 0.8, 0.7]
+    lat = [1.0, 0.9, 0.6, 0.5]
+    rec = A.under_latency_ceiling(acc, lat, max_latency=0.65)
+    assert rec.index == 2                      # best accuracy under 0.65
+    rec2 = A.under_latency_ceiling(acc, lat, max_latency=0.1)
+    assert rec2.index == 3                     # infeasible -> fastest
+
+
+def test_accuracy_floor():
+    acc = [0.9, 0.88, 0.8, 0.7]
+    lat = [1.0, 0.9, 0.6, 0.5]
+    rec = A.above_accuracy_floor(acc, lat, min_accuracy=0.85)
+    assert rec.index == 1                      # fastest with acc >= 0.85
+    rec2 = A.above_accuracy_floor(acc, lat, min_accuracy=0.99)
+    assert rec2.index == 0                     # infeasible -> most accurate
+
+
+def test_top5_ranking():
+    acc = [0.9] + [0.9 - 0.01 * i for i in range(1, 8)]
+    lat = [1.0] + [1.0 - 0.05 * i for i in range(1, 8)]
+    recs = A.top_k_by_efficiency(acc, lat, k=5)
+    assert len(recs) == 5
+    ratios = [r.speedup / max(r.accuracy_drop, 1e-9) for r in recs]
+    assert ratios == sorted(ratios, reverse=True)
+
+
+def test_recommend_dispatch():
+    acc = [0.9, 0.8]
+    lat = [1.0, 0.5]
+    assert A.recommend(acc, lat).index in (0, 1)
+    assert A.recommend(acc, lat, max_latency=0.6).index == 1
+    assert A.recommend(acc, lat, min_accuracy=0.85).index == 0
+
+
+@settings
+@hypothesis.given(
+    st.lists(st.tuples(st.floats(0, 1), st.floats(0.01, 10)),
+             min_size=1, max_size=20))
+def test_allocator_invariants(pairs):
+    acc = [p[0] for p in pairs]
+    lat = [p[1] for p in pairs]
+    rec = A.accuracy_decay_aware(acc, lat)
+    assert 0 <= rec.index < len(acc)
+    assert rec.accuracy == acc[rec.index]
+    assert rec.latency == lat[rec.index]
+    assert rec.speedup == pytest.approx(lat[0] / lat[rec.index])
+
+
+@settings
+@hypothesis.given(
+    st.lists(st.tuples(st.floats(0, 1), st.floats(0.01, 10)),
+             min_size=1, max_size=20),
+    st.floats(0.02, 9))
+def test_ceiling_respected_when_feasible(pairs, ceiling):
+    acc = [p[0] for p in pairs]
+    lat = [p[1] for p in pairs]
+    rec = A.under_latency_ceiling(acc, lat, ceiling)
+    if any(l <= ceiling for l in lat):
+        assert rec.latency <= ceiling
+        feas_best = max(a for a, l in zip(acc, lat) if l <= ceiling)
+        assert rec.accuracy == pytest.approx(feas_best)
+
+
+def test_validation_errors():
+    with pytest.raises(ValueError):
+        A.accuracy_decay_aware([], [])
+    with pytest.raises(ValueError):
+        A.accuracy_decay_aware([0.5], [1.0, 2.0])
+    with pytest.raises(ValueError):
+        A.accuracy_decay_aware([0.5], [0.0])
+
+
+def test_greedy_subset_schedule():
+    steps = A.greedy_subset_schedule(
+        per_layer_accuracy=[0.88, 0.70, 0.86],   # layer 1 is expensive
+        base_accuracy=0.9,
+        per_layer_latency_gain=[0.1, 0.1, 0.1],
+        base_latency=1.0)
+    assert steps[0].layers == ()
+    assert steps[1].layers == (0,)               # cheapest first
+    assert steps[2].layers == (0, 2)
+    assert steps[3].layers == (0, 1, 2)
+    assert steps[3].latency == pytest.approx(0.7)

@@ -1,0 +1,77 @@
+"""The four PTQ calibrators (paper §4.1)."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from repro.core import calibration as C
+
+settings = hypothesis.settings(max_examples=25, deadline=None)
+
+
+@settings
+@hypothesis.given(st.lists(hnp.arrays(np.float32, (64,),
+                                      elements=st.floats(-50, 50, width=32)),
+                           min_size=1, max_size=5))
+def test_minmax_is_running_max(batches):
+    cal = C.MinMaxCalibrator()
+    for b in batches:
+        cal.observe(b)
+    true = max(float(np.abs(b).max()) for b in batches)
+    assert cal.compute_amax() == pytest.approx(max(true, C.EPS), rel=1e-6)
+
+
+def test_percentile_clips_outliers():
+    rng = np.random.RandomState(0)
+    body = rng.randn(100_000).astype(np.float32)
+    spiked = np.concatenate([body, np.float32([1000.0])])
+    cal = C.PercentileCalibrator(percentile=99.9)
+    cal.observe(spiked)
+    amax = cal.compute_amax()
+    assert amax < 10.0                      # the 1000 outlier is clipped
+    assert amax > 2.0                       # but the body is covered
+
+
+def test_mse_calibrator_clips_gaussian_tail():
+    """For N(0,1), the MSE-optimal int8 clip is ~3 sigma — below max|x|
+    (Sakr et al.); the calibrator must land in that region, not at minmax."""
+    rng = np.random.RandomState(0)
+    x = rng.randn(200_000).astype(np.float32)
+    mm = C.MinMaxCalibrator(); mm.observe(x)
+    mse = C.MSECalibrator(); mse.observe(x)
+    amax = mse.compute_amax()
+    assert 2.0 < amax < mm.compute_amax()
+
+
+def test_entropy_calibrator_reasonable_range():
+    rng = np.random.RandomState(0)
+    x = rng.randn(50_000).astype(np.float32)
+    cal = C.EntropyCalibrator()
+    cal.observe(x)
+    amax = cal.compute_amax()
+    assert 0.2 < amax <= float(np.abs(x).max()) + 1e-6
+
+
+def test_histogram_rescale_keeps_old_mass():
+    cal = C.PercentileCalibrator(percentile=100.0, num_bins=128)
+    cal.observe(np.ones(1000, np.float32))          # range [0, 1]
+    cal.observe(np.float32([10.0]))                 # range grows to 10
+    assert cal._hist.sum() == pytest.approx(1001, rel=0.01)
+
+
+@pytest.mark.parametrize("name", ["minmax", "percentile", "mse", "entropy"])
+def test_factory_and_reset(name):
+    cal = C.make_calibrator(name)
+    cal.observe(np.linspace(-3, 3, 1024, dtype=np.float32))
+    a1 = cal.compute_amax()
+    assert a1 > 0
+    cal.reset()
+    cal.observe(np.linspace(-1, 1, 1024, dtype=np.float32))
+    a2 = cal.compute_amax()
+    assert a2 < a1
+
+
+def test_unknown_calibrator_raises():
+    with pytest.raises(KeyError):
+        C.make_calibrator("nope")

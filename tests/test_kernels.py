@@ -1,0 +1,130 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+K0 = jax.random.PRNGKey(0)
+K1 = jax.random.PRNGKey(1)
+K2 = jax.random.PRNGKey(2)
+
+
+@pytest.mark.parametrize("M,K,N", [(128, 128, 128), (256, 384, 128),
+                                   (128, 256, 512), (384, 128, 256)])
+@pytest.mark.parametrize("act", [None, "gelu", "silu"])
+def test_quant_linear_shapes(M, K, N, act):
+    xq = jax.random.randint(K0, (M, K), -128, 128, jnp.int8)
+    wq = jax.random.randint(K1, (K, N), -128, 128, jnp.int8)
+    ws = jax.random.uniform(K2, (N,), jnp.float32, 1e-3, 1e-2)
+    got = ops.quant_linear(xq, wq, ws, 0.01, act=act, out_dtype=jnp.float32)
+    want = ref.quant_linear(xq, wq, ws, 0.01, act=act, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("out_scale", [None, 0.07])
+@pytest.mark.parametrize("bias", [False, True])
+def test_quant_linear_epilogue(out_scale, bias):
+    M = K = N = 128
+    xq = jax.random.randint(K0, (M, K), -128, 128, jnp.int8)
+    wq = jax.random.randint(K1, (K, N), -128, 128, jnp.int8)
+    ws = jax.random.uniform(K2, (N,), jnp.float32, 1e-3, 1e-2)
+    b = jax.random.normal(K0, (N,), jnp.float32) if bias else None
+    got = ops.quant_linear(xq, wq, ws, 0.02, bias=b, act="gelu",
+                           out_scale=out_scale, out_dtype=jnp.float32)
+    want = ref.quant_linear(xq, wq, ws, 0.02, bias=b, act="gelu",
+                            out_scale=out_scale, out_dtype=jnp.float32)
+    if out_scale is not None:
+        assert got.dtype == jnp.int8
+        # integer outputs: allow rare off-by-one from rounding ties
+        diff = np.abs(np.asarray(got, np.int32) - np.asarray(want, np.int32))
+        assert (diff > 1).mean() == 0
+    else:
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ["layernorm", "rmsnorm"])
+@pytest.mark.parametrize("M,D", [(256, 128), (512, 256), (128, 896)])
+def test_addnorm_quant(kind, M, D):
+    x = jax.random.normal(K0, (M, D), jnp.float32)
+    r = jax.random.normal(K1, (M, D), jnp.float32)
+    bias = jax.random.normal(K2, (D,), jnp.float32)
+    g = jax.random.uniform(K0, (D,), jnp.float32, 0.5, 1.5)
+    beta = jax.random.normal(K1, (D,), jnp.float32)
+    h, q = ops.addnorm_quant(x, r, bias, g, beta, 0.05, kind=kind)
+    h2, q2 = ref.addnorm_quant(x, r, bias, g, beta, 0.05, kind=kind)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h2), rtol=1e-5,
+                               atol=1e-5)
+    mismatch = (np.asarray(q) != np.asarray(q2)).mean()
+    assert mismatch < 0.005                  # rounding-edge ties only
+
+
+@pytest.mark.parametrize("N,V,S,D,segs", [(32, 100, 16, 64, 2),
+                                          (64, 500, 32, 128, 0),
+                                          (16, 50, 16, 256, 2)])
+def test_fused_embed(N, V, S, D, segs):
+    tok_t = jax.random.normal(K0, (V, D), jnp.float32)
+    pos_t = jax.random.normal(K1, (S, D), jnp.float32)
+    seg_t = jax.random.normal(K2, (segs, D), jnp.float32) if segs else None
+    toks = jax.random.randint(K0, (N,), 0, V, jnp.int32)
+    sg = jax.random.randint(K1, (N,), 0, segs, jnp.int32) if segs else None
+    got = ops.fused_embed(toks, tok_t, pos_t, seg_t, sg, scale=1.5)
+    want = ref.fused_embed(toks, tok_t, pos_t, seg_t, sg, scale=1.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("M,D", [(256, 128), (512, 896), (128, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dynamic_quant(M, D, dtype):
+    x = (jax.random.normal(K0, (M, D), jnp.float32) * 5).astype(dtype)
+    q, s = ops.dynamic_quant(x)
+    q2, s2 = ref.dynamic_quant(x)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s2), rtol=1e-5)
+    assert (np.asarray(q) != np.asarray(q2)).mean() < 0.002
+
+
+@pytest.mark.parametrize("Hq,Hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("kwargs", [
+    dict(causal=True), dict(causal=False), dict(causal=True, window=64),
+    dict(causal=True, softcap=30.0)])
+def test_flash_attention(Hq, Hkv, kwargs):
+    B, S, D = 2, 256, 64
+    q = jax.random.normal(K0, (B, Hq, S, D), jnp.float32)
+    k = jax.random.normal(K1, (B, Hkv, S, D), jnp.float32)
+    v = jax.random.normal(K2, (B, Hkv, S, D), jnp.float32)
+    got = ops.flash_attention(q, k, v, bq=64, bk=64, **kwargs)
+    want = ref.flash_attention(q, k, v, **kwargs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_uneven_kv_len():
+    B, Hq, Sq, Sk, D = 1, 2, 128, 256, 64
+    q = jax.random.normal(K0, (B, Hq, Sq, D), jnp.float32)
+    k = jax.random.normal(K1, (B, Hq, Sk, D), jnp.float32)
+    v = jax.random.normal(K2, (B, Hq, Sk, D), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=False, bq=64, bk=64)
+    want = ref.flash_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_matches_model_attention_core():
+    """Cross-validate the kernel against the model's XLA attention path."""
+    from repro.models import layers as L
+    B, H, S, D = 1, 2, 128, 32
+    q = jax.random.normal(K0, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(K1, (B, S, H, D), jnp.float32)
+    v = jax.random.normal(K2, (B, S, H, D), jnp.float32)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    core = L.attention_core(q, k, v, pos, pos, L.MaskSpec(causal=True),
+                            scale=D ** -0.5, chunk=64)
+    fa = ops.flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                             v.transpose(0, 2, 1, 3), causal=True,
+                             bq=64, bk=64).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(core), np.asarray(fa),
+                               rtol=2e-4, atol=2e-4)

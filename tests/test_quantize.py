@@ -1,0 +1,114 @@
+"""Unit + property tests for the int8 quantization numerics."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantize as Q
+
+settings = hypothesis.settings(max_examples=30, deadline=None)
+
+floats = hnp.arrays(np.float32, hnp.array_shapes(min_dims=1, max_dims=3,
+                                                 max_side=16),
+                    elements=st.floats(-1e4, 1e4, width=32))
+
+
+@settings
+@hypothesis.given(floats)
+def test_roundtrip_error_bound(x):
+    """|x - dq(q(x))| <= scale/2 for in-range x (round-to-nearest)."""
+    qt = Q.quantize_per_tensor(jnp.asarray(x))
+    err = np.abs(np.asarray(qt.dequantize()) - x)
+    bound = float(qt.scale) / 2 + 1e-6
+    assert err.max() <= bound
+
+
+@settings
+@hypothesis.given(floats)
+def test_quantize_idempotent(x):
+    """Quantizing an already-quantized grid is exact."""
+    qt = Q.quantize_per_tensor(jnp.asarray(x))
+    x2 = qt.dequantize()
+    qt2 = Q.quantize_per_tensor(x2, amax=jnp.max(jnp.abs(jnp.asarray(x))))
+    np.testing.assert_array_equal(np.asarray(qt.values), np.asarray(qt2.values))
+
+
+@settings
+@hypothesis.given(hnp.arrays(np.float32, (8, 12),
+                             elements=st.floats(-100, 100, width=32)))
+def test_per_channel_beats_or_matches_per_tensor(w):
+    hypothesis.assume(np.abs(w).max() > 0)
+    pt = Q.quantize_per_tensor(jnp.asarray(w))
+    pc = Q.quantize_per_channel(jnp.asarray(w), axis=-1)
+    err_t = np.abs(np.asarray(pt.dequantize()) - w).mean()
+    err_c = np.abs(np.asarray(pc.dequantize()) - w).mean()
+    assert err_c <= err_t + 1e-7
+    assert pc.scale.shape == (1, 12)
+
+
+def test_per_token_shapes():
+    x = jnp.arange(24, dtype=jnp.float32).reshape(2, 3, 4)
+    qt = Q.quantize_per_token(x)
+    assert qt.scale.shape == (2, 3, 1)
+    rel = np.abs(np.asarray(qt.dequantize()) - np.asarray(x))
+    assert rel.max() <= float(qt.scale.max()) / 2 + 1e-6
+
+
+def test_unsigned_uses_full_range():
+    """The Appendix-B fix: [0,1] tensors should span ~all 256 codes."""
+    x = jnp.linspace(0, 1, 1000)
+    qt_sym = Q.quantize_per_tensor(x)            # symmetric: codes 0..127
+    qt_uns = Q.quantize_unsigned(x)              # unsigned: codes -128..127
+    sym_codes = len(np.unique(np.asarray(qt_sym.values)))
+    uns_codes = len(np.unique(np.asarray(qt_uns.values)))
+    assert sym_codes <= 128
+    assert uns_codes > 250
+    # and the roundtrip error is ~2x smaller
+    e_sym = np.abs(np.asarray(qt_sym.dequantize()) - np.asarray(x)).max()
+    e_uns = np.abs(np.asarray(qt_uns.dequantize()) - np.asarray(x)).max()
+    assert e_uns < e_sym
+
+
+def test_int8_matmul_matches_dequant_matmul():
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (8, 32))
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 16)) * 0.1
+    xq = Q.quantize_per_tensor(x)
+    wq = Q.quantize_per_channel(w, axis=-1)
+    got = Q.int8_matmul(xq, wq)
+    want = xq.dequantize() @ wq.dequantize()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_int8_matmul_unsigned_zero_point():
+    """Zero-point correction for unsigned activations (softmax path)."""
+    k = jax.random.PRNGKey(0)
+    p = jax.nn.softmax(jax.random.normal(k, (4, 16)) * 3, axis=-1)
+    v = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+    pq = Q.quantize_unsigned(p)
+    vq = Q.quantize_per_channel(v, axis=-1)
+    got = Q.int8_matmul(pq, vq)
+    want = pq.dequantize() @ vq.dequantize()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_fake_quantize_matches_qdq():
+    x = jnp.asarray(np.random.RandomState(0).randn(5, 7).astype(np.float32))
+    amax = jnp.max(jnp.abs(x))
+    fq = Q.fake_quantize(x, amax)
+    qt = Q.quantize_per_tensor(x, amax)
+    np.testing.assert_allclose(np.asarray(fq), np.asarray(qt.dequantize()),
+                               rtol=1e-6)
+
+
+def test_quantized_tensor_is_pytree():
+    qt = Q.quantize_per_tensor(jnp.ones((4, 4)))
+    leaves = jax.tree_util.tree_leaves(qt)
+    assert len(leaves) == 2    # symmetric: zero_point is None (absent)
+    qt2 = jax.tree_util.tree_map(lambda x: x, qt)
+    assert isinstance(qt2, Q.QuantizedTensor)
