@@ -1,111 +1,14 @@
-"""Analytic TPU-v5e roofline latency model for SAMP configurations.
+"""DEPRECATED: moved to :mod:`repro.toolkit.latency`.
 
-This container is CPU-only, so the latency axis of the paper's tradeoff
-(Table 2, Figure 3) is **modeled**, not wall-clocked: every GEMM and
-bandwidth-bound elementwise pass of one encoder layer is priced as
-
-    t_op = max(flops / peak_rate(precision), bytes / hbm_bw)
-
-and summed over the layer inventory given the per-layer SAMP mode. The
-same interface accepts wall-clock numbers on real hardware — the allocator
-(repro.core.allocator) is agnostic to the source (DESIGN.md §2).
-
-Hardware constants (TPU v5e): 197 TFLOP/s bf16, 394 TOP/s int8 (2x),
-~49 TFLOP/s fp32 (no MXU fp32 path — priced at bf16/4), 819 GB/s HBM.
-The model reproduces the paper's qualitative shape: each Quant-FFN-Only
-layer buys a few percent end-to-end (the paper measures 2–3% on T4).
+The roofline latency model now lives in the library (the toolkit's
+``roofline`` latency backend) so repro code no longer reaches into
+``benchmarks/``. This shim re-exports the old names for the bench scripts
+(``figure3_speedup``, ``table2_clue``) and any external users; new code
+should import from ``repro.toolkit.latency``.
 """
-from __future__ import annotations
+from repro.toolkit.latency import (BYTES, HBM_BW, PEAK, Op, _elementwise,
+                                   _gemm, encoder_latency, layer_latency,
+                                   layer_ops)
 
-import dataclasses
-
-from repro.configs.base import ArchConfig
-from repro.core.precision import EncoderPolicy, LayerMode
-
-PEAK = {"float32": 49.25e12, "bfloat16": 197e12, "float16": 197e12,
-        "int8": 394e12}
-HBM_BW = 819e9
-BYTES = {"float32": 4, "bfloat16": 2, "float16": 2, "int8": 1}
-
-
-@dataclasses.dataclass(frozen=True)
-class Op:
-    name: str
-    flops: float
-    bytes: float
-    precision: str
-
-    @property
-    def seconds(self) -> float:
-        return max(self.flops / PEAK[self.precision], self.bytes / HBM_BW)
-
-
-def _gemm(name: str, m: int, k: int, n: int, precision: str) -> Op:
-    b = BYTES[precision]
-    # activations in + weights + activations out (out in same precision for
-    # int8 inter-layer dataflow; float otherwise)
-    byts = m * k * b + k * n * b + m * n * b
-    return Op(name, 2.0 * m * k * n, byts, precision)
-
-
-def _elementwise(name: str, elems: int, passes: int, precision: str) -> Op:
-    return Op(name, elems, passes * elems * BYTES[precision], precision)
-
-
-def layer_ops(cfg: ArchConfig, mode: LayerMode, batch: int, seq: int,
-              float_dtype: str = "bfloat16") -> list[Op]:
-    """GEMM + bandwidth inventory of ONE encoder layer under ``mode``."""
-    T = batch * seq
-    D = cfg.d_model
-    mha_p = "int8" if mode.quant_mha else float_dtype
-    ffn_p = "int8" if mode.quant_ffn else float_dtype
-    ops: list[Op] = []
-    # --- MHA group ----------------------------------------------------------
-    if cfg.attention != "none":
-        ops += [_gemm("wq", T, D, cfg.q_dim, mha_p),
-                _gemm("wk", T, D, cfg.kv_dim, mha_p),
-                _gemm("wv", T, D, cfg.kv_dim, mha_p),
-                _gemm("wo", T, cfg.q_dim, D, mha_p)]
-        # batched score/value matmuls: window-bounded if sliding
-        kv_len = min(seq, cfg.sliding_window) \
-            if cfg.attention == "sliding" else seq
-        H, hd = cfg.num_heads, cfg.head_dim
-        ops.append(Op("qk^T", 2.0 * batch * H * seq * kv_len * hd,
-                      batch * H * seq * kv_len * BYTES[mha_p], mha_p))
-        ops.append(Op("pv", 2.0 * batch * H * seq * kv_len * hd,
-                      batch * H * seq * kv_len * BYTES[mha_p], mha_p))
-        ops.append(_elementwise("softmax", batch * H * seq * kv_len, 3,
-                                float_dtype))
-    # --- FFN group -----------------------------------------------------------
-    d_ff = cfg.d_ff or int(cfg.proj_factor * D) * 2
-    n_mats = 3 if cfg.ffn_kind == "glu" else 2
-    if cfg.moe is not None:
-        # active expert compute per token: top_k routed + shared
-        f = cfg.moe.d_ff_expert
-        act = cfg.moe.top_k + cfg.moe.num_shared
-        ops += [_gemm(f"moe_up[{act}]", T * act, D, f, ffn_p),
-                _gemm(f"moe_gate[{act}]", T * act, D, f, ffn_p),
-                _gemm(f"moe_down[{act}]", T * act, f, D, ffn_p)]
-    elif d_ff:
-        for i in range(n_mats - 1):
-            ops.append(_gemm(f"ffn_in{i}", T, D, d_ff, ffn_p))
-        ops.append(_gemm("ffn_out", T, d_ff, D, ffn_p))
-    # --- norms/residuals (always bandwidth-bound, float) ---------------------
-    ops.append(_elementwise("norms+residual", T * D, 6, float_dtype))
-    return ops
-
-
-def encoder_latency(cfg: ArchConfig, policy: EncoderPolicy, *, batch: int,
-                    seq: int, chips: int = 1) -> float:
-    """Modeled seconds for one forward pass of the whole encoder stack."""
-    total = 0.0
-    for mode in policy.modes:
-        for op in layer_ops(cfg, mode, batch, seq, policy.float_dtype):
-            total += op.seconds
-    return total / chips
-
-
-def layer_latency(cfg: ArchConfig, mode: LayerMode, *, batch: int, seq: int,
-                  float_dtype: str = "bfloat16") -> float:
-    return sum(op.seconds
-               for op in layer_ops(cfg, mode, batch, seq, float_dtype))
+__all__ = ["BYTES", "HBM_BW", "PEAK", "Op", "encoder_latency",
+           "layer_latency", "layer_ops"]

@@ -1,91 +1,40 @@
-"""SAMP quickstart: the paper's full workflow in ~60 lines.
+"""SAMP quickstart: the paper's full workflow through the toolkit facade.
 
     PYTHONPATH=src python examples/quickstart.py
 
 1. fine-tune a (reduced) BERT classifier on a synthetic CLUE-like task
 2. calibrate activation ranges on a handful of batches (min-max, paper §4.1)
 3. sweep the (mode, k) mixed-precision grid — accuracy measured, latency
-   from the TPU roofline model (wall-clock on real hardware)
+   from the TPU roofline backend (swap latency="wallclock" on real hardware)
 4. let the accuracy-decay-aware allocator (Algorithm 1) pick the tradeoff
-5. run inference with the recommended mixed-precision configuration
+5. deploy the quant-ffn-only recommendation — and save it as an artifact
+   bundle that reloads without re-calibration (SAMP.load)
 """
 import pathlib
 import sys
 
-sys.path.insert(0, str(pathlib.Path(__file__).parent.parent))
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
 
-import jax
-import jax.numpy as jnp
-
-from benchmarks.latency_model import encoder_latency
+from repro import SAMP
 from repro.configs import get_config
-from repro.core.samp import SAMPEngine
-from repro.data import eval_accuracy, get_batch, make_task
-from repro.models import transformer as T
-from repro.train import AdamW, TrainConfig, Trainer
-from repro.train.trainer import TrainState
-
-N_CLASSES, SEQ = 15, 32
 
 # -- 1. fine-tune ------------------------------------------------------------
 cfg = get_config("bert-base").reduced().replace(num_layers=12)
-task = make_task("tnews", vocab_size=cfg.vocab_size, seq_len=SEQ)
-eng = SAMPEngine(cfg, float_dtype="float32")
-trainer = Trainer(cfg, eng.float_policy, optimizer=AdamW(lr=2e-3),
-                  tcfg=TrainConfig(steps=120, log_every=40,
-                                   compute_dtype="float32", remat=False),
-                  head=("cls", N_CLASSES))
-state = trainer.init_state(jax.random.PRNGKey(0))
-step = trainer.make_step()
-for i in range(trainer.tcfg.steps):
-    batch = {k: jnp.asarray(v) for k, v in get_batch(task, i, 32).items()}
-    p, o, e, m = step(state.params, state.opt_state, state.err_state, batch)
-    state = TrainState(p, o, e)
-    if (i + 1) % 40 == 0:
-        print(f"  ft step {i + 1}: loss={float(m['loss']):.3f}")
-params = state.params
+samp = SAMP.from_config(cfg, task="tnews", seq_len=32,
+                        float_dtype="float32", latency="roofline")
+samp.finetune(steps=120, log_every=40)
 
-# -- 2. calibrate --------------------------------------------------------------
-calib = [{"tokens": jnp.asarray(b["tokens"]),
-          "segments": jnp.asarray(b["segments"])}
-         for b in (get_batch(task, 999 + i, 16) for i in range(4))]
-stats = eng.calibrate(params, calib)
+# -- 2. calibrate ------------------------------------------------------------
+stats = samp.calibrate(num_batches=4, batch_size=16)
 print(f"calibrated {sum(len(v) for v in stats.values())} activation sites")
 
-
-# -- 3. sweep -------------------------------------------------------------------
-def predict(plan, qp):
-    @jax.jit
-    def f(tokens, segments):
-        h, _ = T.forward(qp, {"tokens": tokens, "segments": segments},
-                         cfg, plan, compute_dtype=jnp.float32)
-        return jnp.argmax(T.apply_head(h, qp, "cls"), -1)
-    return lambda b: f(jnp.asarray(b["tokens"]), jnp.asarray(b["segments"]))
-
-
-points = eng.sweep(
-    params, stats,
-    eval_fn=lambda qp, plan, pol: eval_accuracy(predict(plan, qp), task,
-                                                batches=3, batch_size=64),
-    latency_fn=lambda qp, plan, pol: encoder_latency(cfg, pol, batch=32,
-                                                     seq=SEQ),
-    stride=4)
-base = points[0]
-print("\nmode             k  accuracy  speedup")
-for pt in points:
-    print(f"{pt.mode_name:15s} {pt.k:2d}  {pt.accuracy:.4f}    "
-          f"{base.latency / pt.latency:.3f}x")
-
-# -- 4. recommend ---------------------------------------------------------------
-for rec in eng.recommend(points):
-    r = rec.recommendation
-    print(f"\nSAMP recommends [{rec.mode_name}]: k={rec.point.k} "
-          f"accuracy={r.accuracy:.4f} (drop {r.accuracy_drop:+.4f}) "
-          f"speedup={r.speedup:.3f}x")
-
-# -- 5. deploy the quant-ffn-only recommendation ---------------------------------
-chosen = next(r for r in eng.recommend(points)
-              if r.mode_name == "quant_ffn_only")
-qparams, qplan = eng.apply(params, stats, chosen.point.policy)
-acc = eval_accuracy(predict(qplan, qparams), task, batches=3, batch_size=64)
-print(f"\ndeployed {chosen.point.policy.describe()} -> dev accuracy {acc:.4f}")
+# -- 3/4/5. sweep -> recommend -> deploy, one call ---------------------------
+report = samp.autotune(stride=4, eval_batches=3, eval_batch_size=64,
+                       prefer="quant_ffn_only",
+                       save_to="/tmp/samp_tnews_bundle")
+print("\n" + report.table())
+print("\n" + report.summary())
+print(f"\ndeployed {report.chosen.point.policy.describe()} "
+      f"-> dev accuracy {report.accuracy:.4f}")
+print(f"artifact bundle: {report.artifact_path} "
+      f"(reload with SAMP.load -- no re-calibration)")

@@ -1,30 +1,29 @@
-"""Serve a SAMP-quantized LM with continuous batching.
+"""Serve a SAMP-quantized LM with continuous batching, via the toolkit.
 
     PYTHONPATH=src python examples/serve_quantized.py \
-        [--arch qwen2-0.5b] [--policy ffn] [--requests 8]
+        [--arch qwen2-0.5b] [--policy ffn] [--requests 8] [--bundle DIR]
 
-Builds the (reduced) model, PTQ-calibrates it, applies the requested SAMP
-policy (default: Quant-FFN-Only on all layers — the paper's preferred mode),
-and streams a mixed batch of generation requests through the token-level
-continuous-batching engine. Requests of different prompt lengths prefill
-and decode side-by-side in the same compiled step.
+Builds the (reduced) model through the SAMP facade, PTQ-calibrates it,
+applies the requested policy (default: Quant-FFN-Only on all layers — the
+paper's preferred mode), saves the result as a quantized artifact bundle,
+then RELOADS the bundle (no re-calibration) and streams a mixed batch of
+generation requests through the token-level continuous-batching engine.
 """
 import argparse
 import pathlib
 import sys
+import tempfile
 import time
 
-sys.path.insert(0, str(pathlib.Path(__file__).parent.parent))
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro import SAMP
 from repro.configs import get_config
 from repro.core.precision import make_policy
-from repro.core.samp import SAMPEngine
-from repro.models import transformer as T
-from repro.serve import Request, ServeEngine
+from repro.serve import Request
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="qwen2-0.5b")
@@ -32,24 +31,25 @@ ap.add_argument("--policy", default="ffn", help="float | ffn[K] | full[K]")
 ap.add_argument("--requests", type=int, default=8)
 ap.add_argument("--max-tokens", type=int, default=12)
 ap.add_argument("--slots", type=int, default=4)
+ap.add_argument("--bundle", default=None,
+                help="artifact dir (default: a temp dir)")
 args = ap.parse_args()
 
 cfg = get_config(args.arch).reduced()
-eng = SAMPEngine(cfg, float_dtype="float32")
-params = T.init_params(jax.random.PRNGKey(0), cfg, eng.float_policy)
+samp = SAMP.from_config(cfg, task="lm", seq_len=32, float_dtype="float32")
+samp.pipeline.init_params(jax.random.PRNGKey(0))
 
 policy = make_policy(cfg, args.policy, "float32")
 if policy.num_quant_ffn or policy.num_quant_mha:
-    calib = [{"tokens": jax.random.randint(jax.random.PRNGKey(i), (2, 32),
-                                           0, cfg.vocab_size)}
-             for i in range(4)]
-    stats = eng.calibrate(params, calib)
-    params, plan = eng.apply(params, stats, policy)
+    samp.calibrate(num_batches=4, batch_size=2)
+    samp.apply(policy)
     print(f"SAMP policy applied: {policy.describe()}")
-else:
-    plan = eng.float_plan
+    bundle = args.bundle or tempfile.mkdtemp(prefix="samp_bundle_")
+    samp.save(bundle)
+    samp = SAMP.load(bundle)        # deploy path: no calibration batches
+    print(f"reloaded artifact bundle from {bundle}")
 
-server = ServeEngine(cfg, params, plan, batch_slots=args.slots, max_len=128)
+server = samp.serve(batch_slots=args.slots, max_len=128)
 rng = np.random.default_rng(0)
 for i in range(args.requests):
     prompt = rng.integers(1, cfg.vocab_size,

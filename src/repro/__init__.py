@@ -1,0 +1,27 @@
+"""repro — a SAMP (self-adaptive mixed-precision PTQ) inference toolkit.
+
+The public surface is :mod:`repro.toolkit`; the facade is re-exported here:
+
+    from repro import SAMP
+    samp = SAMP.from_config("bert-base", task="tnews")
+
+Exports resolve lazily (PEP 562) so ``import repro.configs`` and friends
+stay cheap — the toolkit (and jax) only load when the facade is touched.
+"""
+_TOOLKIT_EXPORTS = ("SAMP", "AutotuneReport", "Pipeline", "TargetSpec",
+                    "save_artifact", "load_artifact", "register_target",
+                    "register_latency_backend", "toolkit")
+
+__all__ = list(_TOOLKIT_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _TOOLKIT_EXPORTS:
+        import importlib
+        toolkit = importlib.import_module("repro.toolkit")
+        return toolkit if name == "toolkit" else getattr(toolkit, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 
 def _kernel(x_ref, res_ref, b_ref, g_ref, beta_ref, h_ref, q_ref, *,
             kind: str, eps: float, x_scale: float):
@@ -60,7 +62,7 @@ def addnorm_quant(x: jax.Array, residual: jax.Array, bias: jax.Array,
         out_specs=[row, row],
         out_shape=[jax.ShapeDtypeStruct((M, D), x.dtype),
                    jax.ShapeDtypeStruct((M, D), jnp.int8)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x, residual, bias.reshape(1, D).astype(jnp.float32),

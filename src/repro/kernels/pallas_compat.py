@@ -1,0 +1,14 @@
+"""Version-compat aliases for the Pallas TPU API surface.
+
+``jax.experimental.pallas.tpu`` renamed ``TPUCompilerParams`` to
+``CompilerParams`` across JAX releases; the kernels target the new name and
+fall back to the old one here so a single code path runs on either version.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+__all__ = ["CompilerParams"]

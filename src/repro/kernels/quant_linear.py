@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 _ACT = {
     None: lambda x: x,
     "silu": jax.nn.silu,
@@ -93,7 +95,7 @@ def quant_linear(x_q: jax.Array, w_q: jax.Array, w_scale: jax.Array,
         out_shape=jax.ShapeDtypeStruct(
             (M, N), jnp.int8 if out_scale is not None else out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x_q, w_q, w_scale.reshape(1, N).astype(jnp.float32),

@@ -1,0 +1,38 @@
+"""repro.toolkit — the public API of the SAMP reproduction.
+
+The paper's modular design as importable pieces:
+
+* :mod:`~repro.toolkit.registry`  — pluggable target heads + latency backends
+* :mod:`~repro.toolkit.targets`   — cls / pair_matching / seq_labeling / lm
+* :mod:`~repro.toolkit.latency`   — roofline + wallclock latency backends
+* :mod:`~repro.toolkit.pipeline`  — tokenizer -> embedding -> encoder ->
+  target :class:`Pipeline` with ``predict()`` / ``eval()``
+* :mod:`~repro.toolkit.samp`      — the :class:`SAMP` facade
+  (``from_config`` / ``finetune`` / ``calibrate`` / ``autotune`` /
+  ``save`` / ``load`` / ``serve``)
+* :mod:`~repro.toolkit.artifact`  — deployable quantized bundles
+"""
+from repro.toolkit import artifact, latency, registry, targets  # noqa: F401
+from repro.toolkit.artifact import Artifact, load_artifact, save_artifact
+from repro.toolkit.latency import (LatencyBackend, RooflineBackend,
+                                   WallclockBackend, encoder_latency,
+                                   layer_latency, layer_ops)
+from repro.toolkit.pipeline import (EmbeddingStage, EncoderStage, Pipeline,
+                                    TargetStage, TokenizerStage)
+from repro.toolkit.registry import (LATENCY_BACKENDS, TARGETS,
+                                    get_latency_backend, get_target,
+                                    register_latency_backend,
+                                    register_target)
+from repro.toolkit.samp import SAMP, AutotuneReport
+from repro.toolkit.targets import TargetSpec
+
+__all__ = [
+    "SAMP", "AutotuneReport", "Pipeline", "TargetSpec",
+    "TokenizerStage", "EmbeddingStage", "EncoderStage", "TargetStage",
+    "Artifact", "save_artifact", "load_artifact",
+    "LatencyBackend", "RooflineBackend", "WallclockBackend",
+    "encoder_latency", "layer_latency", "layer_ops",
+    "TARGETS", "LATENCY_BACKENDS", "register_target", "get_target",
+    "register_latency_backend", "get_latency_backend",
+    "registry", "targets", "latency", "artifact",
+]

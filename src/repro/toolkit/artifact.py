@@ -1,0 +1,173 @@
+"""Quantized artifact bundles: deploy a tuned model without re-calibration.
+
+An artifact is everything SAMP chose plus everything PTQ produced, saved as
+one directory:
+
+* ``artifact.json``  — the architecture config, the chosen
+  :class:`~repro.core.precision.EncoderPolicy`, the quantization scheme,
+  the calibration stats (per-layer/site amax values), the task + target
+  head identity, and the parameter dtype;
+* ``step_00000000/`` — every parameter leaf (int8 weights, scales, float
+  residue) written through :mod:`repro.checkpoint.store` (atomic rename,
+  template-addressed leaves).
+
+Loading reconstructs the exact parameter *structure* from the metadata —
+float init -> ``ptq.apply_policy`` with the saved stats/policy gives a
+template with the same QuantizedTensor layout — then restores the saved
+leaves into it. Outputs are bit-identical to the pipeline that was saved,
+and no calibration batches are needed at deployment time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import store
+from repro.configs.base import ArchConfig, MLAConfig, MoEConfig
+from repro.core.precision import EncoderPolicy, LayerMode
+from repro.data.pipeline import TaskSpec
+from repro.models import transformer as T
+from repro.quant import ptq
+from repro.toolkit.registry import get_target
+
+METADATA = "artifact.json"
+VERSION = 1
+
+
+@dataclasses.dataclass
+class Artifact:
+    """A loaded bundle, ready to serve."""
+    cfg: ArchConfig
+    policy: EncoderPolicy
+    scheme: T.QuantScheme
+    stats: dict
+    params: dict
+    plan: tuple
+    task: Optional[TaskSpec]
+    target_name: str
+    n_out: int
+    path: str
+    compute_dtype: str = "float32"
+    tokenizer: Optional[object] = None       # WordPieceTokenizer
+
+    def pipeline(self):
+        """Rebuild the (quantized) Pipeline this artifact was saved from."""
+        from repro.toolkit.pipeline import Pipeline
+        task = self.task or TaskSpec(name="lm", kind="lm", n_classes=0,
+                                     vocab_size=self.cfg.vocab_size,
+                                     seq_len=64)
+        float_pipe = Pipeline(self.cfg, task, get_target(self.target_name),
+                              n_out=self.n_out, scheme=self.scheme,
+                              tokenizer=self.tokenizer,
+                              compute_dtype=jnp.dtype(self.compute_dtype))
+        return float_pipe.with_policy(self.params, self.plan, self.policy)
+
+
+def _cfg_to_dict(cfg: ArchConfig) -> dict:
+    return dataclasses.asdict(cfg)
+
+
+def _cfg_from_dict(d: dict) -> ArchConfig:
+    d = dict(d)
+    if d.get("moe"):
+        d["moe"] = MoEConfig(**d["moe"])
+    if d.get("mla"):
+        d["mla"] = MLAConfig(**d["mla"])
+    d["pattern"] = tuple(d["pattern"])
+    return ArchConfig(**d)
+
+
+def _param_dtype(params: dict) -> str:
+    for leaf in jax.tree_util.tree_leaves(params):
+        if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating):
+            return str(jnp.asarray(leaf).dtype)
+    return "float32"
+
+
+def save_artifact(directory: str, *, cfg: ArchConfig,
+                  policy: EncoderPolicy, stats: dict, params: dict,
+                  scheme: T.QuantScheme = T.QuantScheme(),
+                  task: Optional[TaskSpec] = None,
+                  target: str = "lm", n_out: int = 0,
+                  compute_dtype: str = "float32",
+                  tokenizer=None) -> str:
+    """Write a deployable bundle. ``params`` must be the PTQ output for
+    ``policy`` (packed under its plan); ``stats`` the calibration stats the
+    policy was applied with."""
+    os.makedirs(directory, exist_ok=True)
+    meta = {
+        "version": VERSION,
+        "arch": _cfg_to_dict(cfg),
+        "policy": {"modes": [m.value for m in policy.modes],
+                   "float_dtype": policy.float_dtype},
+        "scheme": dataclasses.asdict(scheme),
+        "stats": stats,
+        "task": dataclasses.asdict(task) if task is not None else None,
+        "target": {"name": target, "n_out": n_out},
+        "param_dtype": _param_dtype(params),
+        "compute_dtype": str(jnp.dtype(compute_dtype)),
+        "tokenizer": ({"vocab": tokenizer.vocab,
+                       "granularity": tokenizer.granularity}
+                      if tokenizer is not None else None),
+    }
+    tmp = os.path.join(directory, METADATA + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump(meta, f, indent=1)
+    os.rename(tmp, os.path.join(directory, METADATA))
+    store.save(directory, 0, params, keep_last=1)
+    return directory
+
+
+def load_artifact(directory: str) -> Artifact:
+    """Reload a bundle: rebuild the quantized parameter structure from the
+    saved policy + stats, then restore the leaves. No re-calibration."""
+    with open(os.path.join(directory, METADATA)) as f:
+        meta = json.load(f)
+    if meta["version"] != VERSION:
+        raise ValueError(f"artifact version {meta['version']} != {VERSION}")
+    cfg = _cfg_from_dict(meta["arch"])
+    policy = EncoderPolicy(
+        tuple(LayerMode(m) for m in meta["policy"]["modes"]),
+        meta["policy"]["float_dtype"])
+    scheme = T.QuantScheme(**meta["scheme"])
+    stats = {layer: {site: float(v) for site, v in sites.items()}
+             for layer, sites in meta["stats"].items()}
+    task = TaskSpec(**meta["task"]) if meta["task"] is not None else None
+    target_name = meta["target"]["name"]
+    n_out = int(meta["target"]["n_out"])
+    dtype = jnp.dtype(meta["param_dtype"])
+    tokenizer = None
+    if meta.get("tokenizer"):
+        from repro.data.tokenizer import WordPieceTokenizer
+        tokenizer = WordPieceTokenizer(meta["tokenizer"]["vocab"],
+                                       meta["tokenizer"]["granularity"])
+
+    # Structure-only template: float-init + apply_policy with the SAVED
+    # stats/policy yields the exact leaf layout that was saved, and
+    # restore() only reads leaf shapes/dtypes — so trace it abstractly
+    # (eval_shape): no weights are sampled, nothing is quantized.
+    def build_template():
+        kbase, khead = jax.random.split(jax.random.PRNGKey(0))
+        float_policy = EncoderPolicy.full_float(cfg.num_layers,
+                                                policy.float_dtype)
+        template = T.init_params(kbase, cfg, float_policy, dtype=dtype)
+        head = get_target(target_name).init(khead, cfg, n_out, dtype)
+        if head is not None:
+            template["head"] = head
+        qtemplate, _ = ptq.apply_policy(template, cfg, policy, stats,
+                                        scheme=scheme)
+        return qtemplate
+
+    qtemplate = jax.eval_shape(build_template)
+    plan = T.build_plan(cfg, policy)
+    params = store.restore(directory, 0, qtemplate)
+    return Artifact(cfg=cfg, policy=policy, scheme=scheme, stats=stats,
+                    params=params, plan=plan, task=task,
+                    target_name=target_name, n_out=n_out, path=directory,
+                    compute_dtype=meta.get("compute_dtype", "float32"),
+                    tokenizer=tokenizer)

@@ -1,0 +1,265 @@
+"""The modular inference pipeline: tokenizer -> embedding -> encoder -> target.
+
+The paper's §3.1 decomposition as first-class objects. Each stage is a thin,
+independently-usable wrapper over the substrate (``repro.data.tokenizer``,
+``repro.models.transformer``); :class:`Pipeline` composes them into exactly
+the fused forward the substrate executes, so a Pipeline prediction is
+bit-identical to the hand-rolled ``T.forward`` + ``T.apply_head`` closure it
+replaces.
+
+A Pipeline is built from an :class:`~repro.configs.base.ArchConfig` plus a
+task spec (name or :class:`~repro.data.pipeline.TaskSpec`); the target head
+is resolved from the ``TARGETS`` registry (default: the head matching the
+task kind). ``predict()`` / ``eval()`` replace the hand-rolled eval_fn
+closures of the old quickstart; ``with_policy()`` rebinds the same stages to
+quantized params under a new execution plan (the post-PTQ pipeline).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.precision import EncoderPolicy
+from repro.data.pipeline import TaskSpec, eval_accuracy, get_batch, make_task
+from repro.data.tokenizer import WordPieceTokenizer
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.toolkit.registry import get_target
+from repro.toolkit.targets import TARGET_FOR_TASK_KIND, TargetSpec
+
+
+# ---------------------------------------------------------------------------
+# stages
+# ---------------------------------------------------------------------------
+
+
+class TokenizerStage:
+    """Raw text -> model inputs. Synthetic tasks arrive pre-tokenized, so
+    the tokenizer is optional; when present (a
+    :class:`~repro.data.tokenizer.WordPieceTokenizer`) ``encode_batch``
+    produces padded ``tokens``/``segments`` ready for the embedding stage."""
+
+    def __init__(self, tokenizer: Optional[WordPieceTokenizer] = None,
+                 seq_len: int = 64):
+        self.tokenizer = tokenizer
+        self.seq_len = seq_len
+
+    def __call__(self, texts: Sequence) -> dict:
+        if self.tokenizer is None:
+            raise ValueError("pipeline built without a tokenizer; feed "
+                             "pre-tokenized batches or pass tokenizer=")
+        if texts and isinstance(texts[0], (tuple, list)):   # sentence pairs
+            ids = np.full((len(texts), self.seq_len),
+                          self.tokenizer.index["[PAD]"], np.int32)
+            seg = np.zeros((len(texts), self.seq_len), np.int32)
+            for i, (a, b) in enumerate(texts):
+                ti, si = self.tokenizer.encode_pair(a, b)
+                ti, si = ti[:self.seq_len], si[:self.seq_len]
+                ids[i, :len(ti)] = ti
+                seg[i, :len(si)] = si
+            return {"tokens": ids, "segments": seg}
+        ids, _ = self.tokenizer.encode_batch(list(texts), self.seq_len)
+        return {"tokens": ids,
+                "segments": np.zeros_like(ids)}
+
+
+class EmbeddingStage:
+    """Model inputs -> first-layer activations (token + position + segment
+    embeddings, or the modality frontend for audio/vision configs)."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    def __call__(self, params: dict, batch: dict, *, positions,
+                 compute_dtype) -> jax.Array:
+        return T.embed_inputs(params, batch, self.cfg, positions=positions,
+                              compute_dtype=compute_dtype)
+
+
+class EncoderStage:
+    """Activations -> final-norm hidden states under an execution plan (the
+    per-layer SAMP precision modes compiled into scan groups)."""
+
+    def __init__(self, cfg: ArchConfig, plan, scheme: T.QuantScheme):
+        self.cfg = cfg
+        self.plan = plan
+        self.scheme = scheme
+
+    def __call__(self, params: dict, x: jax.Array, *, positions) -> jax.Array:
+        x, _ = T.run_groups(x, params, self.cfg, self.plan, self.scheme,
+                            positions=positions)
+        return L.norm(x, params["final_norm"], self.cfg.norm_kind)
+
+
+class TargetStage:
+    """Hidden states -> task logits via the registered head."""
+
+    def __init__(self, spec: TargetSpec, n_out: int, cfg: ArchConfig):
+        self.spec = spec
+        self.n_out = n_out
+        self.cfg = cfg
+
+    def __call__(self, params: dict, hidden: jax.Array) -> jax.Array:
+        return self.spec.apply(params, hidden, self.cfg)
+
+
+# ---------------------------------------------------------------------------
+# the pipeline
+# ---------------------------------------------------------------------------
+
+
+class Pipeline:
+    """tokenizer -> embedding -> encoder -> target, under one precision
+    policy. Hold one Pipeline per deployed configuration: ``with_policy``
+    derives the quantized sibling from PTQ output."""
+
+    def __init__(self, cfg: ArchConfig, task: TaskSpec, target: TargetSpec,
+                 *, n_out: Optional[int] = None,
+                 policy: Optional[EncoderPolicy] = None,
+                 plan=None, scheme: T.QuantScheme = T.QuantScheme(),
+                 params: Optional[dict] = None,
+                 tokenizer: Optional[WordPieceTokenizer] = None,
+                 compute_dtype=jnp.float32):
+        self.cfg = cfg
+        self.task = task
+        self.policy = policy or EncoderPolicy.full_float(cfg.num_layers)
+        self.scheme = scheme
+        self.compute_dtype = compute_dtype
+        self.params = params
+        n_out = n_out if n_out is not None else max(task.n_classes, 1)
+        # -- the four stages -------------------------------------------------
+        self.tokenizer = TokenizerStage(tokenizer, task.seq_len)
+        self.embedding = EmbeddingStage(cfg)
+        self.encoder = EncoderStage(cfg, plan if plan is not None
+                                    else T.build_plan(cfg, self.policy),
+                                    scheme)
+        self.target = TargetStage(target, n_out, cfg)
+        self._jit_predict = None
+
+    @classmethod
+    def build(cls, cfg: ArchConfig, task: Union[str, TaskSpec], *,
+              target: Optional[str] = None, n_out: Optional[int] = None,
+              seq_len: int = 64, float_dtype: str = "bfloat16",
+              scheme: T.QuantScheme = T.QuantScheme(),
+              tokenizer: Optional[WordPieceTokenizer] = None,
+              compute_dtype=None) -> "Pipeline":
+        """ArchConfig + task spec -> float Pipeline (params uninitialized;
+        call ``init_params`` or let the SAMP facade fine-tune)."""
+        if isinstance(task, str):
+            task = make_task(task, vocab_size=cfg.vocab_size,
+                             seq_len=seq_len)
+        spec = get_target(target or TARGET_FOR_TASK_KIND[task.kind])
+        policy = EncoderPolicy.full_float(cfg.num_layers, float_dtype)
+        if compute_dtype is None:
+            compute_dtype = jnp.dtype(float_dtype) \
+                if float_dtype != "float16" else jnp.float32
+        return cls(cfg, task, spec, n_out=n_out, policy=policy,
+                   scheme=scheme, tokenizer=tokenizer,
+                   compute_dtype=compute_dtype)
+
+    # -- construction --------------------------------------------------------
+    @property
+    def plan(self):
+        return self.encoder.plan
+
+    def init_params(self, key, dtype=jnp.float32) -> dict:
+        """Float init: base model params + the target head's params."""
+        kbase, khead = jax.random.split(key)
+        params = T.init_params(kbase, self.cfg, self.policy, dtype=dtype)
+        head = self.target.spec.init(khead, self.cfg, self.target.n_out,
+                                     dtype)
+        if head is not None:
+            params["head"] = head
+        self.params = params
+        self._jit_predict = None
+        return params
+
+    def with_policy(self, params: dict, plan,
+                    policy: EncoderPolicy) -> "Pipeline":
+        """Same stages, new precision: bind PTQ output (params packed under
+        ``plan``) into a sibling Pipeline."""
+        return Pipeline(self.cfg, self.task, self.target.spec,
+                        n_out=self.target.n_out, policy=policy, plan=plan,
+                        scheme=self.scheme, params=params,
+                        tokenizer=self.tokenizer.tokenizer,
+                        compute_dtype=self.compute_dtype)
+
+    # -- forward / predict ---------------------------------------------------
+    def forward(self, params: dict, batch: dict) -> jax.Array:
+        """Compose the stages: batch -> logits. Numerically identical to the
+        substrate's fused ``T.forward`` (same functions, same order)."""
+        lead = batch.get("tokens", batch.get("frames"))
+        S = lead.shape[1]
+        if self.cfg.frontend == "vision" and "prefix_embeds" in batch:
+            S += batch["prefix_embeds"].shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)
+        x = self.embedding(params, batch, positions=positions,
+                           compute_dtype=self.compute_dtype)
+        hidden = self.encoder(params, x, positions=positions)
+        return self.target(params, hidden)
+
+    def _model_inputs(self, batch: dict) -> dict:
+        keep = ("tokens", "segments", "frames", "prefix_embeds")
+        return {k: jnp.asarray(v) for k, v in batch.items() if k in keep}
+
+    def predict(self, batch: dict) -> np.ndarray:
+        """Predicted class ids for one batch (class per sequence, or per
+        token for token-level targets)."""
+        if self.params is None:
+            raise ValueError("pipeline has no params; call init_params() "
+                             "or load an artifact")
+        if self._jit_predict is None:
+            spec = self.target.spec
+
+            @jax.jit
+            def fn(params, inputs):
+                return spec.predict(self.forward(params, inputs))
+            self._jit_predict = fn
+        return np.asarray(self._jit_predict(self.params,
+                                            self._model_inputs(batch)))
+
+    def predict_texts(self, texts: Sequence) -> np.ndarray:
+        """Raw strings (or (a, b) pairs for matching) -> predictions."""
+        return self.predict(self.tokenizer(texts))
+
+    # -- eval ----------------------------------------------------------------
+    def eval(self, *, batches: int = 8, batch_size: int = 64,
+             split: str = "dev") -> float:
+        """Dev-set accuracy on the pipeline's task: classification/matching/
+        tagging accuracy vs labels, next-token accuracy for LM tasks."""
+        if self.task.kind != "lm":
+            return eval_accuracy(self.predict, self.task, batches=batches,
+                                 batch_size=batch_size, split=split)
+        correct = total = 0
+        for i in range(batches):
+            b = get_batch(self.task, i, batch_size, split)
+            pred = self.predict(b)[:, :-1]
+            want = b["tokens"][:, 1:]
+            correct += int((pred == want).sum())
+            total += int(np.prod(want.shape))
+        return correct / max(total, 1)
+
+    # -- training hook -------------------------------------------------------
+    def loss_fn(self):
+        """A loss callable with the Trainer's signature
+        ``(params, batch, cfg, plan, scheme, **kw)``, routed through the
+        registered target head."""
+        spec = self.target.spec
+        if spec.name == "lm":
+            return T.lm_loss
+
+        def loss(params, batch, cfg, plan, scheme=T.QuantScheme(), **kw):
+            hidden, _ = T.forward(params, batch, cfg, plan, scheme,
+                                  return_hidden=True, **kw)
+            return spec.loss(spec.apply(params, hidden, cfg),
+                             batch["labels"])
+        return loss
+
+    def describe(self) -> str:
+        return (f"Pipeline[{self.cfg.name}] task={self.task.name} "
+                f"target={self.target.spec.name} "
+                f"policy={self.policy.describe()}")

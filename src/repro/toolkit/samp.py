@@ -1,0 +1,302 @@
+"""The one-call SAMP facade: the paper's workflow as a fluent object.
+
+    samp = SAMP.from_config("bert-base", task="tnews", latency="roofline")
+    samp.finetune(steps=120)
+    report = samp.autotune()        # calibrate -> sweep -> recommend -> apply
+    samp.save("bundle/")            # deployable artifact, no re-calibration
+    server = SAMP.load("bundle/").serve()
+
+Everything here delegates: :class:`~repro.core.samp.SAMPEngine` stays the
+behavioral core (calibrate/sweep/recommend/apply are its methods,
+unchanged); the facade contributes the Pipeline wiring, the latency-backend
+resolution, artifact persistence, and a serving handoff.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ArchConfig
+from repro.core.precision import EncoderPolicy
+from repro.core.samp import SAMPEngine, SAMPResult, SweepPoint
+from repro.data.pipeline import get_batch
+from repro.models import transformer as T
+from repro.serve import ServeEngine
+from repro.toolkit import artifact as A
+from repro.toolkit.latency import LatencyBackend
+from repro.toolkit.pipeline import Pipeline
+from repro.toolkit.registry import get_latency_backend, get_target
+from repro.train import AdamW, TrainConfig, Trainer, TrainState
+
+
+@dataclasses.dataclass
+class AutotuneReport:
+    """What autotune measured and what it chose."""
+    points: list[SweepPoint]
+    recommendations: list[SAMPResult]
+    chosen: SAMPResult
+    accuracy: float                      # deployed dev accuracy, re-measured
+    artifact_path: Optional[str] = None
+
+    def table(self) -> str:
+        base = self.points[0]
+        lines = ["mode             k  accuracy  speedup"]
+        for pt in self.points:
+            lines.append(f"{pt.mode_name:15s} {pt.k:2d}  {pt.accuracy:.4f}"
+                         f"    {base.latency / pt.latency:.3f}x")
+        return "\n".join(lines)
+
+    def summary(self) -> str:
+        lines = []
+        for rec in self.recommendations:
+            r = rec.recommendation
+            lines.append(
+                f"SAMP recommends [{rec.mode_name}]: k={rec.point.k} "
+                f"accuracy={r.accuracy:.4f} (drop {r.accuracy_drop:+.4f}) "
+                f"speedup={r.speedup:.3f}x")
+        return "\n".join(lines)
+
+
+class SAMP:
+    """End-to-end self-adaptive mixed-precision for one model + task."""
+
+    def __init__(self, pipeline: Pipeline, *,
+                 latency: Union[str, LatencyBackend] = "roofline",
+                 latency_batch: int = 32):
+        self.pipeline = pipeline
+        self.engine = SAMPEngine(pipeline.cfg, pipeline.scheme,
+                                 float_dtype=pipeline.policy.float_dtype)
+        self.latency = (get_latency_backend(latency)() if isinstance(
+            latency, str) else latency)
+        self.latency_batch = latency_batch
+        self.stats: Optional[dict] = None
+        self.points: Optional[list[SweepPoint]] = None
+        self.quantized: Optional[Pipeline] = None
+        # True for facades rebuilt from an artifact: the bundle holds only
+        # the quantized params, so the tuning workflow has no float model
+        # to operate on — predict/eval/serve only.
+        self.deploy_only = False
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def from_config(cls, arch: Union[str, ArchConfig], *,
+                    task: Optional[str] = None, target: Optional[str] = None,
+                    n_out: Optional[int] = None, seq_len: int = 64,
+                    float_dtype: str = "bfloat16",
+                    scheme: T.QuantScheme = T.QuantScheme(),
+                    latency: Union[str, LatencyBackend] = "roofline",
+                    latency_batch: int = 32, tokenizer=None) -> "SAMP":
+        """Build the float pipeline for ``arch`` (a registry name or an
+        explicit ArchConfig) on ``task`` and wrap it in the facade."""
+        cfg = arch if isinstance(arch, ArchConfig) else get_config(arch)
+        if task is None:
+            task = get_target(target).default_task if target else "tnews"
+        pipe = Pipeline.build(cfg, task, target=target, n_out=n_out,
+                              seq_len=seq_len, float_dtype=float_dtype,
+                              scheme=scheme, tokenizer=tokenizer)
+        return cls(pipe, latency=latency, latency_batch=latency_batch)
+
+    @classmethod
+    def load(cls, directory: str, *,
+             latency: Union[str, LatencyBackend] = "roofline") -> "SAMP":
+        """Reload a saved artifact: the quantized pipeline is ready to
+        predict/serve immediately — no calibration batches needed."""
+        art = A.load_artifact(directory)
+        qpipe = art.pipeline()
+        samp = cls(qpipe, latency=latency)
+        samp.stats = art.stats
+        samp.quantized = qpipe
+        samp.deploy_only = True
+        return samp
+
+    # -- convenience state ---------------------------------------------------
+    @property
+    def cfg(self) -> ArchConfig:
+        return self.pipeline.cfg
+
+    @property
+    def task(self):
+        return self.pipeline.task
+
+    @property
+    def current(self) -> Pipeline:
+        """The pipeline a caller should run: quantized when one exists."""
+        return self.quantized or self.pipeline
+
+    def predict(self, batch):
+        return self.current.predict(batch)
+
+    def eval(self, **kw) -> float:
+        return self.current.eval(**kw)
+
+    # -- step 0: fine-tune ---------------------------------------------------
+    def finetune(self, *, steps: int = 120, lr: float = 2e-3,
+                 batch_size: int = 32, log_every: int = 0, seed: int = 0,
+                 log=print) -> "SAMP":
+        """Fine-tune the float pipeline on its task (fresh init), via the
+        substrate's Trainer.fit loop."""
+        if self.deploy_only:
+            self._require_params()          # raises the deploy-only error
+        tcfg = TrainConfig(steps=steps, log_every=log_every or steps + 1,
+                           compute_dtype=str(jnp.dtype(
+                               self.pipeline.compute_dtype)),
+                           remat=False)
+        trainer = Trainer(self.cfg, self.engine.float_policy,
+                          optimizer=AdamW(lr=lr), tcfg=tcfg,
+                          scheme=self.pipeline.scheme,
+                          loss_fn=self.pipeline.loss_fn())
+        params = self.pipeline.init_params(jax.random.PRNGKey(seed))
+        state = TrainState(params, trainer.optimizer.init(params), None)
+        state = trainer.fit(
+            state,
+            lambda i: {k: jnp.asarray(v)
+                       for k, v in get_batch(self.task, i,
+                                             batch_size).items()},
+            log=log)
+        self.pipeline.params = state.params
+        self.pipeline._jit_predict = None
+        # new weights invalidate everything measured on the old ones
+        self.stats = None
+        self.points = None
+        self.quantized = None
+        return self
+
+    def _require_params(self) -> dict:
+        if self.deploy_only:
+            raise ValueError(
+                "a facade rebuilt from an artifact bundle is deploy-only "
+                "(the bundle holds just the quantized params): predict/"
+                "eval/serve are available, but finetune/calibrate/sweep/"
+                "apply need the float model — build one with "
+                "SAMP.from_config")
+        if self.pipeline.params is None:
+            raise ValueError("pipeline has no params: call finetune(), "
+                             "pipeline.init_params(), or SAMP.load()")
+        return self.pipeline.params
+
+    # -- step 1: calibration -------------------------------------------------
+    def calibrate(self, batches: Optional[Sequence[dict]] = None, *,
+                  num_batches: int = 4, batch_size: int = 16,
+                  calibrator: str = "minmax", **kw) -> dict:
+        """Observe activation ranges. Default batches come from the task's
+        training stream (disjoint indices from fine-tuning)."""
+        params = self._require_params()
+        if batches is None:
+            batches = [self.pipeline._model_inputs(
+                get_batch(self.task, 999 + i, batch_size))
+                for i in range(num_batches)]
+        self.stats = self.engine.calibrate(params, batches,
+                                           calibrator=calibrator, **kw)
+        # sweep results and applied quantization depended on the old stats
+        self.points = None
+        self.quantized = None
+        return self.stats
+
+    # -- step 2: sweep ---------------------------------------------------------
+    def sweep(self, *, stride: int = 1, eval_batches: int = 3,
+              eval_batch_size: int = 64, modes=None) -> list[SweepPoint]:
+        """Measure (accuracy, latency) over the paper's (mode, k) grid."""
+        params = self._require_params()
+        if self.stats is None:
+            self.calibrate()
+
+        def eval_fn(qp, plan, pol):
+            return self.pipeline.with_policy(qp, plan, pol).eval(
+                batches=eval_batches, batch_size=eval_batch_size)
+
+        latency_fn = self.latency.bind(
+            self.cfg, batch=self.latency_batch, seq=self.task.seq_len,
+            scheme=self.pipeline.scheme,
+            compute_dtype=self.pipeline.compute_dtype)
+        kw = {} if modes is None else {"modes": modes}
+        self.points = self.engine.sweep(params, self.stats, eval_fn,
+                                        latency_fn, stride=stride, **kw)
+        return self.points
+
+    # -- step 3: recommend -----------------------------------------------------
+    def recommend(self, *, max_latency: Optional[float] = None,
+                  min_accuracy: Optional[float] = None) -> list[SAMPResult]:
+        if self.points is None:
+            raise ValueError("no sweep points yet: call sweep() or "
+                             "autotune()")
+        return self.engine.recommend(self.points, max_latency=max_latency,
+                                     min_accuracy=min_accuracy)
+
+    # -- step 4: apply ---------------------------------------------------------
+    def apply(self, policy: EncoderPolicy) -> Pipeline:
+        """Quantize under ``policy`` and bind the deployable pipeline."""
+        params = self._require_params()
+        if self.stats is None:
+            self.calibrate()
+        qparams, qplan = self.engine.apply(params, self.stats, policy)
+        self.quantized = self.pipeline.with_policy(qparams, qplan, policy)
+        return self.quantized
+
+    # -- the one call ----------------------------------------------------------
+    def autotune(self, *, max_latency: Optional[float] = None,
+                 min_accuracy: Optional[float] = None,
+                 prefer: str = "quant_ffn_only", stride: int = 1,
+                 eval_batches: int = 3, eval_batch_size: int = 64,
+                 save_to: Optional[str] = None) -> AutotuneReport:
+        """calibrate -> sweep -> allocator recommend -> apply, one call.
+
+        ``prefer`` picks which mode's recommendation to deploy when the
+        allocator returns one per mode (default: Quant-FFN-Only, the
+        paper's preferred configuration); thresholds flow to the
+        Appendix-A policies. ``save_to`` additionally writes the deployable
+        artifact bundle. Sweep points cached by an earlier sweep()/
+        autotune() on the same weights+stats are reused (so ``stride``/
+        ``eval_*`` only apply to a fresh sweep); finetune() and
+        calibrate() invalidate the cache."""
+        self._require_params()
+        if self.stats is None:
+            self.calibrate()
+        if self.points is None:
+            self.sweep(stride=stride, eval_batches=eval_batches,
+                       eval_batch_size=eval_batch_size)
+        recs = self.recommend(max_latency=max_latency,
+                              min_accuracy=min_accuracy)
+        chosen = next((r for r in recs if r.mode_name == prefer), None)
+        if chosen is None:
+            raise KeyError(f"prefer={prefer!r} matches no recommended mode;"
+                           f" have {[r.mode_name for r in recs]}")
+        pipe = self.apply(chosen.point.policy)
+        acc = pipe.eval(batches=eval_batches, batch_size=eval_batch_size)
+        path = self.save(save_to) if save_to else None
+        return AutotuneReport(points=self.points, recommendations=recs,
+                              chosen=chosen, accuracy=acc,
+                              artifact_path=path)
+
+    # -- persistence / serving ---------------------------------------------------
+    def save(self, directory: str) -> str:
+        """Write the deployed pipeline (policy + stats + quantized params)
+        as an artifact bundle."""
+        if self.quantized is None:
+            raise ValueError("nothing to save: call autotune() or apply() "
+                             "first")
+        if self.stats is None:
+            raise ValueError("missing calibration stats")
+        return A.save_artifact(
+            directory, cfg=self.cfg, policy=self.quantized.policy,
+            stats=self.stats, params=self.quantized.params,
+            scheme=self.pipeline.scheme, task=self.task,
+            target=self.pipeline.target.spec.name,
+            n_out=self.pipeline.target.n_out,
+            compute_dtype=str(jnp.dtype(self.quantized.compute_dtype)),
+            tokenizer=self.pipeline.tokenizer.tokenizer)
+
+    def serve(self, *, batch_slots: int = 4, max_len: int = 256,
+              **kw) -> ServeEngine:
+        """Hand the current (quantized if available) pipeline to the
+        continuous-batching serving engine."""
+        pipe = self.current
+        if pipe.params is None:
+            raise ValueError("pipeline has no params to serve")
+        return ServeEngine(pipe.cfg, pipe.params, pipe.plan,
+                           scheme=pipe.scheme, batch_slots=batch_slots,
+                           max_len=max_len,
+                           compute_dtype=pipe.compute_dtype, **kw)

@@ -1,0 +1,112 @@
+"""Target heads — the pluggable last stage of a :class:`~repro.toolkit.Pipeline`.
+
+The paper's "target" layer (§3.1) handles the downstream task on top of the
+encoder output. Each head is a :class:`TargetSpec` in the ``TARGETS``
+registry; the built-ins cover the paper's CLUE-style text-processing tasks:
+
+* ``cls``          — CLS-pool classification (TNEWS/IFLYTEK-like)
+* ``pair_matching``— sentence-pair matching (AFQMC-like): the pair is packed
+                     as ``[CLS] a [SEP] b [SEP]`` with segment ids, so the
+                     head itself is the CLS-pool classifier over 2 classes
+* ``seq_labeling`` — per-token tagging (NER-like)
+* ``lm``           — next-token language modeling (no head params; logits
+                     come from the tied/untied unembedding)
+
+A custom head is one ``register_target`` call:
+
+    >>> spec = TargetSpec(name="my_head", init=my_init, apply=my_apply)
+    >>> register_target("my_head", spec)
+
+``init(key, cfg, n_out, dtype) -> head params`` and
+``apply(params, hidden, cfg) -> logits`` are the whole contract; the
+Pipeline wires loss, prediction and eval around them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.toolkit.registry import register_target
+
+InitFn = Callable[..., Optional[dict]]       # (key, cfg, n_out, dtype)
+ApplyFn = Callable[[dict, jax.Array, ArchConfig], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class TargetSpec:
+    """One downstream-task head.
+
+    ``apply`` receives the FULL pipeline params (not just the head subtree)
+    so heads like ``lm`` can reach the tied embedding table; head-local
+    params live under ``params["head"]``.
+    ``token_level`` marks per-position outputs (labels shaped (B, S)).
+    ``default_task`` names the synthetic data task this head pairs with
+    when the user doesn't specify one.
+    """
+
+    name: str
+    init: InitFn
+    apply: ApplyFn
+    token_level: bool = False
+    default_task: str = "tnews"
+
+    def predict(self, logits: jax.Array) -> jax.Array:
+        return jnp.argmax(logits, axis=-1)
+
+    def loss(self, logits: jax.Array, labels: jax.Array) -> jax.Array:
+        return T.cross_entropy(logits, labels)
+
+
+# -- built-in heads (numerics identical to repro.models.transformer) --------
+
+
+def _cls_init(key, cfg: ArchConfig, n_out: int, dtype) -> dict:
+    kp, ko = jax.random.split(key)
+    return {"pool": L.init_linear(kp, cfg.d_model, cfg.d_model, True, dtype),
+            "out": L.init_linear(ko, cfg.d_model, n_out, True, dtype)}
+
+
+def _cls_apply(params: dict, hidden: jax.Array, cfg: ArchConfig) -> jax.Array:
+    return T.apply_head(hidden, params, "cls")
+
+
+def _tok_init(key, cfg: ArchConfig, n_out: int, dtype) -> dict:
+    return {"out": L.init_linear(key, cfg.d_model, n_out, True, dtype)}
+
+
+def _tok_apply(params: dict, hidden: jax.Array, cfg: ArchConfig) -> jax.Array:
+    return T.apply_head(hidden, params, "ner")
+
+
+def _lm_init(key, cfg: ArchConfig, n_out: int, dtype) -> None:
+    return None                      # unembedding lives in the base params
+
+
+def _lm_apply(params: dict, hidden: jax.Array, cfg: ArchConfig) -> jax.Array:
+    return T.unembed(hidden, params, cfg)
+
+
+CLS = register_target("cls", TargetSpec(
+    name="cls", init=_cls_init, apply=_cls_apply, default_task="tnews"))
+
+PAIR_MATCHING = register_target("pair_matching", TargetSpec(
+    name="pair_matching", init=_cls_init, apply=_cls_apply,
+    default_task="afqmc"))
+
+SEQ_LABELING = register_target("seq_labeling", TargetSpec(
+    name="seq_labeling", init=_tok_init, apply=_tok_apply,
+    token_level=True, default_task="ner"))
+
+LM = register_target("lm", TargetSpec(
+    name="lm", init=_lm_init, apply=_lm_apply,
+    token_level=True, default_task="lm"))
+
+# data-task kind -> default head name (TaskSpec.kind values)
+TARGET_FOR_TASK_KIND = {"cls": "cls", "match": "pair_matching",
+                        "ner": "seq_labeling", "lm": "lm"}

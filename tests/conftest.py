@@ -27,3 +27,7 @@ def pytest_collection_modifyitems(config, items):
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: slow tests (subprocess)")
+    config.addinivalue_line(
+        "markers", "kernels: Pallas kernel sweeps (excluded from fast CI)")
+    config.addinivalue_line(
+        "markers", "system: end-to-end system tests (excluded from fast CI)")

@@ -1,6 +1,5 @@
 """Algorithm 1 + Appendix-A threshold policies (paper's allocator)."""
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_shim import hypothesis, st
 import pytest
 
 from repro.core import allocator as A

@@ -1,7 +1,5 @@
 """The four PTQ calibrators (paper §4.1)."""
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+from _hypothesis_shim import hypothesis, hnp, st
 import numpy as np
 import pytest
 

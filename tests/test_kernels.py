@@ -6,6 +6,8 @@ import pytest
 
 from repro.kernels import ops, ref
 
+pytestmark = pytest.mark.kernels   # excluded from the fast CI subset
+
 K0 = jax.random.PRNGKey(0)
 K1 = jax.random.PRNGKey(1)
 K2 = jax.random.PRNGKey(2)

@@ -1,6 +1,5 @@
 """Per-layer precision lattice + execution-plan grouping."""
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_shim import hypothesis, st
 import pytest
 
 from repro.configs import get_config

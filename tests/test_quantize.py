@@ -1,7 +1,5 @@
 """Unit + property tests for the int8 quantization numerics."""
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+from _hypothesis_shim import hypothesis, hnp, st
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -19,6 +19,8 @@ from repro.data import eval_accuracy, get_batch, make_task
 from repro.models import transformer as T
 from repro.train import AdamW, TrainConfig, Trainer
 
+pytestmark = pytest.mark.system   # excluded from the fast CI subset
+
 KEY = jax.random.PRNGKey(0)
 N_CLASSES = 5
 
