@@ -31,7 +31,7 @@ def main():
         summary.append((name, dt, derived))
 
     from benchmarks import (figure3_speedup, fusion_ablation, roofline,
-                            softmax_range, table2_clue)
+                            serve_throughput, softmax_range, table2_clue)
 
     def _table2():
         rows = table2_clue.main(steps=steps, stride=stride)
@@ -51,6 +51,13 @@ def main():
         fusion_ablation.main()
         return "3 fusions"
 
+    def _serve():
+        r = serve_throughput.main(quick=args.quick)
+        return (f"decode {r['decode']['requests_per_s']:.1f} req/s / "
+                f"encoder {r['encoder']['requests_per_s']:.1f} req/s; "
+                f"{r['decode']['retraces'] + r['encoder']['retraces']} "
+                f"retraces")
+
     def _roofline():
         md, analyses = roofline.table()
         print(md)
@@ -65,6 +72,7 @@ def main():
     run("figure3_speedup (paper Figure 3)", _fig3)
     run("softmax_range (paper Figure 4 / Appx B)", _softmax)
     run("fusion_ablation (paper §2.2/§3.2)", _fusion)
+    run("serve_throughput (serving stack)", _serve)
     run("roofline (deliverable g)", _roofline)
 
     print("\n=== summary csv " + "=" * 44)

@@ -1,0 +1,146 @@
+"""Serving throughput benchmark: both engines, one JSON artifact.
+
+    PYTHONPATH=src python benchmarks/serve_throughput.py [--quick] \
+        [--out BENCH_serve.json]
+
+Streams a mixed-length request load through the token-level decode engine
+(qwen2-0.5b reduced) and the encoder micro-batching engine (bert-base
+reduced), measuring per-request latency from submit to retirement, and
+emits ``BENCH_serve.json``:
+
+* ``requests_per_s`` / ``tokens_per_s`` — end-to-end engine throughput;
+* ``p50_latency_s`` / ``p95_latency_s`` — request latency percentiles;
+* ``retraces`` / ``executables`` — the runtime's compile census, proving
+  the bucketed executable cache holds (≤ 1 trace per (plan, scheme,
+  bucket) over the whole mixed-length stream).
+
+Absolute numbers are CPU-container-specific; the artifact exists so the
+perf trajectory of the serving stack is tracked per commit, and CI smokes
+it on the reduced config.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.serve import build_model
+from repro.serve import (EncoderRequest, EncoderServeEngine, Request,
+                         ServeEngine)
+from repro.toolkit.registry import get_target
+
+
+def _percentiles(latencies: list[float]) -> dict:
+    arr = np.asarray(latencies)
+    return {"p50_latency_s": float(np.percentile(arr, 50)),
+            "p95_latency_s": float(np.percentile(arr, 95))}
+
+
+def _build(arch: str, policy: str, head=None):
+    """The CLI launcher's build flow (init -> synthetic calibration ->
+    policy apply), so the benchmark measures exactly what the CLI serves."""
+    cfg = get_config(arch).reduced()
+    params, plan = build_model(cfg, policy, head=head,
+                               log=lambda *_: None)
+    return cfg, params, plan
+
+
+def bench_decode(n_requests: int, max_tokens: int, policy: str) -> dict:
+    cfg, params, plan = _build("qwen2-0.5b", policy)
+    server = ServeEngine(cfg, params, plan, batch_slots=4, max_len=64)
+    rng = np.random.default_rng(0)
+    submit_t, retire_t = {}, {}
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        size=int(rng.integers(2, 10)))
+                    .tolist(),
+                    max_tokens=max_tokens)
+            for i in range(n_requests)]
+    t0 = time.perf_counter()
+    for r in reqs:
+        submit_t[r.uid] = time.perf_counter()
+        server.submit(r)
+    while server.sched.busy:
+        for done in server.step():
+            retire_t[done.uid] = time.perf_counter()
+    wall = time.perf_counter() - t0
+    s = server.stats
+    lat = [retire_t[u] - submit_t[u] for u in retire_t]
+    return {"engine": "decode", "arch": cfg.name, "requests": n_requests,
+            "wall_s": wall,
+            "requests_per_s": n_requests / wall,
+            "tokens_per_s": s["tokens"] / wall,
+            "ticks": s["ticks"],
+            "retraces": s["runtime_traces"],
+            "executables": s["runtime_executables"],
+            **_percentiles(lat)}
+
+
+def bench_encoder(n_requests: int, policy: str) -> dict:
+    cfg, params, plan = _build("bert-base", policy, head=("cls", 15))
+    # 50 ms batching window: requests accumulate into per-bucket
+    # micro-batches instead of flushing one-by-one
+    server = EncoderServeEngine(cfg, params, plan, target=get_target("cls"),
+                                max_batch=8, max_wait=0.05, max_len=64)
+    rng = np.random.default_rng(0)
+    submit_t, retire_t = {}, {}
+    t0 = time.perf_counter()
+    for i in range(n_requests):
+        n = int(rng.integers(4, 33))
+        submit_t[i] = time.perf_counter()
+        server.submit(EncoderRequest(
+            uid=i, tokens=rng.integers(1, cfg.vocab_size, size=n).tolist()))
+        # serve full micro-batches as they form (continuous operation)
+        for done in server.step():
+            retire_t[done.uid] = time.perf_counter()
+    for done in server.step(force=True):      # drain partial buckets
+        retire_t[done.uid] = time.perf_counter()
+    wall = time.perf_counter() - t0
+    s = server.stats
+    lat = [retire_t[u] - submit_t[u] for u in retire_t]
+    return {"engine": "encoder", "arch": cfg.name, "requests": n_requests,
+            "wall_s": wall,
+            "requests_per_s": n_requests / wall,
+            "micro_batches": s["batches"],
+            "mean_batch_occupancy": s["batched_rows"] / max(s["batches"], 1),
+            "retraces": s["runtime_traces"],
+            "executables": s["runtime_executables"],
+            **_percentiles(lat)}
+
+
+def main(quick: bool = False, out: str = "BENCH_serve.json",
+         policy: str = "ffn", emit=print) -> dict:
+    n_dec, n_enc = (6, 16) if quick else (16, 48)
+    result = {
+        "benchmark": "serve_throughput",
+        "policy": policy,
+        "decode": bench_decode(n_dec, max_tokens=4 if quick else 12,
+                               policy=policy),
+        "encoder": bench_encoder(n_enc, policy=policy),
+    }
+    for side in ("decode", "encoder"):
+        r = result[side]
+        emit(f"[{side}] {r['requests']} reqs in {r['wall_s']:.2f}s "
+             f"({r['requests_per_s']:.1f} req/s) p50={r['p50_latency_s']:.3f}s "
+             f"p95={r['p95_latency_s']:.3f}s retraces={r['retraces']} "
+             f"executables={r['executables']}")
+    with open(out, "w") as f:
+        json.dump(result, f, indent=1)
+    emit(f"[serve_throughput] wrote {out}")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--policy", default="ffn")
+    args = ap.parse_args()
+    main(quick=args.quick, out=args.out, policy=args.policy)

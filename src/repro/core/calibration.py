@@ -22,10 +22,33 @@ pytorch-quantization's ``HistogramCalibrator``.
 """
 from __future__ import annotations
 
+import jax
 import numpy as np
 import jax.numpy as jnp
 
 from repro.core.quantize import INT8_MAX, EPS
+
+
+def synthetic_calibration_batches(cfg, *, num_batches: int = 4,
+                                  batch_size: int = 2, seq_len: int = 32,
+                                  seed: int = 0) -> list[dict]:
+    """Random-token calibration batches for PTQ smoke paths.
+
+    The serving launcher, the benchmarks, and the examples all calibrate on
+    synthetic uniform-token batches when no task stream exists (randomly
+    initialized weights see no distribution shift either way); this is the
+    one implementation of that batch stream. BERT-family configs get the
+    zero segment ids their embedding expects.
+    """
+    batches = []
+    for i in range(num_batches):
+        b = {"tokens": jax.random.randint(jax.random.PRNGKey(seed + i),
+                                          (batch_size, seq_len), 0,
+                                          cfg.vocab_size)}
+        if cfg.num_segments:
+            b["segments"] = jnp.zeros((batch_size, seq_len), jnp.int32)
+        batches.append(b)
+    return batches
 
 
 class Calibrator:

@@ -1,12 +1,19 @@
-"""Serving launcher CLI: SAMP-quantized continuous-batching generation.
+"""Serving launcher CLI: SAMP-quantized serving for BOTH workload types.
 
+    # token-level continuous-batching generation (decode-capable archs)
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
         --policy ffn --requests 8 --max-tokens 16
 
+    # encoder micro-batch serving (the paper's CLUE-style workload)
+    PYTHONPATH=src python -m repro.launch.serve --arch bert-base \
+        --task tnews --policy ffn --requests 16
+
 Instantiates the reduced config (this is the CPU-container path; on TPU the
 same flow runs the full config), PTQ-calibrates on synthetic batches,
-applies the requested SAMP policy, and serves a batch of random-prompt
-requests through the continuous-batching engine.
+applies the requested SAMP policy, and serves a batch of random requests —
+through the continuous-batching decode engine for ``--task lm``, or the
+dynamic micro-batching encoder engine (mixed-length requests through the
+bucketed executable cache) for classification / matching / tagging tasks.
 """
 from __future__ import annotations
 
@@ -14,45 +21,41 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.precision import EncoderPolicy, make_policy
+from repro.core.calibration import synthetic_calibration_batches
+from repro.core.precision import make_policy
 from repro.core.samp import SAMPEngine
+from repro.data.pipeline import make_task
 from repro.models import transformer as T
-from repro.serve import Request, ServeEngine
+from repro.serve import (EncoderRequest, EncoderServeEngine, Request,
+                         ServeEngine)
+from repro.toolkit.registry import get_target
+from repro.toolkit.targets import TARGET_FOR_TASK_KIND
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--policy", default="float",
-                    help="float | ffn[K] | full[K]")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--max-tokens", type=int, default=16)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
-    cfg = get_config(args.arch).reduced()
-    key = jax.random.PRNGKey(args.seed)
+def build_model(cfg, policy_name: str, *, seed: int = 0, head=None,
+                log=print):
+    """Float init + optional SAMP PTQ under the requested policy (shared
+    with benchmarks/serve_throughput.py — one build flow for everything
+    that serves a synthetic-calibrated model)."""
     eng = SAMPEngine(cfg, float_dtype="float32")
-    params = T.init_params(key, cfg, eng.float_policy)
-
-    policy = make_policy(cfg, args.policy)
+    params = T.init_params(jax.random.PRNGKey(seed), cfg,
+                           eng.float_policy, head=head)
+    policy = make_policy(cfg, policy_name)
     if policy.num_quant_ffn or policy.num_quant_mha:
-        batches = [{"tokens": jax.random.randint(
-            jax.random.PRNGKey(i), (2, 32), 0, cfg.vocab_size)}
-            for i in range(4)]
+        batches = synthetic_calibration_batches(cfg, seed=seed)
         stats = eng.calibrate(params, batches)
         params, plan = eng.apply(params, stats, policy)
-        print(f"[serve] applied SAMP policy: {policy.describe()}")
+        log(f"[serve] applied SAMP policy: {policy.describe()}")
     else:
         plan = eng.float_plan
+    return params, plan
 
+
+def serve_decode(cfg, args) -> None:
+    params, plan = build_model(cfg, args.policy, seed=args.seed)
     server = ServeEngine(cfg, params, plan, batch_slots=args.slots,
                          max_len=args.max_len, seed=args.seed)
     rng = np.random.default_rng(args.seed)
@@ -70,7 +73,64 @@ def main():
     s = server.stats
     print(f"[serve] {s['retired']} requests, {s['tokens']} tokens in "
           f"{s['ticks']} ticks, {dt:.2f}s "
-          f"({s['tokens'] / max(dt, 1e-9):.1f} tok/s CPU)")
+          f"({s['tokens'] / max(dt, 1e-9):.1f} tok/s CPU); "
+          f"{s['runtime_traces']} compile(s) / "
+          f"{s['runtime_executables']} executable(s)")
+
+
+def serve_encoder(cfg, args) -> None:
+    task = make_task(args.task, vocab_size=cfg.vocab_size,
+                     seq_len=args.max_len)
+    spec = get_target(TARGET_FOR_TASK_KIND[task.kind])
+    head_kind = "ner" if spec.token_level else "cls"
+    params, plan = build_model(cfg, args.policy, seed=args.seed,
+                               head=(head_kind, max(task.n_classes, 1)))
+    server = EncoderServeEngine(cfg, params, plan, target=spec,
+                                max_batch=args.slots, max_len=args.max_len)
+    rng = np.random.default_rng(args.seed)
+    for i in range(args.requests):
+        n = int(rng.integers(4, args.max_len // 2))
+        server.submit(EncoderRequest(
+            uid=i, tokens=rng.integers(1, cfg.vocab_size, size=n).tolist()))
+    t0 = time.perf_counter()
+    server.run()                      # flush full + partial micro-batches
+    dt = time.perf_counter() - t0
+    s = server.stats
+    print(f"[serve] task={args.task} target={spec.name}: {s['retired']} "
+          f"requests in {s['batches']} micro-batches, {dt:.2f}s "
+          f"({s['retired'] / max(dt, 1e-9):.1f} req/s CPU); "
+          f"{s['runtime_traces']} compile(s) / "
+          f"{s['runtime_executables']} executable(s)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--task", default=None,
+                    help="lm (decode engine) | tnews|iflytek|afqmc|ner "
+                         "(encoder engine); default: lm when the arch "
+                         "decodes, tnews otherwise")
+    ap.add_argument("--policy", default="float",
+                    help="float | ffn[K] | full[K]")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-tokens", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode batch slots / encoder micro-batch size")
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    if args.task is None:
+        args.task = "lm" if cfg.supports_decode else "tnews"
+    if args.task == "lm":
+        if not cfg.supports_decode:
+            raise SystemExit(f"{cfg.name} is encoder-only: pass --task "
+                             f"tnews|iflytek|afqmc|ner")
+        serve_decode(cfg, args)
+    else:
+        serve_encoder(cfg, args)
 
 
 if __name__ == "__main__":

@@ -83,7 +83,7 @@ def cache_specs(cfg: ArchConfig, plan, cell: ShapeCell,
                 cache_dtype=jnp.bfloat16):
     """Abstract decode caches (eval_shape over the real constructor)."""
     return jax.eval_shape(
-        lambda: T.init_caches(None, cfg, plan, cell.global_batch,
+        lambda: T.init_caches(cfg, plan, cell.global_batch,
                               cell.seq_len, cache_dtype))
 
 

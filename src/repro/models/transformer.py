@@ -490,9 +490,11 @@ def _layer_cache(cfg: ArchConfig, kind: BlockKind, batch: int, max_len: int,
     return X.slstm_state(cfg, batch, dtype)
 
 
-def init_caches(params_unused, cfg: ArchConfig, plan: tuple[Group, ...],
+def init_caches(cfg: ArchConfig, plan: tuple[Group, ...],
                 batch: int, max_len: int, dtype=jnp.bfloat16):
-    """Decode-cache pytree mirroring the plan's group structure."""
+    """Decode-cache pytree mirroring the plan's group structure. Cache
+    geometry is fully determined by (cfg, plan, batch, max_len) — no
+    parameters needed."""
     caches = []
     for g in plan:
         period = []

@@ -1,3 +1,9 @@
+"""The layered serving stack: Runtime (bucketed executable cache) ->
+schedulers (slots / micro-batches) -> engines (decode / encoder)."""
+from repro.serve.encoder import EncoderServeEngine
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.runtime import Runtime, bucket_size
+from repro.serve.scheduler import EncoderRequest, MicroBatcher, SlotScheduler
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "ServeEngine", "EncoderRequest", "EncoderServeEngine",
+           "Runtime", "bucket_size", "MicroBatcher", "SlotScheduler"]

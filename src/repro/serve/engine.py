@@ -1,29 +1,26 @@
-"""Continuous-batching serving engine over the SAMP-quantized model.
+"""Token-level continuous-batching engine over the SAMP-quantized model.
 
-The inference-toolkit half of the paper, end-to-end: tokenizer -> embedding
--> SAMP mixed-precision encoder -> generation / downstream task.
+The decode half of the serving stack, rebuilt on the shared layers:
 
-Scheduling model (token-level continuous batching):
+* scheduling — a :class:`~repro.serve.scheduler.SlotScheduler`: a fixed
+  number of batch *slots* (= the compiled batch size), FIFO admission,
+  per-slot token cursors, immediate slot release on retirement;
+* execution — a :class:`~repro.serve.runtime.Runtime`: the jitted decode
+  step is cached per (plan, scheme, slot-count) bucket, shared with any
+  other engine or benchmark bound to the same runtime.
 
-* a fixed number of batch *slots* = the compiled batch size;
-* every tick runs ONE compiled decode step for the whole batch with per-slot
-  positions; each active slot consumes one token — its next *prompt* token
-  while prefilling, or its last *generated* token while decoding — so new
-  requests stream in token-by-token alongside in-flight generations, no
-  wave barriers;
-* idle slots are masked via ``active`` — the model gates their cache/state
-  writes, so they are never corrupted and never retraced;
-* finished requests free their slot immediately; the slot's cache rows are
-  reset on the next admit.
-
-One executable for the entire lifecycle (prefill shares the decode program).
-A separate bulk ``prefill()`` path runs long prompts through the
-full-sequence forward for throughput when slots start empty.
+Scheduling model (token-level continuous batching): every tick runs ONE
+compiled decode step for the whole batch with per-slot positions; each
+active slot consumes one token — its next *prompt* token while prefilling,
+or its last *generated* token while decoding — so new requests stream in
+token-by-token alongside in-flight generations, no wave barriers. Idle
+slots are masked via ``active`` — the model gates their cache/state writes,
+so they are never corrupted and never retraced. Finished requests free
+their slot immediately; the slot's cache rows are reset on the next admit.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
 from typing import Optional
 
 import jax
@@ -32,6 +29,8 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import transformer as T
+from repro.serve.runtime import Runtime
+from repro.serve.scheduler import SlotScheduler
 
 
 @dataclasses.dataclass
@@ -55,9 +54,10 @@ class ServeEngine:
                  scheme: T.QuantScheme = T.QuantScheme(),
                  batch_slots: int = 4, max_len: int = 256,
                  cache_dtype=jnp.float32, compute_dtype=jnp.float32,
-                 seed: int = 0):
+                 seed: int = 0, runtime: Optional[Runtime] = None):
         if not cfg.supports_decode:
-            raise ValueError(f"{cfg.name} is encoder-only; no decode")
+            raise ValueError(f"{cfg.name} is encoder-only; no decode — "
+                             f"serve it through EncoderServeEngine")
         self.cfg = cfg
         self.params = params
         self.plan = plan
@@ -66,22 +66,25 @@ class ServeEngine:
         self.max_len = max_len
         self.compute_dtype = compute_dtype
         self.cache_dtype = cache_dtype
-        self.queue: deque[Request] = deque()
-        self.active: list[Optional[Request]] = [None] * batch_slots
-        self.cursor = np.zeros(batch_slots, np.int64)  # tokens consumed/slot
-        self.caches = T.init_caches(params, cfg, plan, batch_slots, max_len,
+        self.sched = SlotScheduler(batch_slots)
+        self.runtime = runtime or Runtime(cfg, plan, scheme=scheme,
+                                          compute_dtype=compute_dtype)
+        self.caches = T.init_caches(cfg, plan, batch_slots, max_len,
                                     cache_dtype)
-        self._fresh1 = T.init_caches(params, cfg, plan, 1, max_len,
-                                     cache_dtype)
+        self._fresh1 = T.init_caches(cfg, plan, 1, max_len, cache_dtype)
+        # resolve the executable once; ticks pay no key-hashing cost
+        self._decode = self.runtime.decode_fn(params, self.caches)
         self.rng = np.random.default_rng(seed)
-        self._decode = jax.jit(self._decode_impl)
         self._stats = {"ticks": 0, "tokens": 0, "retired": 0}
 
-    def _decode_impl(self, params, caches, tokens, pos, active):
-        logits, caches = T.decode_step(params, tokens, caches, pos, self.cfg,
-                                       self.plan, self.scheme, active=active,
-                                       compute_dtype=self.compute_dtype)
-        return logits[:, -1, :], caches
+    # back-compat views onto the extracted scheduler
+    @property
+    def queue(self):
+        return self.sched.queue
+
+    @property
+    def active(self):
+        return self.sched.active
 
     # -- request lifecycle ------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -90,14 +93,7 @@ class ServeEngine:
         if len(req.prompt) + req.max_tokens > self.max_len:
             raise ValueError(f"prompt+max_tokens exceeds max_len "
                              f"{self.max_len}")
-        self.queue.append(req)
-
-    def _admit(self) -> None:
-        for s in range(self.slots):
-            if self.active[s] is None and self.queue:
-                self.active[s] = self.queue.popleft()
-                self.cursor[s] = 0
-                self._reset_slot(s)
+        self.sched.submit(req)
 
     def _reset_slot(self, s: int) -> None:
         """Zero slot s's cache rows (leaves carry batch on axis 1, after the
@@ -110,33 +106,33 @@ class ServeEngine:
     # -- the serving loop ---------------------------------------------------------
     def step(self) -> list[Request]:
         """One engine tick = one compiled decode step for the whole batch."""
-        self._admit()
-        live = [s for s in range(self.slots) if self.active[s] is not None]
+        for s in self.sched.admit():
+            self._reset_slot(s)
+        live = self.sched.live()
         if not live:
             return []
         tokens = np.zeros((self.slots, 1), np.int32)
         pos = np.zeros(self.slots, np.int32)
         active = np.zeros(self.slots, bool)
         for s in live:
-            req = self.active[s]
-            c = int(self.cursor[s])
+            req = self.sched.active[s]
+            c = int(self.sched.cursor[s])
             tokens[s, 0] = (req.prompt[c] if c < len(req.prompt)
                             else req.output[-1])
             pos[s] = c
             active[s] = True
         logits, self.caches = self._decode(
-            self.params, self.caches, jnp.asarray(tokens),
-            jnp.asarray(pos), jnp.asarray(active))
+            self.params, self.caches, tokens, pos, active)
         logits = np.asarray(jax.device_get(logits), np.float32)
         self._stats["ticks"] += 1
         self._stats["tokens"] += len(live)
 
         retired: list[Request] = []
         for s in live:
-            req = self.active[s]
-            self.cursor[s] += 1
+            req = self.sched.active[s]
+            self.sched.cursor[s] += 1
             # still consuming the prompt (and not at its last token yet)?
-            if self.cursor[s] < len(req.prompt):
+            if self.sched.cursor[s] < len(req.prompt):
                 continue
             # this tick's logits predict the next token
             row = logits[s]
@@ -152,7 +148,7 @@ class ServeEngine:
                     or req.text_len >= self.max_len:
                 req.done = True
                 retired.append(req)
-                self.active[s] = None
+                self.sched.release(s)
                 self._stats["retired"] += 1
         return retired
 
@@ -160,12 +156,14 @@ class ServeEngine:
         """Drain queue + in-flight work; returns requests in retire order."""
         done: list[Request] = []
         ticks = 0
-        while (self.queue or any(a is not None for a in self.active)) \
-                and ticks < max_ticks:
+        while self.sched.busy and ticks < max_ticks:
             done.extend(self.step())
             ticks += 1
         return done
 
     @property
     def stats(self) -> dict:
-        return dict(self._stats)
+        s = dict(self._stats)
+        s.update({f"runtime_{k}": v for k, v in self.runtime.stats.items()
+                  if k != "buckets"})
+        return s

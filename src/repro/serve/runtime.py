@@ -1,0 +1,232 @@
+"""Bucketed executable runtime — the one compilation cache for inference.
+
+Every inference path (the token-level serving engine, the encoder serving
+engine, ``Pipeline.predict``/``eval``, and the wall-clock benchmarks) funnels
+through one :class:`Runtime`, which owns the jitted executables keyed by
+``(plan, scheme, kind, bucket_shape)``:
+
+* a Runtime instance is bound to one ``(cfg, plan, scheme, compute_dtype,
+  head)`` configuration — the static half of the key;
+* request shapes are rounded up to power-of-two *buckets* (batch and, for
+  token inputs, sequence length), so a mixed-length request stream compiles
+  at most once per bucket instead of once per shape;
+* padded positions are masked **inside** the executable: per-row position
+  ids carry ``-1`` on padding, which :func:`repro.models.layers.band_mask`
+  excludes from attention (its cache-validity check), so a padded forward
+  matches the natural-shape forward for the real rows/positions.
+
+Parameters are call arguments, not trace constants — fine-tuning or swapping
+quantized weights of the same structure reuses the compiled executables.
+
+The ``stats`` counters make the caching auditable: ``traces`` increments
+inside the traced function body (a Python side effect that only runs when
+XLA actually re-traces), so a serving log can *prove* "≤ 1 compile per
+(plan, scheme, bucket)" rather than assume it.
+
+MoE configs are the one exception to bucketing: expert capacity is derived
+from the token count, so padding would change routing for real rows. They
+run at natural shapes (still cached per shape, still counted).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+HeadFn = Callable[[dict, jax.Array], jax.Array]     # (params, hidden)->logits
+
+
+def _tree_sig(tree) -> int:
+    """Stable signature of a pytree's jit-relevant structure (leaf shapes +
+    dtypes + treedef). Two calls with different signatures would make one
+    ``jax.jit`` entry silently re-trace, so the executable cache folds this
+    into its key to keep ``traces <= executables`` honest."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return hash((treedef,
+                 tuple((jnp.shape(l), jnp.result_type(l)) for l in leaves)))
+
+
+def bucket_size(n: int, floor: int = 1, cap: Optional[int] = None) -> int:
+    """Smallest power of two >= n (and >= floor); clamped to ``cap`` when the
+    cap itself can hold ``n``."""
+    if n <= 0:
+        raise ValueError(f"bucket_size needs n >= 1, got {n}")
+    b = max(int(floor), 1)
+    while b < n:
+        b *= 2
+    if cap is not None and cap >= n:
+        b = min(b, cap)
+    return b
+
+
+class Runtime:
+    """Jitted-executable cache for one (cfg, plan, scheme) deployment.
+
+    ``head`` is the target stage: ``(full_params, hidden) -> logits`` (a
+    :class:`~repro.toolkit.targets.TargetSpec.apply`, ``T.unembed``, ...);
+    ``None`` returns the final-norm hidden states. ``token_level`` marks
+    per-position outputs so :meth:`encode` can slice padding back off.
+    """
+
+    def __init__(self, cfg: ArchConfig, plan, *,
+                 scheme: T.QuantScheme = T.QuantScheme(),
+                 compute_dtype=jnp.float32,
+                 head: Optional[HeadFn] = None, token_level: bool = False,
+                 min_batch: int = 1, min_len: int = 8,
+                 max_len: Optional[int] = None,
+                 chunk: Optional[int] = T.DEFAULT_CHUNK):
+        self.cfg = cfg
+        self.plan = plan
+        self.scheme = scheme
+        self.compute_dtype = compute_dtype
+        self.head = head
+        self.token_level = token_level
+        self.min_batch = min_batch
+        self.min_len = min_len
+        self.max_len = max_len
+        self.chunk = chunk
+        # MoE expert capacity scales with the token count: padded tokens
+        # would consume capacity and change routing for real rows.
+        self.bucketed = cfg.moe is None
+        self._exe: dict[tuple, Callable] = {}
+        self._stats = {"calls": 0, "traces": 0,
+                       "real_tokens": 0, "padded_tokens": 0}
+
+    # -- cache plumbing ------------------------------------------------------
+    def _get(self, key: tuple, build: Callable[[], Callable]) -> Callable:
+        fn = self._exe.get(key)
+        if fn is None:
+            fn = jax.jit(build())
+            self._exe[key] = fn
+        return fn
+
+    @property
+    def stats(self) -> dict:
+        """Counters + executable census. ``traces`` counts actual XLA traces
+        (incremented inside the traced body); ``executables`` the distinct
+        (kind, bucket) entries."""
+        return dict(self._stats, executables=len(self._exe),
+                    buckets=sorted({k[:3] if k[0] == "encode" else k[:2]
+                                    for k in self._exe}))
+
+    # -- encoder / full-sequence path ---------------------------------------
+    def _build_encode(self):
+        cfg, plan, scheme = self.cfg, self.plan, self.scheme
+        head, compute_dtype, chunk = self.head, self.compute_dtype, self.chunk
+
+        def fn(params, inputs, lengths):
+            self._stats["traces"] += 1          # trace-time side effect
+            if cfg.frontend == "audio":
+                S = inputs["frames"].shape[1]
+            else:
+                S = inputs["tokens"].shape[1]
+            P = (inputs["prefix_embeds"].shape[1]
+                 if cfg.frontend == "vision" and "prefix_embeds" in inputs
+                 else 0)
+            idx = jnp.arange(S + P, dtype=jnp.int32)
+            valid = idx[None, :] < (lengths + P)[:, None]       # (B, S+P)
+            # -1 on padding: band_mask's validity check drops these keys, so
+            # real rows attend only over their true tokens
+            positions = jnp.where(valid, idx[None], -1)
+            x = T.embed_inputs(params, inputs, cfg,
+                               positions=jnp.maximum(positions, 0),
+                               compute_dtype=compute_dtype)
+            x, _ = T.run_groups(x, params, cfg, plan, scheme,
+                                positions=positions, chunk=chunk)
+            x = L.norm(x, params["final_norm"], cfg.norm_kind)
+            return head(params, x) if head is not None else x
+        return fn
+
+    def encode(self, params, inputs: dict,
+               lengths: Optional[np.ndarray] = None) -> np.ndarray:
+        """Full-sequence forward through the bucketed cache.
+
+        ``inputs`` maps input name -> (B, S, ...) array (numpy or jax);
+        ``lengths`` (B,) gives each row's true token count (default: the
+        full width — no ragged padding). Pads to the (batch, length) bucket,
+        runs the cached executable, and slices the result back to the true
+        batch (and true length for token-level heads).
+        """
+        arrs = {k: np.asarray(v) for k, v in inputs.items()}
+        lead = arrs.get("tokens", arrs.get("frames"))
+        B, S = lead.shape[0], lead.shape[1]
+        if lengths is None:
+            lengths = np.full((B,), S, np.int32)
+        lengths = np.asarray(lengths, np.int32)
+        seq_bucketed = self.bucketed and "tokens" in arrs
+        Bb = bucket_size(B, self.min_batch) if self.bucketed else B
+        Sb = (bucket_size(S, self.min_len, self.max_len) if seq_bucketed
+              else S)
+        padded = {}
+        for k, v in arrs.items():
+            pad = [(0, Bb - B)] + [(0, 0)] * (v.ndim - 1)
+            if k in ("tokens", "segments"):
+                pad[1] = (0, Sb - v.shape[1])
+            padded[k] = np.pad(v, pad)
+        full_len = np.zeros((Bb,), np.int32)
+        full_len[:B] = lengths
+        # input structure (which arrays, their dtypes) and the params
+        # structure (float vs quantized leaves) are part of the compiled
+        # signature: distinct signatures get distinct cache entries
+        fn = self._get(("encode", Bb, Sb, _tree_sig(padded),
+                        _tree_sig(params)), self._build_encode)
+        out = fn(params, {k: jnp.asarray(v) for k, v in padded.items()},
+                 jnp.asarray(full_len))
+        self._stats["calls"] += 1
+        self._stats["real_tokens"] += int(lengths.sum())
+        self._stats["padded_tokens"] += Bb * Sb - int(lengths.sum())
+        out = np.asarray(jax.device_get(out))
+        out = out[:B]
+        if self.token_level and out.ndim >= 2:
+            P = (arrs["prefix_embeds"].shape[1]
+                 if self.cfg.frontend == "vision" and "prefix_embeds" in arrs
+                 else 0)
+            out = out[:, :P + S]
+        return out
+
+    # -- decode / token-level path ------------------------------------------
+    def _build_decode(self):
+        cfg, plan, scheme = self.cfg, self.plan, self.scheme
+        compute_dtype = self.compute_dtype
+
+        def fn(params, caches, tokens, pos, active):
+            self._stats["traces"] += 1          # trace-time side effect
+            logits, caches = T.decode_step(
+                params, tokens, caches, pos, cfg, plan, scheme,
+                active=active, compute_dtype=compute_dtype)
+            return logits[:, -1, :], caches
+        return fn
+
+    def decode_fn(self, params, caches):
+        """Resolve the decode executable for this (slot count, cache
+        geometry, params structure) once — cached per batch-slot count +
+        cache geometry + params signature, so engines with different
+        max_len/cache_dtype can share one runtime without colliding. The
+        returned callable is the per-tick hot path: no signature hashing
+        per token."""
+        key = ("decode", self._decode_batch(caches),
+               _tree_sig(caches), _tree_sig(params))
+        fn = self._get(key, self._build_decode)
+
+        def step(params, caches, tokens, pos, active):
+            self._stats["calls"] += 1
+            return fn(params, caches, jnp.asarray(tokens),
+                      jnp.asarray(pos), jnp.asarray(active))
+        return step
+
+    @staticmethod
+    def _decode_batch(caches) -> int:
+        """Slot count from the cache geometry (leaves are (steps, B, ...))."""
+        return int(jax.tree_util.tree_leaves(caches)[0].shape[1])
+
+    def decode(self, params, caches, tokens, pos, active):
+        """One decode step via a per-call key resolution — convenience for
+        one-off callers; engines bind :meth:`decode_fn` instead."""
+        return self.decode_fn(params, caches)(params, caches, tokens, pos,
+                                              active)

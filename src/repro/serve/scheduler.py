@@ -1,0 +1,130 @@
+"""Scheduling layer shared by both serving engines.
+
+Two admission disciplines over one queue abstraction:
+
+* :class:`SlotScheduler` — the continuous-batching machinery extracted from
+  the decode engine: a fixed number of batch *slots* (= the compiled batch
+  size), FIFO admission into free slots, per-slot token cursors, immediate
+  release on retirement. The engine owns model state (caches, sampling);
+  the scheduler owns *which request runs where*.
+
+* :class:`MicroBatcher` — dynamic micro-batching for encoder requests:
+  per-length-bucket FIFO queues, flushed when a bucket reaches
+  ``max_batch`` or its oldest request has waited ``max_wait`` seconds
+  (latency bound), or on demand (drain). Requests of similar length batch
+  together so padding waste stays bounded by the bucket geometry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from repro.serve.runtime import bucket_size
+
+
+@dataclasses.dataclass
+class EncoderRequest:
+    """One encoder-workload request (classification / matching / tagging).
+
+    ``tokens`` is the packed input ids (pairs arrive pre-packed as
+    ``[CLS] a [SEP] b [SEP]`` with ``segments``); the engine fills
+    ``logits`` / ``prediction`` at retirement.
+    """
+    uid: int
+    tokens: list[int]
+    segments: Optional[list[int]] = None
+    # engine-filled:
+    arrival: Optional[float] = None
+    logits: Optional[np.ndarray] = None
+    prediction: Optional[np.ndarray] = None
+    done: bool = False
+
+
+class SlotScheduler:
+    """Slot/admission/queue bookkeeping for token-level continuous batching.
+
+    ``active[s]`` holds the request occupying slot ``s`` (None = free);
+    ``cursor[s]`` counts the tokens that request has consumed (prompt then
+    generated). The engine resets model state for slots returned by
+    :meth:`admit` and calls :meth:`release` when a request retires.
+    """
+
+    def __init__(self, slots: int):
+        self.slots = slots
+        self.queue: deque = deque()
+        self.active: list = [None] * slots
+        self.cursor = np.zeros(slots, np.int64)
+
+    def submit(self, req) -> None:
+        self.queue.append(req)
+
+    def admit(self) -> list[int]:
+        """Fill free slots FIFO; returns the newly-occupied slot ids (their
+        per-slot state must be reset by the caller)."""
+        newly = []
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                self.active[s] = self.queue.popleft()
+                self.cursor[s] = 0
+                newly.append(s)
+        return newly
+
+    def live(self) -> list[int]:
+        return [s for s in range(self.slots) if self.active[s] is not None]
+
+    def release(self, s: int) -> None:
+        self.active[s] = None
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or any(a is not None for a in self.active)
+
+
+class MicroBatcher:
+    """Per-bucket queues with size- and age-triggered flushing.
+
+    ``submit`` files a request under ``bucket_size(len(tokens))``;
+    ``ready`` pops every batch that is due: a bucket with >= ``max_batch``
+    requests flushes a full batch, a bucket whose head has waited
+    >= ``max_wait`` flushes whatever is there, and ``force=True`` drains
+    everything (shutdown / synchronous callers).
+    """
+
+    def __init__(self, *, max_batch: int = 8, max_wait: float = 0.0,
+                 min_len: int = 8, max_len: Optional[int] = None):
+        self.max_batch = max_batch
+        self.max_wait = max_wait
+        self.min_len = min_len
+        self.max_len = max_len
+        self._queues: dict[int, deque] = {}
+
+    def bucket(self, length: int) -> int:
+        return bucket_size(length, self.min_len, self.max_len)
+
+    def submit(self, req: EncoderRequest, now: Optional[float] = None) -> int:
+        """File ``req``; returns the length bucket it landed in."""
+        b = self.bucket(len(req.tokens))
+        req.arrival = time.monotonic() if now is None else now
+        self._queues.setdefault(b, deque()).append(req)
+        return b
+
+    def ready(self, now: Optional[float] = None,
+              force: bool = False) -> list[tuple[int, list[EncoderRequest]]]:
+        """Pop and return every due batch as (length_bucket, requests)."""
+        now = time.monotonic() if now is None else now
+        out = []
+        for blen in sorted(self._queues):
+            q = self._queues[blen]
+            while q and (force or len(q) >= self.max_batch
+                         or now - q[0].arrival >= self.max_wait):
+                out.append((blen, [q.popleft()
+                                   for _ in range(min(self.max_batch,
+                                                      len(q)))]))
+        return out
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self._queues.values())

@@ -28,6 +28,7 @@ from repro.data.pipeline import TaskSpec, eval_accuracy, get_batch, make_task
 from repro.data.tokenizer import WordPieceTokenizer
 from repro.models import layers as L
 from repro.models import transformer as T
+from repro.serve.runtime import Runtime
 from repro.toolkit.registry import get_target
 from repro.toolkit.targets import TARGET_FOR_TASK_KIND, TargetSpec
 
@@ -138,7 +139,7 @@ class Pipeline:
                                     else T.build_plan(cfg, self.policy),
                                     scheme)
         self.target = TargetStage(target, n_out, cfg)
-        self._jit_predict = None
+        self._runtime: Optional[Runtime] = None
 
     @classmethod
     def build(cls, cfg: ArchConfig, task: Union[str, TaskSpec], *,
@@ -166,6 +167,21 @@ class Pipeline:
     def plan(self):
         return self.encoder.plan
 
+    @property
+    def runtime(self) -> Runtime:
+        """The bucketed-executable runtime this pipeline predicts through
+        (and hands to the serving engines, so predict/serve/benchmark share
+        one compilation cache). Params are call arguments — fine-tuning
+        does not invalidate it."""
+        if self._runtime is None:
+            spec, cfg = self.target.spec, self.cfg
+            self._runtime = Runtime(
+                cfg, self.plan, scheme=self.scheme,
+                compute_dtype=self.compute_dtype,
+                head=lambda p, h: spec.apply(p, h, cfg),
+                token_level=spec.token_level)
+        return self._runtime
+
     def init_params(self, key, dtype=jnp.float32) -> dict:
         """Float init: base model params + the target head's params."""
         kbase, khead = jax.random.split(key)
@@ -175,7 +191,6 @@ class Pipeline:
         if head is not None:
             params["head"] = head
         self.params = params
-        self._jit_predict = None
         return params
 
     def with_policy(self, params: dict, plan,
@@ -206,21 +221,19 @@ class Pipeline:
         keep = ("tokens", "segments", "frames", "prefix_embeds")
         return {k: jnp.asarray(v) for k, v in batch.items() if k in keep}
 
-    def predict(self, batch: dict) -> np.ndarray:
-        """Predicted class ids for one batch (class per sequence, or per
-        token for token-level targets)."""
+    def predict_logits(self, batch: dict) -> np.ndarray:
+        """Task logits for one batch, via the runtime's bucketed executable
+        cache (pads to the (batch, length) bucket; no retrace per shape)."""
         if self.params is None:
             raise ValueError("pipeline has no params; call init_params() "
                              "or load an artifact")
-        if self._jit_predict is None:
-            spec = self.target.spec
+        return self.runtime.encode(self.params, self._model_inputs(batch))
 
-            @jax.jit
-            def fn(params, inputs):
-                return spec.predict(self.forward(params, inputs))
-            self._jit_predict = fn
-        return np.asarray(self._jit_predict(self.params,
-                                            self._model_inputs(batch)))
+    def predict(self, batch: dict) -> np.ndarray:
+        """Predicted class ids for one batch (class per sequence, or per
+        token for token-level targets)."""
+        return np.asarray(self.target.spec.predict(
+            self.predict_logits(batch)))
 
     def predict_texts(self, texts: Sequence) -> np.ndarray:
         """Raw strings (or (a, b) pairs for matching) -> predictions."""

@@ -25,7 +25,7 @@ from repro.core.precision import EncoderPolicy
 from repro.core.samp import SAMPEngine, SAMPResult, SweepPoint
 from repro.data.pipeline import get_batch
 from repro.models import transformer as T
-from repro.serve import ServeEngine
+from repro.serve import EncoderServeEngine, ServeEngine
 from repro.toolkit import artifact as A
 from repro.toolkit.latency import LatencyBackend
 from repro.toolkit.pipeline import Pipeline
@@ -158,7 +158,6 @@ class SAMP:
                                              batch_size).items()},
             log=log)
         self.pipeline.params = state.params
-        self.pipeline._jit_predict = None
         # new weights invalidate everything measured on the old ones
         self.stats = None
         self.points = None
@@ -290,13 +289,28 @@ class SAMP:
             tokenizer=self.pipeline.tokenizer.tokenizer)
 
     def serve(self, *, batch_slots: int = 4, max_len: int = 256,
-              **kw) -> ServeEngine:
-        """Hand the current (quantized if available) pipeline to the
-        continuous-batching serving engine."""
+              **kw) -> Union[ServeEngine, EncoderServeEngine]:
+        """Hand the current (quantized if available) pipeline to a serving
+        engine, dispatching on the workload: decode-capable configs with an
+        LM target get the token-level continuous-batching engine;
+        encoder-only configs (and any non-LM target head) get the
+        micro-batching encoder engine. Both run over the same scheduler +
+        bucketed-runtime layers; the encoder engine shares the pipeline's
+        runtime, so predict() and serving hit one executable cache.
+        ``batch_slots`` sets the compiled slot count (decode) / the
+        micro-batch flush size (encoder)."""
         pipe = self.current
         if pipe.params is None:
             raise ValueError("pipeline has no params to serve")
-        return ServeEngine(pipe.cfg, pipe.params, pipe.plan,
-                           scheme=pipe.scheme, batch_slots=batch_slots,
-                           max_len=max_len,
-                           compute_dtype=pipe.compute_dtype, **kw)
+        if pipe.cfg.supports_decode and pipe.target.spec.name == "lm":
+            return ServeEngine(pipe.cfg, pipe.params, pipe.plan,
+                               scheme=pipe.scheme, batch_slots=batch_slots,
+                               max_len=max_len,
+                               compute_dtype=pipe.compute_dtype, **kw)
+        return EncoderServeEngine(pipe.cfg, pipe.params, pipe.plan,
+                                  target=pipe.target.spec,
+                                  scheme=pipe.scheme,
+                                  max_batch=kw.pop("max_batch", batch_slots),
+                                  max_len=max_len,
+                                  compute_dtype=pipe.compute_dtype,
+                                  runtime=pipe.runtime, **kw)

@@ -79,7 +79,7 @@ def test_decode_matches_prefill(arch):
     toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
     full, _ = T.forward(params, {"tokens": toks}, cfg, plan,
                         compute_dtype=jnp.float32, chunk=None)
-    caches = T.init_caches(params, cfg, plan, B, S, jnp.float32)
+    caches = T.init_caches(cfg, plan, B, S, jnp.float32)
     outs = []
     for t in range(S):
         lg, caches = T.decode_step(params, toks[:, t:t + 1], caches, t, cfg,
@@ -102,7 +102,7 @@ def test_prefill_then_decode_continues():
     full, _ = T.forward(params, {"tokens": toks}, cfg, plan,
                         compute_dtype=jnp.float32, chunk=None)
     # prefill S, then decode token S
-    caches = T.init_caches(params, cfg, plan, B, S + 1, jnp.float32)
+    caches = T.init_caches(cfg, plan, B, S + 1, jnp.float32)
     _, caches = T.forward(params, {"tokens": toks[:, :S]}, cfg, plan,
                           caches=caches, pos=0, compute_dtype=jnp.float32,
                           chunk=None)
@@ -126,7 +126,7 @@ def test_sliding_window_ring_buffer_decode():
     full, _ = T.forward(params, {"tokens": toks}, cfg, plan,
                         compute_dtype=jnp.float32, chunk=None)
     # ring cache bounded by the window (max_len = S but window = 4)
-    caches = T.init_caches(params, cfg, plan, B, S, jnp.float32)
+    caches = T.init_caches(cfg, plan, B, S, jnp.float32)
     # ring buffers should be window-sized, not S-sized
     kv_leaf = jax.tree_util.tree_leaves(caches)[0]
     outs = []

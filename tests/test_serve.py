@@ -14,7 +14,7 @@ KEY = jax.random.PRNGKey(0)
 
 
 def greedy_reference(cfg, params, plan, prompt, n, max_len=64):
-    caches = T.init_caches(params, cfg, plan, 1, max_len, jnp.float32)
+    caches = T.init_caches(cfg, plan, 1, max_len, jnp.float32)
     out = []
     for t in range(len(prompt) + n - 1):
         tok = prompt[t] if t < len(prompt) else out[-1]
