@@ -43,17 +43,20 @@ def _percentiles(latencies: list[float]) -> dict:
             "p95_latency_s": float(np.percentile(arr, 95))}
 
 
-def _build(arch: str, policy: str, head=None):
+def _build(arch: str, policy: str, head=None, plan_file=None):
     """The CLI launcher's build flow (init -> synthetic calibration ->
-    policy apply), so the benchmark measures exactly what the CLI serves."""
+    plan/policy apply), so the benchmark measures exactly what the CLI
+    serves. ``plan_file`` (a saved PrecisionPlan JSON) overrides the named
+    policy, mirroring the launcher's ``--plan``."""
     cfg = get_config(arch).reduced()
-    params, plan = build_model(cfg, policy, head=head,
+    params, plan = build_model(cfg, policy, head=head, plan_file=plan_file,
                                log=lambda *_: None)
     return cfg, params, plan
 
 
-def bench_decode(n_requests: int, max_tokens: int, policy: str) -> dict:
-    cfg, params, plan = _build("qwen2-0.5b", policy)
+def bench_decode(n_requests: int, max_tokens: int, policy: str,
+                 plan_file=None) -> dict:
+    cfg, params, plan = _build("qwen2-0.5b", policy, plan_file=plan_file)
     server = ServeEngine(cfg, params, plan, batch_slots=4, max_len=64)
     rng = np.random.default_rng(0)
     submit_t, retire_t = {}, {}
@@ -83,8 +86,9 @@ def bench_decode(n_requests: int, max_tokens: int, policy: str) -> dict:
             **_percentiles(lat)}
 
 
-def bench_encoder(n_requests: int, policy: str) -> dict:
-    cfg, params, plan = _build("bert-base", policy, head=("cls", 15))
+def bench_encoder(n_requests: int, policy: str, plan_file=None) -> dict:
+    cfg, params, plan = _build("bert-base", policy, head=("cls", 15),
+                               plan_file=plan_file)
     # 50 ms batching window: requests accumulate into per-bucket
     # micro-batches instead of flushing one-by-one
     server = EncoderServeEngine(cfg, params, plan, target=get_target("cls"),
@@ -116,14 +120,21 @@ def bench_encoder(n_requests: int, policy: str) -> dict:
 
 
 def main(quick: bool = False, out: str = "BENCH_serve.json",
-         policy: str = "ffn", emit=print) -> dict:
+         policy: str = "ffn", plan_file=None, emit=print) -> dict:
     n_dec, n_enc = (6, 16) if quick else (16, 48)
+    plan_fp = None
+    if plan_file is not None:
+        from repro.core.plan import PrecisionPlan
+        plan_fp = PrecisionPlan.load(plan_file).fingerprint()
     result = {
         "benchmark": "serve_throughput",
         "policy": policy,
+        "plan_file": plan_file,
+        "plan_fingerprint": plan_fp,
         "decode": bench_decode(n_dec, max_tokens=4 if quick else 12,
-                               policy=policy),
-        "encoder": bench_encoder(n_enc, policy=policy),
+                               policy=policy, plan_file=plan_file),
+        "encoder": bench_encoder(n_enc, policy=policy,
+                                 plan_file=plan_file),
     }
     for side in ("decode", "encoder"):
         r = result[side]
@@ -142,5 +153,10 @@ if __name__ == "__main__":
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default="BENCH_serve.json")
     ap.add_argument("--policy", default="ffn")
+    ap.add_argument("--plan", default=None,
+                    help="saved PrecisionPlan JSON (overrides --policy; "
+                         "the same plan is applied to both engines' archs "
+                         "and must match their layer counts)")
     args = ap.parse_args()
-    main(quick=args.quick, out=args.out, policy=args.policy)
+    main(quick=args.quick, out=args.out, policy=args.policy,
+         plan_file=args.plan)

@@ -29,12 +29,18 @@ stats = samp.calibrate(num_batches=4, batch_size=16)
 print(f"calibrated {sum(len(v) for v in stats.values())} activation sites")
 
 # -- 3/4/5. sweep -> recommend -> deploy, one call ---------------------------
-report = samp.autotune(stride=4, eval_batches=3, eval_batch_size=64,
-                       prefer="quant_ffn_only",
+report = samp.autotune(strategy="prefix_grid", stride=4, eval_batches=3,
+                       eval_batch_size=64, prefer="quant_ffn_only",
                        save_to="/tmp/samp_tnews_bundle")
 print("\n" + report.table())
 print("\n" + report.summary())
-print(f"\ndeployed {report.chosen.point.policy.describe()} "
+print(f"\ndeployed {report.plan.describe()} "
       f"-> dev accuracy {report.accuracy:.4f}")
 print(f"artifact bundle: {report.artifact_path} "
       f"(reload with SAMP.load -- no re-calibration)")
+
+# the chosen PrecisionPlan is itself a deployable, serializable artifact:
+report.plan.save("/tmp/samp_tnews_plan.json")
+print("precision plan: /tmp/samp_tnews_plan.json "
+      f"(fingerprint {report.plan.fingerprint()[:12]}; lint with "
+      f"python -m repro.toolkit.plan_lint)")

@@ -1,13 +1,22 @@
-"""Serve a SAMP-quantized LM with continuous batching, via the toolkit.
+"""Serve a SAMP-quantized LM from a saved PrecisionPlan, via the toolkit.
 
     PYTHONPATH=src python examples/serve_quantized.py \
-        [--arch qwen2-0.5b] [--policy ffn] [--requests 8] [--bundle DIR]
+        [--arch qwen2-0.5b] [--plan plan.json] [--requests 8] [--bundle DIR]
 
-Builds the (reduced) model through the SAMP facade, PTQ-calibrates it,
-applies the requested policy (default: Quant-FFN-Only on all layers — the
-paper's preferred mode), saves the result as a quantized artifact bundle,
-then RELOADS the bundle (no re-calibration) and streams a mixed batch of
-generation requests through the token-level continuous-batching engine.
+The deployment flow is plan-first: precision is a declarative
+``plan.json`` (write one by hand, with ``PrecisionPlan.save``, or from
+``SAMP.autotune(...).plan.save(...)``) — not a policy constructed in code.
+This script
+
+1. loads the plan (``--plan``; without one it writes a demo plan first:
+   Quant-FFN-Only on every layer — the paper's preferred mode — with a
+   percentile calibrator on the FFN input block),
+2. lints it against the target architecture,
+3. PTQ-calibrates through the SAMP facade honoring the plan's per-block
+   calibrator choices, applies the plan, and saves an artifact bundle,
+4. RELOADS the bundle (no re-calibration), checks the plan fingerprint
+   survived byte-identically, and streams a mixed batch of generation
+   requests through the token-level continuous-batching engine.
 """
 import argparse
 import pathlib
@@ -20,14 +29,17 @@ sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
 import jax
 import numpy as np
 
-from repro import SAMP
+from repro import SAMP, PrecisionPlan
 from repro.configs import get_config
-from repro.core.precision import make_policy
+from repro.core.plan import LayerPlan, QuantSpec
 from repro.serve import Request
+from repro.toolkit.plan_lint import lint
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="qwen2-0.5b")
-ap.add_argument("--policy", default="ffn", help="float | ffn[K] | full[K]")
+ap.add_argument("--plan", default=None,
+                help="saved PrecisionPlan JSON (default: write + use a "
+                     "demo ffn-only plan)")
 ap.add_argument("--requests", type=int, default=8)
 ap.add_argument("--max-tokens", type=int, default=12)
 ap.add_argument("--slots", type=int, default=4)
@@ -36,19 +48,39 @@ ap.add_argument("--bundle", default=None,
 args = ap.parse_args()
 
 cfg = get_config(args.arch).reduced()
+
+# -- 1. the plan file ---------------------------------------------------------
+if args.plan is None:
+    ffn_spec = QuantSpec(weight="int8_per_channel", act="int8_per_tensor",
+                         calibrator="percentile")
+    demo = PrecisionPlan.uniform(
+        cfg.num_layers, LayerPlan(ffn_in=ffn_spec, ffn_out=ffn_spec),
+        float_dtype="float32")
+    args.plan = str(pathlib.Path(tempfile.mkdtemp(prefix="samp_plan_"))
+                    / "plan.json")
+    demo.save(args.plan)
+    print(f"wrote demo plan to {args.plan}")
+
+# -- 2. lint, then load -------------------------------------------------------
+plan = lint(args.plan, num_layers=cfg.num_layers)
+
+# -- 3. calibrate + apply + bundle -------------------------------------------
 samp = SAMP.from_config(cfg, task="lm", seq_len=32, float_dtype="float32")
 samp.pipeline.init_params(jax.random.PRNGKey(0))
 
-policy = make_policy(cfg, args.policy, "float32")
-if policy.num_quant_ffn or policy.num_quant_mha:
-    samp.calibrate(num_batches=4, batch_size=2)
-    samp.apply(policy)
-    print(f"SAMP policy applied: {policy.describe()}")
+if plan.num_quant_ffn or plan.num_quant_mha:
+    samp.calibrate(num_batches=4, batch_size=2, precision=plan)
+    samp.apply(plan)
+    print(f"SAMP plan applied: {plan.describe()}")
     bundle = args.bundle or tempfile.mkdtemp(prefix="samp_bundle_")
     samp.save(bundle)
     samp = SAMP.load(bundle)        # deploy path: no calibration batches
-    print(f"reloaded artifact bundle from {bundle}")
+    reloaded = samp.current.precision
+    assert reloaded.fingerprint() == plan.fingerprint(), "plan drifted!"
+    print(f"reloaded artifact bundle from {bundle} "
+          f"(plan fingerprint {reloaded.fingerprint()[:12]} intact)")
 
+# -- 4. serve -----------------------------------------------------------------
 server = samp.serve(batch_slots=args.slots, max_len=128)
 rng = np.random.default_rng(0)
 for i in range(args.requests):

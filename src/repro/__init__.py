@@ -9,6 +9,8 @@ Exports resolve lazily (PEP 562) so ``import repro.configs`` and friends
 stay cheap — the toolkit (and jax) only load when the facade is touched.
 """
 _TOOLKIT_EXPORTS = ("SAMP", "AutotuneReport", "Pipeline", "TargetSpec",
+                    "PrecisionPlan", "LayerPlan", "QuantSpec",
+                    "SEARCH_STRATEGIES", "register_strategy",
                     "save_artifact", "load_artifact", "register_target",
                     "register_latency_backend", "toolkit")
 

@@ -1,0 +1,357 @@
+"""PrecisionPlan — the declarative, serializable precision API.
+
+The paper's "self-adaptive mixed-precision" decision is, in full generality,
+a choice *per layer, per GEMM block*: which weights go int8, how their
+activations are scaled, and which calibrator produced the scales. The
+:class:`EncoderPolicy` lattice in :mod:`repro.core.precision` only spans the
+paper's three per-layer modes; a :class:`PrecisionPlan` is the superset that
+every consumer (PTQ, the search strategies, the artifact bundles, the
+serving runtime's executable cache) now speaks:
+
+* a plan is an immutable tree ``PrecisionPlan -> LayerPlan -> QuantSpec``;
+* each layer exposes four *blocks* — ``qkv`` (the MHA input projections and
+  the score/value batched matmuls), ``attn_out`` (the output projection),
+  ``ffn_in`` (up/gate projections), ``ffn_out`` (down projection). Non-attn
+  bodies (RG-LRU / xLSTM) map their input-side GEMMs to ``ffn_in`` and
+  output-side GEMMs to ``ffn_out``;
+* a :class:`QuantSpec` names the weight scheme (``float`` /
+  ``int8_per_channel`` / ``int8_per_tensor``), the activation scheme
+  (``float`` / ``int8_per_tensor`` static / ``int8_per_token`` dynamic) and
+  the calibrator (:data:`repro.core.calibration.CALIBRATORS`) that turns
+  observed ranges into scales;
+* ``fingerprint()`` is a stable content hash of the canonical JSON form —
+  the one identity used for executable-cache keys, artifact metadata, and
+  save → load equality checks.
+
+``EncoderPolicy`` remains as a thin view for the paper's mode lattice;
+:func:`plan_from_policy` converts (and :meth:`PrecisionPlan.from_policy`
+does the same with a deprecation warning for external callers).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import warnings
+from typing import Mapping, Optional, Sequence, Union
+
+from repro.core.precision import EncoderPolicy, LayerMode
+
+SCHEMA_VERSION = 1
+
+WEIGHT_SCHEMES = ("float", "int8_per_channel", "int8_per_tensor")
+ACT_SCHEMES = ("float", "int8_per_tensor", "int8_per_token")
+BLOCKS = ("qkv", "attn_out", "ffn_in", "ffn_out")
+FLOAT_DTYPES = ("float32", "bfloat16", "float16")
+
+
+def _known_calibrators() -> tuple:
+    # local import: calibration pulls in jax; plan validation must stay light
+    from repro.core.calibration import CALIBRATORS
+    return tuple(sorted(CALIBRATORS))
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Numeric scheme of one GEMM block: weight + activation + calibrator.
+
+    ``weight == 'float'`` iff ``act == 'float'`` — the substrate's GEMMs are
+    either float or W8A8 (see :func:`repro.models.layers.dense`); there is no
+    mixed W8Afloat path.
+    """
+
+    weight: str = "float"
+    act: str = "float"
+    calibrator: str = "minmax"
+
+    def __post_init__(self):
+        if self.weight not in WEIGHT_SCHEMES:
+            raise ValueError(f"weight scheme {self.weight!r} not in "
+                             f"{WEIGHT_SCHEMES}")
+        if self.act not in ACT_SCHEMES:
+            raise ValueError(f"act scheme {self.act!r} not in {ACT_SCHEMES}")
+        if (self.weight == "float") != (self.act == "float"):
+            raise ValueError(
+                f"weight={self.weight!r} with act={self.act!r}: the GEMM "
+                f"substrate is float or W8A8; quantize both or neither")
+        if self.calibrator not in _known_calibrators():
+            raise ValueError(f"unknown calibrator {self.calibrator!r}; "
+                             f"have {_known_calibrators()}")
+
+    @property
+    def quantized(self) -> bool:
+        return self.weight != "float"
+
+    @property
+    def static_acts(self) -> bool:
+        return self.act == "int8_per_tensor"
+
+    def to_dict(self) -> dict:
+        return {"weight": self.weight, "act": self.act,
+                "calibrator": self.calibrator}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "QuantSpec":
+        extra = set(d) - {"weight", "act", "calibrator"}
+        if extra:
+            raise ValueError(f"unknown QuantSpec fields {sorted(extra)}")
+        return cls(**dict(d))
+
+
+FLOAT_SPEC = QuantSpec()
+INT8_SPEC = QuantSpec(weight="int8_per_channel", act="int8_per_tensor")
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """Per-block QuantSpecs for one layer."""
+
+    qkv: QuantSpec = FLOAT_SPEC
+    attn_out: QuantSpec = FLOAT_SPEC
+    ffn_in: QuantSpec = FLOAT_SPEC
+    ffn_out: QuantSpec = FLOAT_SPEC
+
+    def spec(self, block: str) -> QuantSpec:
+        if block not in BLOCKS:
+            raise KeyError(f"unknown block {block!r}; have {BLOCKS}")
+        return getattr(self, block)
+
+    @property
+    def quant_mha(self) -> bool:
+        return self.qkv.quantized or self.attn_out.quantized
+
+    @property
+    def quant_ffn(self) -> bool:
+        return self.ffn_in.quantized or self.ffn_out.quantized
+
+    @property
+    def mode(self) -> LayerMode:
+        """Nearest point on the paper's per-layer mode lattice (drives the
+        execution grouping and the attention bmm quantization switch)."""
+        if self.quant_mha:
+            return LayerMode.FULLY_QUANT
+        if self.quant_ffn:
+            return LayerMode.QUANT_FFN_ONLY
+        return LayerMode.FLOAT
+
+    def to_dict(self) -> dict:
+        return {b: self.spec(b).to_dict() for b in BLOCKS}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "LayerPlan":
+        extra = set(d) - set(BLOCKS)
+        if extra:
+            raise ValueError(f"unknown blocks {sorted(extra)}; have {BLOCKS}")
+        return cls(**{b: QuantSpec.from_dict(d[b]) for b in BLOCKS if b in d})
+
+    @classmethod
+    def for_mode(cls, mode: LayerMode, *, dynamic_acts: bool = False,
+                 calibrator: str = "minmax") -> "LayerPlan":
+        """The paper's per-layer modes as block plans."""
+        act = "int8_per_token" if dynamic_acts else "int8_per_tensor"
+        q = QuantSpec(weight="int8_per_channel", act=act,
+                      calibrator=calibrator)
+        return cls(qkv=q if mode.quant_mha else FLOAT_SPEC,
+                   attn_out=q if mode.quant_mha else FLOAT_SPEC,
+                   ffn_in=q if mode.quant_ffn else FLOAT_SPEC,
+                   ffn_out=q if mode.quant_ffn else FLOAT_SPEC)
+
+
+FLOAT_LAYER = LayerPlan()
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPlan:
+    """Immutable per-layer, per-block precision description of one model.
+
+    The one serializable identity of a deployed quantization decision:
+    PTQ applies it, search strategies emit it, artifact bundles persist it,
+    and the serving runtime keys executables on ``fingerprint()``.
+    """
+
+    layers: tuple[LayerPlan, ...]
+    float_dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        object.__setattr__(self, "layers", tuple(self.layers))
+        if self.float_dtype not in FLOAT_DTYPES:
+            raise ValueError(f"float_dtype {self.float_dtype!r} not in "
+                             f"{FLOAT_DTYPES}")
+
+    # -- EncoderPolicy-compatible surface (duck-typed by build_plan) --------
+    @property
+    def num_layers(self) -> int:
+        return len(self.layers)
+
+    @property
+    def modes(self) -> tuple[LayerMode, ...]:
+        return tuple(lp.mode for lp in self.layers)
+
+    @property
+    def num_quant_ffn(self) -> int:
+        return sum(lp.quant_ffn for lp in self.layers)
+
+    @property
+    def num_quant_mha(self) -> int:
+        return sum(lp.quant_mha for lp in self.layers)
+
+    def bmm_quantized(self, layer_idx: int) -> bool:
+        """Whether the attention score/value batched matmuls of layer
+        ``layer_idx`` run int8 — they belong to the qkv block, so a plan
+        quantizing only attn_out keeps them float (the derived mode's
+        ``quant_mha`` alone would not)."""
+        return self.layers[layer_idx].qkv.quantized
+
+    def group_boundaries(self) -> list[tuple[int, int, LayerMode]]:
+        """Contiguous runs of *identical* LayerPlans: [(start, stop, mode)].
+        Splitting on full LayerPlan equality (not just the derived mode)
+        keeps every scan group structurally homogeneous — layers with and
+        without static activation scales cannot stack into one scan."""
+        runs: list[tuple[int, int, LayerMode]] = []
+        start = 0
+        for i in range(1, self.num_layers + 1):
+            if i == self.num_layers or self.layers[i] != self.layers[start]:
+                runs.append((start, i, self.layers[start].mode))
+                start = i
+        return runs
+
+    def describe(self) -> str:
+        n = self.num_layers
+        cals = sorted({s.calibrator for lp in self.layers for s in
+                       (lp.qkv, lp.attn_out, lp.ffn_in, lp.ffn_out)
+                       if s.quantized}) or ["-"]
+        return (f"plan MHA {self.num_quant_mha}/{n} FFN "
+                f"{self.num_quant_ffn}/{n} [{self.float_dtype}] "
+                f"cal={','.join(cals)} #{self.fingerprint()[:12]}")
+
+    # -- constructors -------------------------------------------------------
+    @staticmethod
+    def full_float(num_layers: int,
+                   float_dtype: str = "bfloat16") -> "PrecisionPlan":
+        return PrecisionPlan((FLOAT_LAYER,) * num_layers, float_dtype)
+
+    @staticmethod
+    def uniform(num_layers: int, layer: LayerPlan,
+                float_dtype: str = "bfloat16") -> "PrecisionPlan":
+        return PrecisionPlan((layer,) * num_layers, float_dtype)
+
+    @staticmethod
+    def prefix(num_layers: int, k: int, layer: Union[LayerPlan, LayerMode],
+               float_dtype: str = "bfloat16", **mode_kw) -> "PrecisionPlan":
+        """Quantize the first ``k`` layers under ``layer`` (a LayerPlan, or
+        a LayerMode expanded via :meth:`LayerPlan.for_mode`)."""
+        if not 0 <= k <= num_layers:
+            raise ValueError(f"k={k} out of range for {num_layers} layers")
+        if isinstance(layer, LayerMode):
+            layer = LayerPlan.for_mode(layer, **mode_kw)
+        return PrecisionPlan((layer,) * k + (FLOAT_LAYER,) * (num_layers - k),
+                             float_dtype)
+
+    @staticmethod
+    def subset(num_layers: int, layers: Sequence[int],
+               layer: Union[LayerPlan, LayerMode],
+               float_dtype: str = "bfloat16", **mode_kw) -> "PrecisionPlan":
+        """Quantize an arbitrary layer subset (the greedy strategies)."""
+        layer_set = set(layers)
+        bad = layer_set - set(range(num_layers))
+        if bad:
+            raise ValueError(f"layer indices {sorted(bad)} out of range")
+        if isinstance(layer, LayerMode):
+            layer = LayerPlan.for_mode(layer, **mode_kw)
+        return PrecisionPlan(
+            tuple(layer if i in layer_set else FLOAT_LAYER
+                  for i in range(num_layers)), float_dtype)
+
+    @staticmethod
+    def from_policy(policy: EncoderPolicy, *, dynamic_acts: bool = False,
+                    calibrator: str = "minmax") -> "PrecisionPlan":
+        """EncoderPolicy -> PrecisionPlan shim.
+
+        Deprecated entry point: the mode lattice is a strict subset of what
+        plans express — build plans directly (or via the search strategies).
+        """
+        warnings.warn(
+            "EncoderPolicy is deprecated as a precision description; "
+            "use PrecisionPlan (this shim converts losslessly)",
+            DeprecationWarning, stacklevel=2)
+        return plan_from_policy(policy, dynamic_acts=dynamic_acts,
+                                calibrator=calibrator)
+
+    def to_policy(self) -> EncoderPolicy:
+        """Project onto the paper's mode lattice (lossy for per-block or
+        per-tensor-weight plans; exact for plans built from policies)."""
+        return EncoderPolicy(self.modes, self.float_dtype)
+
+    # -- serialization ------------------------------------------------------
+    def to_dict(self) -> dict:
+        return {"schema_version": SCHEMA_VERSION,
+                "float_dtype": self.float_dtype,
+                "layers": [lp.to_dict() for lp in self.layers]}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "PrecisionPlan":
+        version = d.get("schema_version")
+        if version != SCHEMA_VERSION:
+            raise ValueError(f"plan schema_version {version!r} != "
+                             f"{SCHEMA_VERSION}")
+        extra = set(d) - {"schema_version", "float_dtype", "layers"}
+        if extra:
+            # reject rather than drop: a typoed key ("float_dtypes") would
+            # otherwise silently fall back to a default
+            raise ValueError(f"unknown plan fields {sorted(extra)}")
+        layers = d.get("layers")
+        if not isinstance(layers, (list, tuple)) or not layers:
+            raise ValueError("plan needs a non-empty 'layers' list")
+        return cls(tuple(LayerPlan.from_dict(lp) for lp in layers),
+                   d.get("float_dtype", "bfloat16"))
+
+    def to_json(self, indent: Optional[int] = 1) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "PrecisionPlan":
+        return cls.from_dict(json.loads(text))
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "PrecisionPlan":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    def fingerprint(self) -> str:
+        """Stable content hash: sha256 over the canonical (sorted-key,
+        whitespace-free) JSON form. Byte-identical across save -> load and
+        across processes — the scheme identity used by executable caches
+        and artifact metadata."""
+        canon = json.dumps(self.to_dict(), sort_keys=True,
+                           separators=(",", ":"))
+        return hashlib.sha256(canon.encode("utf-8")).hexdigest()
+
+
+def plan_from_policy(policy: EncoderPolicy, *, dynamic_acts: bool = False,
+                     calibrator: str = "minmax") -> PrecisionPlan:
+    """Lossless EncoderPolicy -> PrecisionPlan conversion (no warning —
+    the internal compatibility path; external callers should migrate via
+    :meth:`PrecisionPlan.from_policy`)."""
+    return PrecisionPlan(
+        tuple(LayerPlan.for_mode(m, dynamic_acts=dynamic_acts,
+                                 calibrator=calibrator)
+              for m in policy.modes),
+        policy.float_dtype)
+
+
+def as_plan(precision: Union[PrecisionPlan, EncoderPolicy], *,
+            dynamic_acts: bool = False,
+            calibrator: str = "minmax") -> PrecisionPlan:
+    """Coerce either precision description to a PrecisionPlan."""
+    if isinstance(precision, PrecisionPlan):
+        return precision
+    if isinstance(precision, EncoderPolicy):
+        return plan_from_policy(precision, dynamic_acts=dynamic_acts,
+                                calibrator=calibrator)
+    raise TypeError(f"expected PrecisionPlan or EncoderPolicy, got "
+                    f"{type(precision).__name__}")

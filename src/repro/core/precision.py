@@ -117,12 +117,19 @@ def paper_grid(num_layers: int, float_dtype: str = "bfloat16",
                stride: int = 1) -> list[tuple[str, int, EncoderPolicy]]:
     """The paper's full candidate grid: (mode_name, k, policy) for both modes
     and every k in 0..N (Table 2 shows k in steps of 2; ``stride`` controls
-    that). k=0 in either mode is the Fully-FP16(bf16) baseline."""
+    that). Equivalent sweep points are deduped: k=0 in either mode IS the
+    Fully-FP16(bf16) baseline (every mode's empty prefix collapses to the
+    same all-FLOAT policy), so the grid carries it exactly once and
+    ``SAMPEngine.sweep`` never evaluates a duplicate candidate."""
     grid: list[tuple[str, int, EncoderPolicy]] = [
         ("float", 0, EncoderPolicy.full_float(num_layers, float_dtype))]
+    seen = {grid[0][2].modes}
     for mode, name in ((LayerMode.FULLY_QUANT, "fully_quant"),
                        (LayerMode.QUANT_FFN_ONLY, "quant_ffn_only")):
-        for k in range(stride, num_layers + 1, stride):
-            grid.append((name, k, EncoderPolicy.prefix(num_layers, k, mode,
-                                                       float_dtype)))
+        for k in range(0, num_layers + 1, stride):
+            policy = EncoderPolicy.prefix(num_layers, k, mode, float_dtype)
+            if policy.modes in seen:
+                continue
+            seen.add(policy.modes)
+            grid.append((name, k, policy))
     return grid

@@ -1,40 +1,61 @@
-"""The SAMP engine: calibrate → sweep → recommend → apply (paper §3.2).
+"""The SAMP engine: calibrate → search → recommend → apply (paper §3.2).
 
 Ties the substrate together:
 
 * :mod:`repro.quant.ptq` turns float params + calibration stats into
-  mixed-precision params for any :class:`EncoderPolicy`;
-* the engine sweeps the paper's candidate grid (both modes × k = 0..N
-  quantized layers), measuring (accuracy, latency) per candidate with
-  user-supplied callables — accuracy from a dev-set eval, latency from
-  wall-clock on real hardware or the roofline model on this CPU container
-  (both flow through the same interface, DESIGN.md §2);
+  mixed-precision params for any :class:`~repro.core.plan.PrecisionPlan`;
+* the engine runs a *search strategy* from the :data:`SEARCH_STRATEGIES`
+  registry — every strategy emits :class:`SweepPoint`\\ s carrying the
+  candidate's PrecisionPlan, its measured accuracy (user-supplied dev-set
+  eval) and its latency (wall-clock on real hardware or the roofline model
+  on this CPU container — both flow through the same interface):
+
+  - ``prefix_grid``     — the paper's Table-2 candidate grid (both modes ×
+    k = 0..N quantized-prefix layers), duplicates deduped;
+  - ``greedy``          — beyond-paper per-layer sensitivity search:
+    single-layer probes order the layers by measured accuracy cost, then
+    the cumulative subsets are evaluated (allocator.greedy_subset_schedule);
+  - ``latency_budget``  — the prefix grid with candidates over a latency
+    ceiling skipped before the (expensive) accuracy eval;
+
 * :mod:`repro.core.allocator` (Algorithm 1 + Appendix-A thresholds) picks
-  the recommended combination per mode;
-* the chosen policy's params/plan are returned ready for inference.
+  the recommended combination per candidate family;
+* the chosen plan's params/execution-plan are returned ready for inference.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Sequence
+from typing import Callable, Optional, Sequence, Union
 
 from repro.configs.base import ArchConfig
 from repro.core import allocator
+from repro.core.plan import (LayerPlan, PrecisionPlan, as_plan,
+                             plan_from_policy)
 from repro.core.precision import EncoderPolicy, LayerMode, paper_grid
 from repro.models.transformer import QuantScheme, build_plan
 from repro.quant import ptq
 
-EvalFn = Callable[[dict, tuple, EncoderPolicy], float]
-LatencyFn = Callable[[dict, tuple, EncoderPolicy], float]
+# Callbacks receive (qparams, execution_plan, precision) — ``precision`` is
+# the candidate's PrecisionPlan (its EncoderPolicy-compatible surface:
+# .modes / .num_quant_ffn / .num_quant_mha / .float_dtype).
+EvalFn = Callable[[dict, tuple, PrecisionPlan], float]
+LatencyFn = Callable[[dict, tuple, PrecisionPlan], float]
 
 
 @dataclasses.dataclass(frozen=True)
 class SweepPoint:
-    mode_name: str            # 'float' | 'fully_quant' | 'quant_ffn_only'
+    mode_name: str            # candidate family: 'float' | 'fully_quant' |
+    #                           'quant_ffn_only' | 'greedy' | ...
     k: int                    # number of quantized layers
-    policy: EncoderPolicy
+    policy: PrecisionPlan     # the candidate's precision description
     accuracy: float
     latency: float
+
+    @property
+    def plan(self) -> PrecisionPlan:
+        """The candidate's PrecisionPlan (alias of ``policy`` — strategies
+        emit plans; the old field name is kept for callers)."""
+        return self.policy
 
     @property
     def speedup_key(self):
@@ -47,6 +68,148 @@ class SAMPResult:
     point: SweepPoint
     recommendation: allocator.Recommendation
 
+    @property
+    def plan(self) -> PrecisionPlan:
+        return self.point.plan
+
+
+# ---------------------------------------------------------------------------
+# search strategies
+# ---------------------------------------------------------------------------
+
+SEARCH_STRATEGIES: dict[str, Callable] = {}
+
+
+def register_strategy(name: str):
+    """Register a search strategy: ``fn(engine, params, stats, eval_fn,
+    latency_fn, **kw) -> list[SweepPoint]``. The first point must be the
+    float baseline; every point carries its PrecisionPlan."""
+    def deco(fn):
+        if name in SEARCH_STRATEGIES:
+            raise KeyError(f"strategy {name!r} already registered")
+        SEARCH_STRATEGIES[name] = fn
+        return fn
+    return deco
+
+
+def get_strategy(name: str) -> Callable:
+    if name not in SEARCH_STRATEGIES:
+        raise KeyError(f"unknown search strategy {name!r}; have "
+                       f"{sorted(SEARCH_STRATEGIES)}")
+    return SEARCH_STRATEGIES[name]
+
+
+def _measure(engine: "SAMPEngine", params, stats, precision: PrecisionPlan,
+             eval_fn: EvalFn, latency_fn: LatencyFn) -> tuple[float, float]:
+    qparams, plan = ptq.apply_plan(params, engine.cfg, precision, stats,
+                                   scheme=engine.scheme,
+                                   float_plan=engine.float_plan)
+    return eval_fn(qparams, plan, precision), latency_fn(qparams, plan,
+                                                         precision)
+
+
+def _grid_candidates(engine: "SAMPEngine", stride: int,
+                     modes: Sequence[LayerMode], calibrator: str):
+    """The paper's (mode, k) grid as (name, k, PrecisionPlan) candidates."""
+    for name, k, policy in paper_grid(engine.cfg.num_layers,
+                                      engine.float_dtype, stride):
+        if name != "float" and not any(m.value == name for m in modes):
+            continue
+        yield name, k, plan_from_policy(
+            policy, dynamic_acts=engine.scheme.dynamic_acts,
+            calibrator=calibrator)
+
+
+@register_strategy("prefix_grid")
+def prefix_grid_strategy(engine: "SAMPEngine", params, stats, eval_fn,
+                         latency_fn, *, stride: int = 1,
+                         modes: Sequence[LayerMode] = (
+                             LayerMode.FULLY_QUANT,
+                             LayerMode.QUANT_FFN_ONLY),
+                         calibrator: str = "minmax") -> list[SweepPoint]:
+    """The paper's Table-2 grid: both modes × every quantized-prefix depth
+    (dedupe in :func:`paper_grid` drops the k=0 duplicates)."""
+    points: list[SweepPoint] = []
+    for name, k, precision in _grid_candidates(engine, stride, modes,
+                                               calibrator):
+        acc, lat = _measure(engine, params, stats, precision, eval_fn,
+                            latency_fn)
+        points.append(SweepPoint(name, k, precision, acc, lat))
+    return points
+
+
+@register_strategy("greedy")
+def greedy_strategy(engine: "SAMPEngine", params, stats, eval_fn, latency_fn,
+                    *, mode: LayerMode = LayerMode.QUANT_FFN_ONLY,
+                    calibrator: str = "minmax",
+                    max_layers: Optional[int] = None) -> list[SweepPoint]:
+    """Greedy per-layer sensitivity search (beyond-paper: *which* layers,
+    not just how many). Probes each layer alone, orders layers by measured
+    accuracy cost via :func:`allocator.greedy_subset_schedule`, then
+    re-measures every cumulative subset honestly."""
+    n = engine.cfg.num_layers
+    layer = LayerPlan.for_mode(mode, dynamic_acts=engine.scheme.dynamic_acts,
+                               calibrator=calibrator)
+    base = PrecisionPlan.full_float(n, engine.float_dtype)
+    base_acc, base_lat = _measure(engine, params, stats, base, eval_fn,
+                                  latency_fn)
+    points = [SweepPoint("float", 0, base, base_acc, base_lat)]
+
+    probe_acc, probe_gain = [], []
+    for j in range(n):
+        pj = PrecisionPlan.subset(n, [j], layer, engine.float_dtype)
+        acc_j, lat_j = _measure(engine, params, stats, pj, eval_fn,
+                                latency_fn)
+        probe_acc.append(acc_j)
+        probe_gain.append(base_lat - lat_j)
+
+    schedule = allocator.greedy_subset_schedule(probe_acc, base_acc,
+                                                probe_gain, base_lat)
+    limit = max_layers if max_layers is not None else n
+    for step in schedule[1:limit + 1]:
+        ps = PrecisionPlan.subset(n, step.layers, layer, engine.float_dtype)
+        acc, lat = _measure(engine, params, stats, ps, eval_fn, latency_fn)
+        points.append(SweepPoint("greedy", len(step.layers), ps, acc, lat))
+    return points
+
+
+@register_strategy("latency_budget")
+def latency_budget_strategy(engine: "SAMPEngine", params, stats, eval_fn,
+                            latency_fn, *, max_latency: float,
+                            stride: int = 1,
+                            modes: Sequence[LayerMode] = (
+                                LayerMode.FULLY_QUANT,
+                                LayerMode.QUANT_FFN_ONLY),
+                            calibrator: str = "minmax") -> list[SweepPoint]:
+    """Budgeted prefix-grid search: candidates whose latency exceeds
+    ``max_latency`` are dropped *before* the expensive work. Analytic
+    backends (roofline) price a candidate from its plan alone, so
+    over-budget candidates skip even the PTQ weight quantization; measured
+    backends (wallclock) need the quantized params, so those prune after
+    quantization but still before the accuracy eval. The float baseline is
+    always measured (the allocator's anchor) even when it is itself over
+    budget."""
+    points: list[SweepPoint] = []
+    for name, k, precision in _grid_candidates(engine, stride, modes,
+                                               calibrator):
+        try:
+            # param-free probe: analytic backends ignore (qparams, plan)
+            lat = latency_fn(None, None, precision)
+        except Exception:
+            lat = None                       # measured backend: needs params
+        if lat is not None and name != "float" and lat > max_latency:
+            continue
+        qparams, plan = ptq.apply_plan(params, engine.cfg, precision, stats,
+                                       scheme=engine.scheme,
+                                       float_plan=engine.float_plan)
+        if lat is None:
+            lat = latency_fn(qparams, plan, precision)
+            if name != "float" and lat > max_latency:
+                continue
+        acc = eval_fn(qparams, plan, precision)
+        points.append(SweepPoint(name, k, precision, acc, lat))
+    return points
+
 
 class SAMPEngine:
     """End-to-end self-adaptive mixed-precision driver for one model."""
@@ -58,49 +221,53 @@ class SAMPEngine:
         self.float_dtype = float_dtype
         self.float_policy = EncoderPolicy.full_float(cfg.num_layers,
                                                      float_dtype)
-        self.float_plan = build_plan(cfg, self.float_policy)
+        self.float_precision = PrecisionPlan.full_float(cfg.num_layers,
+                                                        float_dtype)
+        self.float_plan = build_plan(cfg, self.float_precision)
 
     # -- step 1: calibration ------------------------------------------------
     def calibrate(self, params: dict, batches: Sequence[dict], *,
-                  calibrator: str = "minmax", **kw):
-        """Observe activation ranges on calibration batches (paper §4.1 uses
-        pytorch-quantization's min-max calibrator)."""
+                  calibrator: Optional[str] = None,
+                  precision: Optional[PrecisionPlan] = None, **kw):
+        """Observe activation ranges on calibration batches. ``calibrator``
+        names one calibrator for every site (paper §4.1 uses min-max);
+        ``precision`` honors a plan's per-block calibrator choices."""
         return ptq.capture_stats(params, batches, self.cfg, self.float_plan,
-                                 self.scheme, calibrator=calibrator, **kw)
+                                 self.scheme, calibrator=calibrator,
+                                 precision=precision, **kw)
 
-    # -- step 2: candidate sweep ---------------------------------------------
+    # -- step 2: candidate search -------------------------------------------
+    def search(self, strategy: str, params: dict, stats: dict,
+               eval_fn: EvalFn, latency_fn: LatencyFn,
+               **kw) -> list[SweepPoint]:
+        """Run a registered search strategy; every returned point carries
+        its candidate :class:`PrecisionPlan` (``point.plan``)."""
+        return get_strategy(strategy)(self, params, stats, eval_fn,
+                                      latency_fn, **kw)
+
     def sweep(self, params: dict, stats: dict, eval_fn: EvalFn,
               latency_fn: LatencyFn, *, stride: int = 1,
               modes: Sequence[LayerMode] = (LayerMode.FULLY_QUANT,
                                             LayerMode.QUANT_FFN_ONLY),
               ) -> list[SweepPoint]:
-        """Evaluate accuracy and latency for every (mode, k) candidate —
-        the paper's Table-2 grid. Candidate ('float', 0) is always first."""
-        points: list[SweepPoint] = []
-        grid = [g for g in paper_grid(self.cfg.num_layers, self.float_dtype,
-                                      stride)
-                if g[0] == "float"
-                or any(m.value == g[0] for m in modes)]
-        for name, k, policy in grid:
-            qparams, plan = ptq.apply_policy(
-                params, self.cfg, policy, stats, scheme=self.scheme,
-                float_plan=self.float_plan)
-            acc = eval_fn(qparams, plan, policy)
-            lat = latency_fn(qparams, plan, policy)
-            points.append(SweepPoint(name, k, policy, acc, lat))
-        return points
+        """The paper's grid — shorthand for ``search("prefix_grid", ...)``.
+        Candidate ('float', 0) is always first."""
+        return self.search("prefix_grid", params, stats, eval_fn, latency_fn,
+                           stride=stride, modes=modes)
 
     # -- step 3: recommendation ----------------------------------------------
     @staticmethod
     def recommend(points: Sequence[SweepPoint], *,
                   max_latency: Optional[float] = None,
                   min_accuracy: Optional[float] = None) -> list[SAMPResult]:
-        """Run the accuracy-decay-aware allocator per mode (Table 2 under-
-        lines one combination per mode), or the Appendix-A threshold policies
-        when the user states requirements."""
+        """Run the accuracy-decay-aware allocator per candidate family
+        (Table 2 underlines one combination per mode), or the Appendix-A
+        threshold policies when the user states requirements."""
         base = next(p for p in points if p.mode_name == "float")
+        families = [m for m in dict.fromkeys(p.mode_name for p in points)
+                    if m != "float"]
         results = []
-        for mode_name in ("fully_quant", "quant_ffn_only"):
+        for mode_name in families:
             series = sorted((p for p in points if p.mode_name == mode_name),
                             key=lambda p: p.k)
             if not series:
@@ -122,8 +289,11 @@ class SAMPEngine:
         return [cand[r.index] for r in recs]
 
     # -- step 4: apply -------------------------------------------------------
-    def apply(self, params: dict, stats: dict, policy: EncoderPolicy):
-        """Produce the production-ready (params, plan) for a chosen policy."""
-        return ptq.apply_policy(params, self.cfg, policy, stats,
-                                scheme=self.scheme,
-                                float_plan=self.float_plan)
+    def apply(self, params: dict, stats: dict,
+              precision: Union[PrecisionPlan, EncoderPolicy]):
+        """Produce the production-ready (params, plan) for a chosen
+        PrecisionPlan (EncoderPolicies convert via the shim)."""
+        precision = as_plan(precision, dynamic_acts=self.scheme.dynamic_acts)
+        return ptq.apply_plan(params, self.cfg, precision, stats,
+                              scheme=self.scheme,
+                              float_plan=self.float_plan)

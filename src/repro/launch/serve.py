@@ -8,12 +8,18 @@
     PYTHONPATH=src python -m repro.launch.serve --arch bert-base \
         --task tnews --policy ffn --requests 16
 
+    # a saved PrecisionPlan, or an on-the-fly strategy search
+    ... --plan plan.json
+    ... --strategy greedy            # prefix_grid | greedy | latency_budget
+
 Instantiates the reduced config (this is the CPU-container path; on TPU the
 same flow runs the full config), PTQ-calibrates on synthetic batches,
-applies the requested SAMP policy, and serves a batch of random requests —
-through the continuous-batching decode engine for ``--task lm``, or the
-dynamic micro-batching encoder engine (mixed-length requests through the
-bucketed executable cache) for classification / matching / tagging tasks.
+applies the requested precision — a named mode policy (``--policy``), a
+saved declarative plan (``--plan plan.json``), or the winner of a search
+strategy (``--strategy``, accuracy proxied by closeness to the float
+forward, latency from the roofline model) — and serves a batch of random
+requests through the continuous-batching decode engine (``--task lm``) or
+the dynamic micro-batching encoder engine.
 """
 from __future__ import annotations
 
@@ -21,10 +27,12 @@ import argparse
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.core.calibration import synthetic_calibration_batches
+from repro.core.plan import PrecisionPlan, plan_from_policy
 from repro.core.precision import make_policy
 from repro.core.samp import SAMPEngine
 from repro.data.pipeline import make_task
@@ -35,27 +43,81 @@ from repro.toolkit.registry import get_target
 from repro.toolkit.targets import TARGET_FOR_TASK_KIND
 
 
-def build_model(cfg, policy_name: str, *, seed: int = 0, head=None,
-                log=print):
-    """Float init + optional SAMP PTQ under the requested policy (shared
-    with benchmarks/serve_throughput.py — one build flow for everything
-    that serves a synthetic-calibrated model)."""
+def search_plan(cfg, eng: SAMPEngine, params, stats, strategy: str, *,
+                seed: int = 0, seq: int = 32,
+                max_latency=None, log=print) -> PrecisionPlan:
+    """Pick a PrecisionPlan with a registered search strategy: accuracy is
+    proxied by closeness of the quantized forward to the float forward on a
+    synthetic batch (randomly initialized weights have no task accuracy);
+    latency comes from the roofline backend."""
+    from repro.toolkit.latency import RooflineBackend
+    batch = synthetic_calibration_batches(cfg, num_batches=1, seq_len=seq,
+                                          seed=seed)[0]
+    ref, _ = T.forward(params, batch, cfg, eng.float_plan,
+                       compute_dtype=jnp.float32)
+
+    def eval_fn(qp, plan, pol):
+        out, _ = T.forward(qp, batch, cfg, plan, eng.scheme,
+                           compute_dtype=jnp.float32)
+        return 1.0 - float(jnp.mean(jnp.abs(out - ref))
+                           / (jnp.mean(jnp.abs(ref)) + 1e-9))
+
+    latency_fn = RooflineBackend().bind(cfg, batch=8, seq=seq)
+    kw = {}
+    if strategy == "latency_budget":
+        if max_latency is None:
+            # default budget: 80% of the float roofline
+            max_latency = 0.8 * latency_fn(None, None, eng.float_precision)
+        kw["max_latency"] = max_latency
+    points = eng.search(strategy, params, stats, eval_fn, latency_fn, **kw)
+    recs = eng.recommend(points, max_latency=max_latency)
+    chosen = next((r for r in recs if r.mode_name == "quant_ffn_only"),
+                  recs[0] if recs else None)
+    if chosen is None:
+        log(f"[serve] strategy {strategy!r} found no quantized candidate; "
+            f"serving float")
+        return eng.float_precision
+    log(f"[serve] strategy {strategy!r} chose {chosen.plan.describe()} "
+        f"(speedup {chosen.recommendation.speedup:.3f}x)")
+    return chosen.plan
+
+
+def build_model(cfg, policy_name: str = "float", *, seed: int = 0,
+                head=None, log=print, plan_file=None, strategy=None,
+                max_latency=None):
+    """Float init + optional SAMP PTQ (shared with
+    benchmarks/serve_throughput.py — one build flow for everything that
+    serves a synthetic-calibrated model). Precision comes from, in
+    precedence order: a saved plan file, a search strategy, or the named
+    mode policy."""
     eng = SAMPEngine(cfg, float_dtype="float32")
     params = T.init_params(jax.random.PRNGKey(seed), cfg,
                            eng.float_policy, head=head)
-    policy = make_policy(cfg, policy_name)
-    if policy.num_quant_ffn or policy.num_quant_mha:
-        batches = synthetic_calibration_batches(cfg, seed=seed)
-        stats = eng.calibrate(params, batches)
-        params, plan = eng.apply(params, stats, policy)
-        log(f"[serve] applied SAMP policy: {policy.describe()}")
-    else:
-        plan = eng.float_plan
+    precision = None
+    if plan_file is not None:
+        precision = PrecisionPlan.load(plan_file)
+        log(f"[serve] loaded plan {plan_file}: {precision.describe()}")
+    elif strategy is None:
+        precision = plan_from_policy(make_policy(cfg, policy_name))
+    if precision is not None and not (precision.num_quant_ffn
+                                      or precision.num_quant_mha):
+        return params, eng.float_plan
+    batches = synthetic_calibration_batches(cfg, seed=seed)
+    stats = eng.calibrate(params, batches, precision=precision)
+    if strategy is not None and precision is None:
+        precision = search_plan(cfg, eng, params, stats, strategy,
+                                seed=seed, max_latency=max_latency, log=log)
+        if not (precision.num_quant_ffn or precision.num_quant_mha):
+            return params, eng.float_plan
+    params, plan = eng.apply(params, stats, precision)
+    log(f"[serve] applied SAMP plan: {precision.describe()}")
     return params, plan
 
 
 def serve_decode(cfg, args) -> None:
-    params, plan = build_model(cfg, args.policy, seed=args.seed)
+    params, plan = build_model(cfg, args.policy, seed=args.seed,
+                               plan_file=args.plan, strategy=args.strategy,
+                               max_latency=args.max_latency)
     server = ServeEngine(cfg, params, plan, batch_slots=args.slots,
                          max_len=args.max_len, seed=args.seed)
     rng = np.random.default_rng(args.seed)
@@ -84,7 +146,9 @@ def serve_encoder(cfg, args) -> None:
     spec = get_target(TARGET_FOR_TASK_KIND[task.kind])
     head_kind = "ner" if spec.token_level else "cls"
     params, plan = build_model(cfg, args.policy, seed=args.seed,
-                               head=(head_kind, max(task.n_classes, 1)))
+                               head=(head_kind, max(task.n_classes, 1)),
+                               plan_file=args.plan, strategy=args.strategy,
+                               max_latency=args.max_latency)
     server = EncoderServeEngine(cfg, params, plan, target=spec,
                                 max_batch=args.slots, max_len=args.max_len)
     rng = np.random.default_rng(args.seed)
@@ -112,6 +176,16 @@ def main():
                          "decodes, tnews otherwise")
     ap.add_argument("--policy", default="float",
                     help="float | ffn[K] | full[K]")
+    ap.add_argument("--plan", default=None,
+                    help="path to a saved PrecisionPlan JSON (overrides "
+                         "--policy/--strategy)")
+    ap.add_argument("--strategy", default=None,
+                    choices=("prefix_grid", "greedy", "latency_budget"),
+                    help="pick the plan with a search strategy instead of "
+                         "--policy")
+    ap.add_argument("--max-latency", type=float, default=None,
+                    help="latency ceiling (roofline seconds) for "
+                         "--strategy latency_budget")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-tokens", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4,

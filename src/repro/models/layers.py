@@ -480,6 +480,7 @@ def attention_block(x: jax.Array, p: dict, cfg, *, positions: jax.Array,
                        scales=sc, obs=obs, constrain=constrain, chunk=chunk)
     o = o.reshape(B, S, cfg.q_dim)
     observe(obs, "attn_out", o)
+    observe_values(obs, "attn_out", o)
     out = dense(o, p["wo"], obs=None)
     return out, new_cache
 
@@ -591,6 +592,7 @@ def mla_block(x: jax.Array, p: dict, cfg, *, positions: jax.Array,
                            quant=quant, scales=sc, obs=obs, chunk=chunk)
     o = o.reshape(B, S, H * vd)
     observe(obs, "attn_out", o)
+    observe_values(obs, "attn_out", o)
     out = dense(o, p["wo"])
     return out, new_cache
 
@@ -618,9 +620,11 @@ def ffn_block(x: jax.Array, p: dict, cfg, obs: Optional[dict] = None,
     if cfg.ffn_kind == "glu":
         h = jax.nn.silu(dense(x, p["wg"])) * dense(x, p["wu"])
         observe(obs, prefix + "ffn_hidden", h)
+        observe_values(obs, prefix + "ffn_hidden", h)
         return dense(h, p["wd"])
     h = jax.nn.gelu(dense(x, p["wi"]), approximate=True)
     observe(obs, prefix + "ffn_hidden", h)
+    observe_values(obs, prefix + "ffn_hidden", h)
     return dense(h, p["wo"])
 
 

@@ -50,27 +50,40 @@ class QuantScheme:
 @dataclasses.dataclass(frozen=True)
 class Group:
     """One execution group: layers [start, stop), all in ``mode``, whose
-    kind-sequence is ``kinds`` repeated ``steps`` times."""
+    kind-sequence is ``kinds`` repeated ``steps`` times. ``quant_bmm``
+    gates the attention score/value int8 matmuls: per-block PrecisionPlans
+    tie them to the qkv block's spec, which can differ from the derived
+    mode's ``quant_mha`` (None = follow the mode, the policy-lattice
+    behavior)."""
     start: int
     stop: int
     mode: LayerMode
     kinds: tuple[BlockKind, ...]
     steps: int
+    quant_bmm: Optional[bool] = None
 
     @property
     def scan(self) -> bool:
         return self.steps >= 2
 
 
-def build_plan(cfg: ArchConfig, policy: EncoderPolicy) -> tuple[Group, ...]:
+def build_plan(cfg: ArchConfig, policy) -> tuple[Group, ...]:
+    """Execution plan for a precision description: an ``EncoderPolicy`` or a
+    :class:`~repro.core.plan.PrecisionPlan` (both expose ``num_layers`` and
+    ``group_boundaries()``; a PrecisionPlan splits runs on full per-block
+    LayerPlan equality so scan groups stay structurally homogeneous)."""
     if policy.num_layers != cfg.num_layers:
         raise ValueError(
             f"policy has {policy.num_layers} layers, arch {cfg.num_layers}")
     kinds = cfg.layer_kinds()
     p = len(cfg.pattern)
     groups: list[Group] = []
+    # per-block plans quantize the attention bmms iff the qkv block is
+    # quantized; the mode lattice ties them to quant_mha
+    bmm_fn = getattr(policy, "bmm_quantized", None)
 
     for (s, e, mode) in policy.group_boundaries():
+        quant_bmm = bmm_fn(s) if bmm_fn is not None else mode.quant_mha
         # Greedy maximal runs: prefer a homogeneous run; else a run that is
         # periodic with the arch's block pattern (possibly rotated); else a
         # single unrolled layer. Handles pattern alternation (gemma2,
@@ -89,10 +102,11 @@ def build_plan(cfg: ArchConfig, policy: EncoderPolicy) -> tuple[Group, ...]:
                     jp += p
             if jp - i > max(j1 - i, p):
                 groups.append(Group(i, jp, mode, tuple(kinds[i:i + p]),
-                                    (jp - i) // p))
+                                    (jp - i) // p, quant_bmm))
                 i = jp
             else:
-                groups.append(Group(i, j1, mode, (kinds[i],), j1 - i))
+                groups.append(Group(i, j1, mode, (kinds[i],), j1 - i,
+                                    quant_bmm))
                 i = j1
     return tuple(groups)
 
@@ -218,8 +232,9 @@ def repack(params: dict, old_plan: tuple[Group, ...],
 
 def layer_forward(x, lp, cfg: ArchConfig, kind: BlockKind, mode: LayerMode,
                   scheme: QuantScheme, *, positions, obs, cache, chunk,
-                  constrain: Constrain, active=None):
-    quant = L.AttnQuant(enabled=mode.quant_mha,
+                  constrain: Constrain, active=None, quant_bmm=None):
+    quant = L.AttnQuant(enabled=(mode.quant_mha if quant_bmm is None
+                                 else quant_bmm),
                         softmax_mode=scheme.softmax_mode)
     spec = L.MaskSpec(
         causal=cfg.causal,
@@ -280,7 +295,7 @@ def run_groups(x, params, cfg: ArchConfig, plan: tuple[Group, ...],
                 return layer_forward(
                     xc, lp, cfg, kind, mode, scheme, positions=positions,
                     obs=lobs, cache=lcache, chunk=chunk, constrain=constrain,
-                    active=active)
+                    active=active, quant_bmm=g.quant_bmm)
             return (jax.checkpoint(lf) if remat and lobs is None else lf)
 
         if unrolled:

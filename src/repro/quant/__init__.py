@@ -1,4 +1,6 @@
 from repro.quant import ptq  # noqa: F401
-from repro.quant.ptq import apply_policy, capture_stats, quantize_weight
+from repro.quant.ptq import (apply_plan, apply_policy, capture_stats,
+                             quantize_weight)
 
-__all__ = ["ptq", "apply_policy", "capture_stats", "quantize_weight"]
+__all__ = ["ptq", "apply_plan", "apply_policy", "capture_stats",
+           "quantize_weight"]

@@ -1,97 +1,120 @@
-"""Post-training quantization: apply a SAMP EncoderPolicy to float params.
+"""Post-training quantization: apply a SAMP precision plan to float params.
 
 The flow (paper §3.2 / Appendix A):
 
     float params --capture_stats(calibration batches)--> amax per (layer, site)
-                 --apply_policy(policy)--> mixed-precision params + plan
+                 --apply_plan(PrecisionPlan)--> mixed-precision params + plan
 
-Weights are quantized per-output-channel (pytorch-quantization's weight
-default); activations get static per-tensor scales from the calibrator
-(the paper's scheme) unless ``scheme.dynamic_acts`` — then no ``xs`` is
-stored and :func:`repro.models.layers.dense` quantizes per-token at runtime
-(beyond-paper).
+Precision is described by a :class:`~repro.core.plan.PrecisionPlan`: per
+layer, per GEMM *block* (qkv / attn_out / ffn_in / ffn_out), a
+:class:`~repro.core.plan.QuantSpec` names the weight scheme
+(int8-per-channel — pytorch-quantization's weight default — or
+int8-per-tensor), the activation scheme (static per-tensor scales from the
+calibrator, the paper's scheme, or per-token dynamic — then no ``xs`` is
+stored and :func:`repro.models.layers.dense` quantizes at runtime), and the
+calibrator that turns observed ranges into amax values
+(:func:`repro.core.calibration.make_calibrator`).
 
-Which weights belong to which group (MHA vs FFN) per block kind — and which
-activations feed them — is the :data:`SITE_MAP` below; attention's batched
+Which weights belong to which block per layer kind — and which activation
+sites feed them — is the :data:`SITE_MAP` below; attention's batched
 matmuls (q·k^T, p·v) additionally get ``{q,k,p,v}_scale`` scalars when the
-layer is FULLY_QUANT (the paper's Figure-2(a) path, including the softmax
-quantization that Appendix B shows is the accuracy killer).
+layer's qkv block is statically quantized (the paper's Figure-2(a) path,
+including the softmax quantization that Appendix B shows is the accuracy
+killer).
+
+:func:`apply_policy` remains as the :class:`EncoderPolicy` compatibility
+wrapper (policies convert losslessly via ``plan_from_policy``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Sequence
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+import inspect
+
 from repro.configs.base import ArchConfig, BlockKind
-from repro.core.calibration import Calibrator, make_calibrator
+from repro.core.calibration import CALIBRATORS, Calibrator, make_calibrator
+from repro.core.plan import (LayerPlan, PrecisionPlan, as_plan,
+                             plan_from_policy)
 from repro.core.precision import EncoderPolicy, LayerMode
 from repro.core.quantize import (QuantizedTensor, compute_scale_symmetric,
                                  quantize, UINT8_MAX)
 from repro.models import transformer as T
 
-# (group, param_path, site): group 'mha' honours mode.quant_mha, 'ffn'
-# honours mode.quant_ffn. Paths are within the layer dict.
-SITE_MAP: dict[str, list[tuple[str, tuple[str, ...], str]]] = {
+# (group, param_path, site, block): group 'mha'/'ffn' names the paper's GEMM
+# group, ``block`` the PrecisionPlan block whose QuantSpec governs the
+# weight. Paths are within the layer dict; ``site`` is the activation
+# observation feeding the GEMM.
+SITE_MAP: dict[str, list[tuple[str, tuple[str, ...], str, str]]] = {
     "attn": [
-        ("mha", ("attn", "wq"), "attn_in"),
-        ("mha", ("attn", "wk"), "attn_in"),
-        ("mha", ("attn", "wv"), "attn_in"),
-        ("mha", ("attn", "wo"), "attn_out"),
+        ("mha", ("attn", "wq"), "attn_in", "qkv"),
+        ("mha", ("attn", "wk"), "attn_in", "qkv"),
+        ("mha", ("attn", "wv"), "attn_in", "qkv"),
+        ("mha", ("attn", "wo"), "attn_out", "attn_out"),
     ],
     "attn_mla": [
-        ("mha", ("attn", "wq_a"), "attn_in"),
-        ("mha", ("attn", "wq_b"), "q_lat"),
-        ("mha", ("attn", "wq"), "attn_in"),        # q_lora_rank == 0 variant
-        ("mha", ("attn", "wkv_a"), "attn_in"),
-        ("mha", ("attn", "wkv_b"), "c_kv"),
-        ("mha", ("attn", "wo"), "attn_out"),
+        ("mha", ("attn", "wq_a"), "attn_in", "qkv"),
+        ("mha", ("attn", "wq_b"), "q_lat", "qkv"),
+        ("mha", ("attn", "wq"), "attn_in", "qkv"),   # q_lora_rank == 0
+        ("mha", ("attn", "wkv_a"), "attn_in", "qkv"),
+        ("mha", ("attn", "wkv_b"), "c_kv", "qkv"),
+        ("mha", ("attn", "wo"), "attn_out", "attn_out"),
     ],
     "ffn_glu": [
-        ("ffn", ("ffn", "wg"), "ffn_in"),
-        ("ffn", ("ffn", "wu"), "ffn_in"),
-        ("ffn", ("ffn", "wd"), "ffn_hidden"),
+        ("ffn", ("ffn", "wg"), "ffn_in", "ffn_in"),
+        ("ffn", ("ffn", "wu"), "ffn_in", "ffn_in"),
+        ("ffn", ("ffn", "wd"), "ffn_hidden", "ffn_out"),
     ],
     "ffn_gelu": [
-        ("ffn", ("ffn", "wi"), "ffn_in"),
-        ("ffn", ("ffn", "wo"), "ffn_hidden"),
+        ("ffn", ("ffn", "wi"), "ffn_in", "ffn_in"),
+        ("ffn", ("ffn", "wo"), "ffn_hidden", "ffn_out"),
     ],
     "moe": [
-        ("ffn", ("ffn", "wg"), "ffn_in_e"),
-        ("ffn", ("ffn", "wu"), "ffn_in_e"),
-        ("ffn", ("ffn", "wd"), "ffn_hidden"),
-        ("ffn", ("ffn", "shared", "wg"), "shared_ffn_in"),
-        ("ffn", ("ffn", "shared", "wu"), "shared_ffn_in"),
-        ("ffn", ("ffn", "shared", "wd"), "shared_ffn_hidden"),
+        ("ffn", ("ffn", "wg"), "ffn_in_e", "ffn_in"),
+        ("ffn", ("ffn", "wu"), "ffn_in_e", "ffn_in"),
+        ("ffn", ("ffn", "wd"), "ffn_hidden", "ffn_out"),
+        ("ffn", ("ffn", "shared", "wg"), "shared_ffn_in", "ffn_in"),
+        ("ffn", ("ffn", "shared", "wu"), "shared_ffn_in", "ffn_in"),
+        ("ffn", ("ffn", "shared", "wd"), "shared_ffn_hidden", "ffn_out"),
     ],
     "rglru": [
-        ("ffn", ("rec", "wx"), "rec_in"),
-        ("ffn", ("rec", "wg"), "rec_in"),
-        ("ffn", ("rec", "wa"), "rec_gate_in"),
-        ("ffn", ("rec", "wi"), "rec_gate_in"),
-        ("ffn", ("rec", "wo"), "rec_out"),
+        ("ffn", ("rec", "wx"), "rec_in", "ffn_in"),
+        ("ffn", ("rec", "wg"), "rec_in", "ffn_in"),
+        ("ffn", ("rec", "wa"), "rec_gate_in", "ffn_in"),
+        ("ffn", ("rec", "wi"), "rec_gate_in", "ffn_in"),
+        ("ffn", ("rec", "wo"), "rec_out", "ffn_out"),
     ],
     "mlstm": [
-        ("ffn", ("blk", "up"), "blk_in"),
-        ("ffn", ("blk", "wq"), "qkv_in"),
-        ("ffn", ("blk", "wk"), "qkv_in"),
-        ("ffn", ("blk", "wif"), "qkv_in"),
-        ("ffn", ("blk", "wv"), "xm"),
-        ("ffn", ("blk", "down"), "blk_hidden"),
+        ("ffn", ("blk", "up"), "blk_in", "ffn_in"),
+        ("ffn", ("blk", "wq"), "qkv_in", "ffn_in"),
+        ("ffn", ("blk", "wk"), "qkv_in", "ffn_in"),
+        ("ffn", ("blk", "wif"), "qkv_in", "ffn_in"),
+        ("ffn", ("blk", "wv"), "xm", "ffn_in"),
+        ("ffn", ("blk", "down"), "blk_hidden", "ffn_out"),
     ],
     "slstm": [
-        ("ffn", ("blk", "wz"), "blk_in"),
-        ("ffn", ("blk", "wo"), "blk_in"),
-        ("ffn", ("blk", "wi"), "blk_conv_in"),
-        ("ffn", ("blk", "wf"), "blk_conv_in"),
-        ("ffn", ("blk", "proj"), "blk_hidden"),
+        ("ffn", ("blk", "wz"), "blk_in", "ffn_in"),
+        ("ffn", ("blk", "wo"), "blk_in", "ffn_in"),
+        ("ffn", ("blk", "wi"), "blk_conv_in", "ffn_in"),
+        ("ffn", ("blk", "wf"), "blk_conv_in", "ffn_in"),
+        ("ffn", ("blk", "proj"), "blk_hidden", "ffn_out"),
     ],
 }
 
 BMM_SITES = ("q", "k", "p", "v")    # attention batched-matmul operands
+
+# site name -> plan block, derived from the map above; the attention bmm
+# operands ride the qkv block's spec (they are inside the MHA group).
+SITE_BLOCK: dict[str, str] = {
+    site: block
+    for entries in SITE_MAP.values()
+    for (_g, _p, site, block) in entries
+}
+SITE_BLOCK.update({s: "qkv" for s in BMM_SITES})
 
 
 def _kind_entries(cfg: ArchConfig, kind: BlockKind):
@@ -108,11 +131,23 @@ def _kind_entries(cfg: ArchConfig, kind: BlockKind):
     return entries
 
 
-def quantize_weight(w: jax.Array) -> QuantizedTensor:
-    """Per-output-channel symmetric int8. 2-D (K, N): scale (1, N);
-    3-D expert stacks (E, K, N): per-expert-per-channel scale (E, 1, N)."""
-    reduce_axes = (w.ndim - 2,) if w.ndim == 3 else tuple(range(w.ndim - 1))
-    amax = jnp.max(jnp.abs(w), axis=reduce_axes, keepdims=True)
+def quantize_weight(w: jax.Array,
+                    scheme: str = "int8_per_channel") -> QuantizedTensor:
+    """Symmetric int8 weight quantization under a named scheme.
+
+    * ``int8_per_channel`` — per-output-channel (pytorch-quantization's
+      weight default). 2-D (K, N): scale (1, N); 3-D expert stacks
+      (E, K, N): per-expert-per-channel scale (E, 1, N).
+    * ``int8_per_tensor`` — one scale for the whole tensor (shape
+      (1,) * ndim so dequant broadcasting stays uniform).
+    """
+    if scheme == "int8_per_tensor":
+        amax = jnp.max(jnp.abs(w)).reshape((1,) * w.ndim)
+    elif scheme == "int8_per_channel":
+        reduce_axes = (w.ndim - 2,) if w.ndim == 3 else tuple(range(w.ndim - 1))
+        amax = jnp.max(jnp.abs(w), axis=reduce_axes, keepdims=True)
+    else:
+        raise ValueError(f"unknown weight scheme {scheme!r}")
     scale = compute_scale_symmetric(amax)
     return QuantizedTensor(quantize(w, scale), scale, None)
 
@@ -132,28 +167,32 @@ def _set_path(d: dict, path: tuple[str, ...], value) -> None:
 
 
 def quantize_layer(lp: dict, cfg: ArchConfig, kind: BlockKind,
-                   mode: LayerMode, amax: dict[str, float],
+                   layer: Union[LayerPlan, LayerMode],
+                   amax: dict[str, float],
                    scheme: T.QuantScheme) -> dict:
-    """Return a quantized copy of one layer's params under ``mode``.
-    ``amax`` maps site name -> calibrated amax for THIS layer."""
-    if mode is LayerMode.FLOAT:
+    """Return a quantized copy of one layer's params under ``layer`` (a
+    per-block :class:`LayerPlan`; a bare :class:`LayerMode` is expanded via
+    :meth:`LayerPlan.for_mode`). ``amax`` maps site name -> calibrated amax
+    for THIS layer."""
+    if isinstance(layer, LayerMode):
+        layer = LayerPlan.for_mode(layer, dynamic_acts=scheme.dynamic_acts)
+    if not (layer.quant_mha or layer.quant_ffn):
         return lp
     lp = _copy_dicts(lp)                     # containers copied, leaves shared
-    for group, path, site in _kind_entries(cfg, kind):
-        if group == "mha" and not mode.quant_mha:
-            continue
-        if group == "ffn" and not mode.quant_ffn:
+    for group, path, site, block in _kind_entries(cfg, kind):
+        spec = layer.spec(block)
+        if not spec.quantized:
             continue
         sub = _get_path(lp, path)
         if sub is None:
             continue
         new = dict(sub)
-        new["w"] = quantize_weight(sub["w"])
-        if not scheme.dynamic_acts and site in amax:
+        new["w"] = quantize_weight(sub["w"], spec.weight)
+        if spec.static_acts and site in amax:
             new["xs"] = jnp.asarray(
                 compute_scale_symmetric(jnp.float32(amax[site])))
         _set_path(lp, path, new)
-    if kind.body == "attn" and mode.quant_mha:
+    if kind.body == "attn" and layer.qkv.quantized and layer.qkv.static_acts:
         attn = lp["attn"]
         for s in BMM_SITES:
             if s not in amax:
@@ -180,25 +219,62 @@ def _copy_dicts(tree):
 # calibration capture
 # ---------------------------------------------------------------------------
 
+HIST_SITES = ("attn_in", "attn_out", "ffn_in", "ffn_hidden", "p")
+
 
 def capture_stats(params: dict, batches: Sequence[dict], cfg: ArchConfig,
                   plan, scheme: T.QuantScheme = T.QuantScheme(), *,
-                  calibrator: str = "minmax",
-                  hist_sites: tuple[str, ...] = ("attn_in", "ffn_in", "p"),
+                  calibrator: Optional[str] = None,
+                  precision: Optional[PrecisionPlan] = None,
+                  hist_sites: tuple[str, ...] = HIST_SITES,
                   compute_dtype=jnp.float32,
                   **calib_kw) -> dict[str, dict[str, float]]:
     """Run calibration batches through the float model with observers on and
     reduce per-(layer, site) statistics to amax values.
 
-    ``minmax`` consumes the cheap per-batch scalar amax observations (works
-    at any model size). Histogram calibrators (percentile/mse/entropy)
-    additionally consume raw values on ``hist_sites`` — that path
-    materializes activations and is intended for calibration-size models
-    only; sites without raw captures fall back to the scalar minmax amax.
+    Calibrator selection, in precedence order:
+
+    * ``calibrator=`` — one calibrator name for every site (the paper's
+      workflow; ``"minmax"`` consumes the cheap per-batch scalar amax
+      observations and works at any model size);
+    * ``precision=`` — a :class:`PrecisionPlan` whose per-block
+      ``QuantSpec.calibrator`` choices are honored per (layer, site) via
+      :data:`SITE_BLOCK`;
+    * neither — min-max everywhere.
+
+    Histogram calibrators (percentile/mse/entropy) additionally consume raw
+    values on ``hist_sites`` — that path materializes activations and is
+    intended for calibration-size models only; sites without raw captures
+    fall back to the scalar minmax amax.
 
     Returns {"layer{i}": {site: amax}}.
     """
-    use_hist = calibrator != "minmax"
+    def site_calibrator(layer_idx: int, site: str) -> str:
+        if calibrator is not None:
+            return calibrator
+        if precision is not None:
+            block = SITE_BLOCK.get(site)
+            if block is not None and layer_idx < precision.num_layers:
+                spec = precision.layers[layer_idx].spec(block)
+                if spec.quantized:
+                    return spec.calibrator
+        return "minmax"
+
+    if calibrator is not None:
+        use_hist = calibrator != "minmax"
+    else:
+        use_hist = precision is not None and any(
+            lp.spec(b).quantized and lp.spec(b).calibrator != "minmax"
+            for lp in precision.layers for b in
+            ("qkv", "attn_out", "ffn_in", "ffn_out"))
+
+    def calibrator_kw(name: str) -> dict:
+        # a plan may mix calibrator families in one capture run; hand each
+        # constructor only the kwargs it accepts (percentile= must not
+        # crash the MSE calibrator on another block)
+        accepted = inspect.signature(CALIBRATORS[name].__init__).parameters
+        return {k: v for k, v in calib_kw.items() if k in accepted}
+
     cals: dict[str, Calibrator] = {}
     scalar_amax: dict[str, float] = {}
 
@@ -216,10 +292,14 @@ def capture_stats(params: dict, batches: Sequence[dict], cfg: ArchConfig,
             if key.startswith("layer"):
                 scalar_amax[key] = max(scalar_amax.get(key, 0.0), float(v))
         for key, v in raw.items():
-            site = key.split("/", 1)[1]
-            if site in hist_sites:
-                cals.setdefault(key, make_calibrator(calibrator, **calib_kw)
-                                ).observe(np.asarray(v))
+            layer, site = key.split("/", 1)
+            if site not in hist_sites:
+                continue
+            name = site_calibrator(int(layer[len("layer"):]), site)
+            if name == "minmax":
+                continue            # scalar running max already covers it
+            cals.setdefault(key, make_calibrator(name, **calibrator_kw(name))
+                            ).observe(np.asarray(v))
 
     out: dict[str, dict[str, float]] = {}
     for key, amax in scalar_amax.items():
@@ -231,20 +311,38 @@ def capture_stats(params: dict, batches: Sequence[dict], cfg: ArchConfig,
     return out
 
 
-def apply_policy(params: dict, cfg: ArchConfig, policy: EncoderPolicy,
-                 stats: dict[str, dict[str, float]], *,
-                 scheme: T.QuantScheme = T.QuantScheme(),
-                 float_plan=None):
+def apply_plan(params: dict, cfg: ArchConfig,
+               precision: Union[PrecisionPlan, EncoderPolicy],
+               stats: dict[str, dict[str, float]], *,
+               scheme: T.QuantScheme = T.QuantScheme(),
+               float_plan=None):
     """float params (packed under ``float_plan``) + calibration stats
-    -> (quantized params packed under the policy's plan, that plan)."""
+    -> (quantized params packed under the plan's execution plan, that
+    execution plan). The PrecisionPlan entry point every consumer uses."""
+    precision = as_plan(precision, dynamic_acts=scheme.dynamic_acts)
+    if precision.num_layers != cfg.num_layers:
+        raise ValueError(f"plan has {precision.num_layers} layers, arch "
+                         f"{cfg.num_layers}")
     float_plan = float_plan or T.build_plan(
-        cfg, EncoderPolicy.full_float(cfg.num_layers, policy.float_dtype))
-    new_plan = T.build_plan(cfg, policy)
+        cfg, PrecisionPlan.full_float(cfg.num_layers, precision.float_dtype))
+    new_plan = T.build_plan(cfg, precision)
     kinds = cfg.layer_kinds()
 
     def transform(i: int, lp: dict) -> dict:
-        return quantize_layer(lp, cfg, kinds[i], policy.modes[i],
+        return quantize_layer(lp, cfg, kinds[i], precision.layers[i],
                               stats.get(f"layer{i}", {}), scheme)
 
     qparams = T.repack(params, float_plan, new_plan, transform)
     return qparams, new_plan
+
+
+def apply_policy(params: dict, cfg: ArchConfig, policy: EncoderPolicy,
+                 stats: dict[str, dict[str, float]], *,
+                 scheme: T.QuantScheme = T.QuantScheme(),
+                 float_plan=None):
+    """:class:`EncoderPolicy` compatibility wrapper over
+    :func:`apply_plan` (policies convert losslessly; ``scheme.dynamic_acts``
+    selects per-token activation quantization, as before)."""
+    precision = plan_from_policy(policy, dynamic_acts=scheme.dynamic_acts)
+    return apply_plan(params, cfg, precision, stats, scheme=scheme,
+                      float_plan=float_plan)

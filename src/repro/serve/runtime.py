@@ -3,10 +3,15 @@
 Every inference path (the token-level serving engine, the encoder serving
 engine, ``Pipeline.predict``/``eval``, and the wall-clock benchmarks) funnels
 through one :class:`Runtime`, which owns the jitted executables keyed by
-``(plan, scheme, kind, bucket_shape)``:
+``(precision_fingerprint, kind, bucket_shape)``:
 
 * a Runtime instance is bound to one ``(cfg, plan, scheme, compute_dtype,
-  head)`` configuration — the static half of the key;
+  head)`` configuration — but the executable-cache key leads with the
+  deployment's scheme identity: the bound
+  :class:`~repro.core.plan.PrecisionPlan`'s stable ``fingerprint()`` (or a
+  structural hash of (plan, scheme) when no PrecisionPlan was given), so
+  :meth:`share` can hand sibling views of one cache to pipelines running
+  *different* plans without key collisions;
 * request shapes are rounded up to power-of-two *buckets* (batch and, for
   token inputs, sequence length), so a mixed-length request stream compiles
   at most once per bucket instead of once per shape;
@@ -76,6 +81,7 @@ class Runtime:
 
     def __init__(self, cfg: ArchConfig, plan, *,
                  scheme: T.QuantScheme = T.QuantScheme(),
+                 precision=None,
                  compute_dtype=jnp.float32,
                  head: Optional[HeadFn] = None, token_level: bool = False,
                  min_batch: int = 1, min_len: int = 8,
@@ -84,6 +90,7 @@ class Runtime:
         self.cfg = cfg
         self.plan = plan
         self.scheme = scheme
+        self.precision = precision          # Optional[PrecisionPlan]
         self.compute_dtype = compute_dtype
         self.head = head
         self.token_level = token_level
@@ -94,9 +101,30 @@ class Runtime:
         # MoE expert capacity scales with the token count: padded tokens
         # would consume capacity and change routing for real rows.
         self.bucketed = cfg.moe is None
+        # the scheme-identity half of every cache key: the PrecisionPlan's
+        # stable fingerprint when one is bound, else a structural hash of
+        # (execution plan, scheme) — both shareable across sibling views
+        self._plan_key = (precision.fingerprint() if precision is not None
+                          else hash((plan, scheme)))
         self._exe: dict[tuple, Callable] = {}
         self._stats = {"calls": 0, "traces": 0,
                        "real_tokens": 0, "padded_tokens": 0}
+
+    def share(self, plan, *, scheme: Optional[T.QuantScheme] = None,
+              precision=None) -> "Runtime":
+        """A sibling Runtime bound to a different (plan, scheme, precision)
+        that SHARES this runtime's executable cache and counters. Cache keys
+        lead with the precision fingerprint, so two pipelines under
+        different plans share one runtime without collisions — and still
+        compile at most once per (plan, kind, bucket)."""
+        rt = Runtime(self.cfg, plan, scheme=scheme or self.scheme,
+                     precision=precision, compute_dtype=self.compute_dtype,
+                     head=self.head, token_level=self.token_level,
+                     min_batch=self.min_batch, min_len=self.min_len,
+                     max_len=self.max_len, chunk=self.chunk)
+        rt._exe = self._exe
+        rt._stats = self._stats
+        return rt
 
     # -- cache plumbing ------------------------------------------------------
     def _get(self, key: tuple, build: Callable[[], Callable]) -> Callable:
@@ -110,9 +138,11 @@ class Runtime:
     def stats(self) -> dict:
         """Counters + executable census. ``traces`` counts actual XLA traces
         (incremented inside the traced body); ``executables`` the distinct
-        (kind, bucket) entries."""
+        (plan, kind, bucket) entries. Keys are
+        ("encode", plan_key, Bb, Sb, ...) / ("decode", plan_key, B, ...)."""
         return dict(self._stats, executables=len(self._exe),
-                    buckets=sorted({k[:3] if k[0] == "encode" else k[:2]
+                    buckets=sorted({(k[0],) + (k[2:4] if k[0] == "encode"
+                                               else k[2:3])
                                     for k in self._exe}))
 
     # -- encoder / full-sequence path ---------------------------------------
@@ -174,7 +204,7 @@ class Runtime:
         # input structure (which arrays, their dtypes) and the params
         # structure (float vs quantized leaves) are part of the compiled
         # signature: distinct signatures get distinct cache entries
-        fn = self._get(("encode", Bb, Sb, _tree_sig(padded),
+        fn = self._get(("encode", self._plan_key, Bb, Sb, _tree_sig(padded),
                         _tree_sig(params)), self._build_encode)
         out = fn(params, {k: jnp.asarray(v) for k, v in padded.items()},
                  jnp.asarray(full_len))
@@ -210,7 +240,7 @@ class Runtime:
         max_len/cache_dtype can share one runtime without colliding. The
         returned callable is the per-tick hot path: no signature hashing
         per token."""
-        key = ("decode", self._decode_batch(caches),
+        key = ("decode", self._plan_key, self._decode_batch(caches),
                _tree_sig(caches), _tree_sig(params))
         fn = self._get(key, self._build_decode)
 

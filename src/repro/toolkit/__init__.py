@@ -12,6 +12,8 @@ The paper's modular design as importable pieces:
   ``save`` / ``load`` / ``serve``)
 * :mod:`~repro.toolkit.artifact`  — deployable quantized bundles
 """
+from repro.core.plan import LayerPlan, PrecisionPlan, QuantSpec  # noqa: F401
+from repro.core.samp import SEARCH_STRATEGIES, register_strategy  # noqa: F401
 from repro.toolkit import artifact, latency, registry, targets  # noqa: F401
 from repro.toolkit.artifact import Artifact, load_artifact, save_artifact
 from repro.toolkit.latency import (LatencyBackend, RooflineBackend,
@@ -27,6 +29,8 @@ from repro.toolkit.samp import SAMP, AutotuneReport
 from repro.toolkit.targets import TargetSpec
 
 __all__ = [
+    "PrecisionPlan", "LayerPlan", "QuantSpec",
+    "SEARCH_STRATEGIES", "register_strategy",
     "SAMP", "AutotuneReport", "Pipeline", "TargetSpec",
     "TokenizerStage", "EmbeddingStage", "EncoderStage", "TargetStage",
     "Artifact", "save_artifact", "load_artifact",

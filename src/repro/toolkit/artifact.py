@@ -4,31 +4,37 @@ An artifact is everything SAMP chose plus everything PTQ produced, saved as
 one directory:
 
 * ``artifact.json``  — the architecture config, the chosen
-  :class:`~repro.core.precision.EncoderPolicy`, the quantization scheme,
-  the calibration stats (per-layer/site amax values), the task + target
-  head identity, and the parameter dtype;
+  :class:`~repro.core.plan.PrecisionPlan` (with its ``fingerprint`` recorded
+  for integrity checks), the quantization scheme, the calibration stats
+  (per-layer/site amax values), the task + target head identity, and the
+  parameter dtype;
 * ``step_00000000/`` — every parameter leaf (int8 weights, scales, float
   residue) written through :mod:`repro.checkpoint.store` (atomic rename,
   template-addressed leaves).
 
 Loading reconstructs the exact parameter *structure* from the metadata —
-float init -> ``ptq.apply_policy`` with the saved stats/policy gives a
+float init -> ``ptq.apply_plan`` with the saved stats/plan gives a
 template with the same QuantizedTensor layout — then restores the saved
 leaves into it. Outputs are bit-identical to the pipeline that was saved,
-and no calibration batches are needed at deployment time.
+the reloaded plan's ``fingerprint()`` is byte-identical to the recorded
+one, and no calibration batches are needed at deployment time.
+
+Version history: v1 bundles stored an ``EncoderPolicy`` (``policy`` key);
+they still load, through the lossless policy -> plan shim.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import os
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import store
 from repro.configs.base import ArchConfig, MLAConfig, MoEConfig
+from repro.core.plan import PrecisionPlan, as_plan, plan_from_policy
 from repro.core.precision import EncoderPolicy, LayerMode
 from repro.data.pipeline import TaskSpec
 from repro.models import transformer as T
@@ -36,14 +42,14 @@ from repro.quant import ptq
 from repro.toolkit.registry import get_target
 
 METADATA = "artifact.json"
-VERSION = 1
+VERSION = 2
 
 
 @dataclasses.dataclass
 class Artifact:
     """A loaded bundle, ready to serve."""
     cfg: ArchConfig
-    policy: EncoderPolicy
+    precision: PrecisionPlan
     scheme: T.QuantScheme
     stats: dict
     params: dict
@@ -55,6 +61,11 @@ class Artifact:
     compute_dtype: str = "float32"
     tokenizer: Optional[object] = None       # WordPieceTokenizer
 
+    @property
+    def policy(self) -> PrecisionPlan:
+        """The precision description (kept under the pre-plan name)."""
+        return self.precision
+
     def pipeline(self):
         """Rebuild the (quantized) Pipeline this artifact was saved from."""
         from repro.toolkit.pipeline import Pipeline
@@ -65,7 +76,7 @@ class Artifact:
                               n_out=self.n_out, scheme=self.scheme,
                               tokenizer=self.tokenizer,
                               compute_dtype=jnp.dtype(self.compute_dtype))
-        return float_pipe.with_policy(self.params, self.plan, self.policy)
+        return float_pipe.with_policy(self.params, self.plan, self.precision)
 
 
 def _cfg_to_dict(cfg: ArchConfig) -> dict:
@@ -90,21 +101,24 @@ def _param_dtype(params: dict) -> str:
 
 
 def save_artifact(directory: str, *, cfg: ArchConfig,
-                  policy: EncoderPolicy, stats: dict, params: dict,
+                  policy: Union[PrecisionPlan, EncoderPolicy],
+                  stats: dict, params: dict,
                   scheme: T.QuantScheme = T.QuantScheme(),
                   task: Optional[TaskSpec] = None,
                   target: str = "lm", n_out: int = 0,
                   compute_dtype: str = "float32",
                   tokenizer=None) -> str:
     """Write a deployable bundle. ``params`` must be the PTQ output for
-    ``policy`` (packed under its plan); ``stats`` the calibration stats the
-    policy was applied with."""
+    ``policy`` (a PrecisionPlan, or an EncoderPolicy coerced through the
+    shim) packed under its execution plan; ``stats`` the calibration stats
+    the plan was applied with."""
+    precision = as_plan(policy, dynamic_acts=scheme.dynamic_acts)
     os.makedirs(directory, exist_ok=True)
     meta = {
         "version": VERSION,
         "arch": _cfg_to_dict(cfg),
-        "policy": {"modes": [m.value for m in policy.modes],
-                   "float_dtype": policy.float_dtype},
+        "plan": precision.to_dict(),
+        "plan_fingerprint": precision.fingerprint(),
         "scheme": dataclasses.asdict(scheme),
         "stats": stats,
         "task": dataclasses.asdict(task) if task is not None else None,
@@ -123,17 +137,34 @@ def save_artifact(directory: str, *, cfg: ArchConfig,
     return directory
 
 
-def load_artifact(directory: str) -> Artifact:
-    """Reload a bundle: rebuild the quantized parameter structure from the
-    saved policy + stats, then restore the leaves. No re-calibration."""
-    with open(os.path.join(directory, METADATA)) as f:
-        meta = json.load(f)
-    if meta["version"] != VERSION:
-        raise ValueError(f"artifact version {meta['version']} != {VERSION}")
-    cfg = _cfg_from_dict(meta["arch"])
+def _precision_from_meta(meta: dict) -> PrecisionPlan:
+    if meta["version"] >= 2:
+        precision = PrecisionPlan.from_dict(meta["plan"])
+        want = meta.get("plan_fingerprint")
+        if want is not None and precision.fingerprint() != want:
+            raise ValueError(
+                f"plan fingerprint mismatch: metadata says {want}, "
+                f"reloaded plan hashes to {precision.fingerprint()} — "
+                f"the bundle's artifact.json was edited or corrupted")
+        return precision
+    # v1: an EncoderPolicy (modes + float_dtype) through the lossless shim
     policy = EncoderPolicy(
         tuple(LayerMode(m) for m in meta["policy"]["modes"]),
         meta["policy"]["float_dtype"])
+    scheme = T.QuantScheme(**meta["scheme"])
+    return plan_from_policy(policy, dynamic_acts=scheme.dynamic_acts)
+
+
+def load_artifact(directory: str) -> Artifact:
+    """Reload a bundle: rebuild the quantized parameter structure from the
+    saved plan + stats, then restore the leaves. No re-calibration."""
+    with open(os.path.join(directory, METADATA)) as f:
+        meta = json.load(f)
+    if not 1 <= meta["version"] <= VERSION:
+        raise ValueError(f"artifact version {meta['version']} not in "
+                         f"[1, {VERSION}]")
+    cfg = _cfg_from_dict(meta["arch"])
+    precision = _precision_from_meta(meta)
     scheme = T.QuantScheme(**meta["scheme"])
     stats = {layer: {site: float(v) for site, v in sites.items()}
              for layer, sites in meta["stats"].items()}
@@ -147,26 +178,26 @@ def load_artifact(directory: str) -> Artifact:
         tokenizer = WordPieceTokenizer(meta["tokenizer"]["vocab"],
                                        meta["tokenizer"]["granularity"])
 
-    # Structure-only template: float-init + apply_policy with the SAVED
-    # stats/policy yields the exact leaf layout that was saved, and
+    # Structure-only template: float-init + apply_plan with the SAVED
+    # stats/plan yields the exact leaf layout that was saved, and
     # restore() only reads leaf shapes/dtypes — so trace it abstractly
     # (eval_shape): no weights are sampled, nothing is quantized.
     def build_template():
         kbase, khead = jax.random.split(jax.random.PRNGKey(0))
-        float_policy = EncoderPolicy.full_float(cfg.num_layers,
-                                                policy.float_dtype)
-        template = T.init_params(kbase, cfg, float_policy, dtype=dtype)
+        float_precision = PrecisionPlan.full_float(cfg.num_layers,
+                                                   precision.float_dtype)
+        template = T.init_params(kbase, cfg, float_precision, dtype=dtype)
         head = get_target(target_name).init(khead, cfg, n_out, dtype)
         if head is not None:
             template["head"] = head
-        qtemplate, _ = ptq.apply_policy(template, cfg, policy, stats,
-                                        scheme=scheme)
+        qtemplate, _ = ptq.apply_plan(template, cfg, precision, stats,
+                                      scheme=scheme)
         return qtemplate
 
     qtemplate = jax.eval_shape(build_template)
-    plan = T.build_plan(cfg, policy)
+    plan = T.build_plan(cfg, precision)
     params = store.restore(directory, 0, qtemplate)
-    return Artifact(cfg=cfg, policy=policy, scheme=scheme, stats=stats,
+    return Artifact(cfg=cfg, precision=precision, scheme=scheme, stats=stats,
                     params=params, plan=plan, task=task,
                     target_name=target_name, n_out=n_out, path=directory,
                     compute_dtype=meta.get("compute_dtype", "float32"),

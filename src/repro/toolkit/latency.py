@@ -109,9 +109,13 @@ def layer_ops(cfg: ArchConfig, mode: LayerMode, batch: int, seq: int,
     return ops
 
 
-def encoder_latency(cfg: ArchConfig, policy: EncoderPolicy, *, batch: int,
+def encoder_latency(cfg: ArchConfig, policy, *, batch: int,
                     seq: int, chips: int = 1) -> float:
-    """Modeled seconds for one forward pass of the whole encoder stack."""
+    """Modeled seconds for one forward pass of the whole encoder stack.
+    ``policy`` is any precision description exposing ``.modes`` and
+    ``.float_dtype`` — an ``EncoderPolicy`` or a
+    :class:`~repro.core.plan.PrecisionPlan` (priced via its per-layer
+    derived modes)."""
     total = 0.0
     for mode in policy.modes:
         for op in layer_ops(cfg, mode, batch, seq, policy.float_dtype):

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.plan import PrecisionPlan, as_plan
 from repro.core.precision import EncoderPolicy
 from repro.data.pipeline import TaskSpec, eval_accuracy, get_batch, make_task
 from repro.data.tokenizer import WordPieceTokenizer
@@ -114,20 +115,28 @@ class TargetStage:
 
 
 class Pipeline:
-    """tokenizer -> embedding -> encoder -> target, under one precision
-    policy. Hold one Pipeline per deployed configuration: ``with_policy``
-    derives the quantized sibling from PTQ output."""
+    """tokenizer -> embedding -> encoder -> target, under one
+    :class:`~repro.core.plan.PrecisionPlan`. Hold one Pipeline per deployed
+    configuration: ``with_policy`` derives the quantized sibling from PTQ
+    output (and shares this pipeline's runtime — one executable cache,
+    keyed by plan fingerprint)."""
 
     def __init__(self, cfg: ArchConfig, task: TaskSpec, target: TargetSpec,
                  *, n_out: Optional[int] = None,
-                 policy: Optional[EncoderPolicy] = None,
+                 policy: Optional[Union[PrecisionPlan,
+                                        EncoderPolicy]] = None,
                  plan=None, scheme: T.QuantScheme = T.QuantScheme(),
                  params: Optional[dict] = None,
                  tokenizer: Optional[WordPieceTokenizer] = None,
                  compute_dtype=jnp.float32):
         self.cfg = cfg
         self.task = task
-        self.policy = policy or EncoderPolicy.full_float(cfg.num_layers)
+        # the precision description is always a PrecisionPlan internally;
+        # EncoderPolicies coerce through the lossless shim
+        self.policy = (PrecisionPlan.full_float(cfg.num_layers)
+                       if policy is None
+                       else as_plan(policy,
+                                    dynamic_acts=scheme.dynamic_acts))
         self.scheme = scheme
         self.compute_dtype = compute_dtype
         self.params = params
@@ -154,7 +163,7 @@ class Pipeline:
             task = make_task(task, vocab_size=cfg.vocab_size,
                              seq_len=seq_len)
         spec = get_target(target or TARGET_FOR_TASK_KIND[task.kind])
-        policy = EncoderPolicy.full_float(cfg.num_layers, float_dtype)
+        policy = PrecisionPlan.full_float(cfg.num_layers, float_dtype)
         if compute_dtype is None:
             compute_dtype = jnp.dtype(float_dtype) \
                 if float_dtype != "float16" else jnp.float32
@@ -168,15 +177,22 @@ class Pipeline:
         return self.encoder.plan
 
     @property
+    def precision(self) -> PrecisionPlan:
+        """The pipeline's PrecisionPlan (alias of ``policy``)."""
+        return self.policy
+
+    @property
     def runtime(self) -> Runtime:
         """The bucketed-executable runtime this pipeline predicts through
         (and hands to the serving engines, so predict/serve/benchmark share
         one compilation cache). Params are call arguments — fine-tuning
-        does not invalidate it."""
+        does not invalidate it. Cache keys fold the precision plan's
+        fingerprint, so ``with_policy`` siblings share this runtime."""
         if self._runtime is None:
             spec, cfg = self.target.spec, self.cfg
             self._runtime = Runtime(
                 cfg, self.plan, scheme=self.scheme,
+                precision=self.precision,
                 compute_dtype=self.compute_dtype,
                 head=lambda p, h: spec.apply(p, h, cfg),
                 token_level=spec.token_level)
@@ -194,14 +210,21 @@ class Pipeline:
         return params
 
     def with_policy(self, params: dict, plan,
-                    policy: EncoderPolicy) -> "Pipeline":
+                    policy: Union[PrecisionPlan, EncoderPolicy]
+                    ) -> "Pipeline":
         """Same stages, new precision: bind PTQ output (params packed under
-        ``plan``) into a sibling Pipeline."""
-        return Pipeline(self.cfg, self.task, self.target.spec,
+        ``plan``) into a sibling Pipeline. The sibling shares this
+        pipeline's runtime — its executables land in the same cache under
+        the new plan's fingerprint, so float and quantized deployments of
+        one model compile at most once per (plan, bucket)."""
+        pipe = Pipeline(self.cfg, self.task, self.target.spec,
                         n_out=self.target.n_out, policy=policy, plan=plan,
                         scheme=self.scheme, params=params,
                         tokenizer=self.tokenizer.tokenizer,
                         compute_dtype=self.compute_dtype)
+        pipe._runtime = self.runtime.share(plan, scheme=self.scheme,
+                                           precision=pipe.precision)
+        return pipe
 
     # -- forward / predict ---------------------------------------------------
     def forward(self, params: dict, batch: dict) -> jax.Array:

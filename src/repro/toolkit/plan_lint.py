@@ -1,0 +1,86 @@
+"""Plan linter CLI: validate a PrecisionPlan JSON before deploying it.
+
+    PYTHONPATH=src python -m repro.toolkit.plan_lint plan.json
+    PYTHONPATH=src python -m repro.toolkit.plan_lint plan.json --arch bert-base
+    PYTHONPATH=src python -m repro.toolkit.plan_lint plan.json --layers 12
+
+Checks, in order:
+
+* the file parses as JSON and round-trips through
+  :meth:`PrecisionPlan.from_dict` (schema version, block names, weight /
+  activation scheme enums, calibrator names, float dtype — every
+  constraint the dataclass validators enforce);
+* re-serialization is content-identical (``fingerprint()`` of the loaded
+  plan equals the fingerprint of its canonical re-emission — catches
+  silently-dropped unknown keys);
+* with ``--arch`` (registry name; ``--reduced`` for the CPU-container
+  shape) or ``--layers N``: the plan's layer count matches the target
+  architecture.
+
+Exit status 0 = clean (fingerprint printed), 1 = invalid. CI lints the
+golden plan under ``tests/data/`` with this tool.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.core.plan import PrecisionPlan
+
+
+def lint(path: str, *, num_layers: int | None = None,
+         log=print) -> PrecisionPlan:
+    """Validate the plan file; raises ValueError on any violation."""
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+    except json.JSONDecodeError as e:
+        raise ValueError(f"{path}: not valid JSON: {e}") from e
+    try:
+        plan = PrecisionPlan.from_dict(raw)
+    except (ValueError, KeyError, TypeError) as e:
+        raise ValueError(f"{path}: schema violation: {e}") from e
+    reloaded = PrecisionPlan.from_json(plan.to_json())
+    if reloaded.fingerprint() != plan.fingerprint():
+        raise ValueError(f"{path}: plan does not round-trip canonically")
+    if num_layers is not None and plan.num_layers != num_layers:
+        raise ValueError(f"{path}: plan has {plan.num_layers} layers, "
+                         f"target architecture has {num_layers}")
+    log(f"{path}: OK — {plan.describe()}")
+    log(f"fingerprint {plan.fingerprint()}")
+    return plan
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.toolkit.plan_lint",
+        description="validate a PrecisionPlan JSON (schema + layer count)")
+    ap.add_argument("plan", help="path to the plan JSON file")
+    ap.add_argument("--arch", default=None,
+                    help="architecture registry name to check the layer "
+                         "count against")
+    ap.add_argument("--reduced", action="store_true",
+                    help="with --arch: use the reduced (CPU-container) "
+                         "shape")
+    ap.add_argument("--layers", type=int, default=None,
+                    help="expected layer count (alternative to --arch)")
+    args = ap.parse_args(argv)
+
+    num_layers = args.layers
+    if args.arch is not None:
+        from repro.configs import get_config
+        cfg = get_config(args.arch)
+        if args.reduced:
+            cfg = cfg.reduced()
+        num_layers = cfg.num_layers
+    try:
+        lint(args.plan, num_layers=num_layers)
+    except ValueError as e:
+        print(f"plan_lint: {e}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.configs.base import ArchConfig
+from repro.core.plan import PrecisionPlan, as_plan
 from repro.core.precision import EncoderPolicy
 from repro.core.samp import SAMPEngine, SAMPResult, SweepPoint
 from repro.data.pipeline import get_batch
@@ -41,6 +42,12 @@ class AutotuneReport:
     chosen: SAMPResult
     accuracy: float                      # deployed dev accuracy, re-measured
     artifact_path: Optional[str] = None
+    strategy: str = "prefix_grid"
+
+    @property
+    def plan(self) -> PrecisionPlan:
+        """The deployed PrecisionPlan (serializable; ``plan.save(path)``)."""
+        return self.chosen.point.plan
 
     def table(self) -> str:
         base = self.points[0]
@@ -180,25 +187,34 @@ class SAMP:
     # -- step 1: calibration -------------------------------------------------
     def calibrate(self, batches: Optional[Sequence[dict]] = None, *,
                   num_batches: int = 4, batch_size: int = 16,
-                  calibrator: str = "minmax", **kw) -> dict:
+                  calibrator: Optional[str] = None,
+                  precision: Optional[PrecisionPlan] = None, **kw) -> dict:
         """Observe activation ranges. Default batches come from the task's
-        training stream (disjoint indices from fine-tuning)."""
+        training stream (disjoint indices from fine-tuning).
+
+        ``calibrator`` names one of the four PTQ calibrators
+        (minmax/percentile/mse/entropy) for every site; ``precision``
+        instead honors a plan's per-block calibrator choices. Default:
+        min-max everywhere (paper §4.1)."""
         params = self._require_params()
         if batches is None:
             batches = [self.pipeline._model_inputs(
                 get_batch(self.task, 999 + i, batch_size))
                 for i in range(num_batches)]
         self.stats = self.engine.calibrate(params, batches,
-                                           calibrator=calibrator, **kw)
+                                           calibrator=calibrator,
+                                           precision=precision, **kw)
         # sweep results and applied quantization depended on the old stats
         self.points = None
         self.quantized = None
         return self.stats
 
-    # -- step 2: sweep ---------------------------------------------------------
-    def sweep(self, *, stride: int = 1, eval_batches: int = 3,
-              eval_batch_size: int = 64, modes=None) -> list[SweepPoint]:
-        """Measure (accuracy, latency) over the paper's (mode, k) grid."""
+    # -- step 2: search --------------------------------------------------------
+    def sweep(self, *, strategy: str = "prefix_grid", stride: int = 1,
+              eval_batches: int = 3, eval_batch_size: int = 64, modes=None,
+              **strategy_kw) -> list[SweepPoint]:
+        """Measure (accuracy, latency) over a search strategy's candidates
+        (default: the paper's prefix grid; see ``SEARCH_STRATEGIES``)."""
         params = self._require_params()
         if self.stats is None:
             self.calibrate()
@@ -211,9 +227,13 @@ class SAMP:
             self.cfg, batch=self.latency_batch, seq=self.task.seq_len,
             scheme=self.pipeline.scheme,
             compute_dtype=self.pipeline.compute_dtype)
-        kw = {} if modes is None else {"modes": modes}
-        self.points = self.engine.sweep(params, self.stats, eval_fn,
-                                        latency_fn, stride=stride, **kw)
+        kw = dict(strategy_kw)
+        if strategy in ("prefix_grid", "latency_budget"):
+            kw["stride"] = stride
+            if modes is not None:
+                kw["modes"] = modes
+        self.points = self.engine.search(strategy, params, self.stats,
+                                         eval_fn, latency_fn, **kw)
         return self.points
 
     # -- step 3: recommend -----------------------------------------------------
@@ -226,49 +246,73 @@ class SAMP:
                                      min_accuracy=min_accuracy)
 
     # -- step 4: apply ---------------------------------------------------------
-    def apply(self, policy: EncoderPolicy) -> Pipeline:
-        """Quantize under ``policy`` and bind the deployable pipeline."""
+    def apply(self, policy: Union[PrecisionPlan, EncoderPolicy]) -> Pipeline:
+        """Quantize under a PrecisionPlan (or an EncoderPolicy, converted
+        through the shim) and bind the deployable pipeline."""
         params = self._require_params()
         if self.stats is None:
             self.calibrate()
-        qparams, qplan = self.engine.apply(params, self.stats, policy)
-        self.quantized = self.pipeline.with_policy(qparams, qplan, policy)
+        precision = as_plan(policy,
+                            dynamic_acts=self.pipeline.scheme.dynamic_acts)
+        qparams, qplan = self.engine.apply(params, self.stats, precision)
+        self.quantized = self.pipeline.with_policy(qparams, qplan, precision)
         return self.quantized
 
-    # -- the one call ----------------------------------------------------------
-    def autotune(self, *, max_latency: Optional[float] = None,
-                 min_accuracy: Optional[float] = None,
-                 prefer: str = "quant_ffn_only", stride: int = 1,
-                 eval_batches: int = 3, eval_batch_size: int = 64,
-                 save_to: Optional[str] = None) -> AutotuneReport:
-        """calibrate -> sweep -> allocator recommend -> apply, one call.
+    def apply_plan_file(self, path: str) -> Pipeline:
+        """Load a saved ``plan.json`` and deploy it (the CLI's ``--plan``)."""
+        return self.apply(PrecisionPlan.load(path))
 
-        ``prefer`` picks which mode's recommendation to deploy when the
-        allocator returns one per mode (default: Quant-FFN-Only, the
-        paper's preferred configuration); thresholds flow to the
-        Appendix-A policies. ``save_to`` additionally writes the deployable
-        artifact bundle. Sweep points cached by an earlier sweep()/
-        autotune() on the same weights+stats are reused (so ``stride``/
-        ``eval_*`` only apply to a fresh sweep); finetune() and
-        calibrate() invalidate the cache."""
+    # -- the one call ----------------------------------------------------------
+    def autotune(self, *, strategy: str = "prefix_grid",
+                 max_latency: Optional[float] = None,
+                 min_accuracy: Optional[float] = None,
+                 prefer: Optional[str] = None, stride: int = 1,
+                 eval_batches: int = 3, eval_batch_size: int = 64,
+                 save_to: Optional[str] = None,
+                 **strategy_kw) -> AutotuneReport:
+        """calibrate -> search -> allocator recommend -> apply, one call.
+
+        ``strategy`` names a registered search strategy (``prefix_grid`` —
+        the paper's grid, ``greedy`` — per-layer sensitivity subsets,
+        ``latency_budget`` — the grid pruned to a latency ceiling).
+        ``prefer`` picks which candidate family's recommendation to deploy
+        when the allocator returns one per family (default: Quant-FFN-Only
+        when the strategy produced it — the paper's preferred configuration
+        — else the first family); thresholds flow to the Appendix-A
+        policies. ``save_to`` additionally writes the deployable artifact
+        bundle (the chosen plan itself is ``report.plan``). Sweep points
+        cached by an earlier sweep()/autotune() on the same weights+stats
+        are reused (so ``strategy``/``stride``/``eval_*`` only apply to a
+        fresh search); finetune() and calibrate() invalidate the cache."""
         self._require_params()
         if self.stats is None:
             self.calibrate()
         if self.points is None:
-            self.sweep(stride=stride, eval_batches=eval_batches,
-                       eval_batch_size=eval_batch_size)
+            if strategy == "latency_budget" and max_latency is not None:
+                strategy_kw.setdefault("max_latency", max_latency)
+            self.sweep(strategy=strategy, stride=stride,
+                       eval_batches=eval_batches,
+                       eval_batch_size=eval_batch_size, **strategy_kw)
         recs = self.recommend(max_latency=max_latency,
                               min_accuracy=min_accuracy)
-        chosen = next((r for r in recs if r.mode_name == prefer), None)
-        if chosen is None:
-            raise KeyError(f"prefer={prefer!r} matches no recommended mode;"
-                           f" have {[r.mode_name for r in recs]}")
-        pipe = self.apply(chosen.point.policy)
+        if not recs:
+            raise ValueError("the search produced no quantized candidates "
+                             "to recommend from")
+        if prefer is None:
+            chosen = next((r for r in recs
+                           if r.mode_name == "quant_ffn_only"), recs[0])
+        else:
+            chosen = next((r for r in recs if r.mode_name == prefer), None)
+            if chosen is None:
+                raise KeyError(
+                    f"prefer={prefer!r} matches no recommended mode;"
+                    f" have {[r.mode_name for r in recs]}")
+        pipe = self.apply(chosen.point.plan)
         acc = pipe.eval(batches=eval_batches, batch_size=eval_batch_size)
         path = self.save(save_to) if save_to else None
         return AutotuneReport(points=self.points, recommendations=recs,
                               chosen=chosen, accuracy=acc,
-                              artifact_path=path)
+                              artifact_path=path, strategy=strategy)
 
     # -- persistence / serving ---------------------------------------------------
     def save(self, directory: str) -> str:
@@ -280,7 +324,7 @@ class SAMP:
         if self.stats is None:
             raise ValueError("missing calibration stats")
         return A.save_artifact(
-            directory, cfg=self.cfg, policy=self.quantized.policy,
+            directory, cfg=self.cfg, policy=self.quantized.precision,
             stats=self.stats, params=self.quantized.params,
             scheme=self.pipeline.scheme, task=self.task,
             target=self.pipeline.target.spec.name,
