@@ -1,7 +1,7 @@
 """Serving throughput benchmark: both engines, one JSON artifact.
 
     PYTHONPATH=src python benchmarks/serve_throughput.py [--quick] \
-        [--out BENCH_serve.json]
+        [--out BENCH_serve.json] [--backend reference|fused|auto]
 
 Streams a mixed-length request load through the token-level decode engine
 (qwen2-0.5b reduced) and the encoder micro-batching engine (bert-base
@@ -55,9 +55,10 @@ def _build(arch: str, policy: str, head=None, plan_file=None):
 
 
 def bench_decode(n_requests: int, max_tokens: int, policy: str,
-                 plan_file=None) -> dict:
+                 plan_file=None, backend: str = "reference") -> dict:
     cfg, params, plan = _build("qwen2-0.5b", policy, plan_file=plan_file)
-    server = ServeEngine(cfg, params, plan, batch_slots=4, max_len=64)
+    server = ServeEngine(cfg, params, plan, batch_slots=4, max_len=64,
+                         backend=backend)
     rng = np.random.default_rng(0)
     submit_t, retire_t = {}, {}
     reqs = [Request(uid=i,
@@ -77,6 +78,7 @@ def bench_decode(n_requests: int, max_tokens: int, policy: str,
     s = server.stats
     lat = [retire_t[u] - submit_t[u] for u in retire_t]
     return {"engine": "decode", "arch": cfg.name, "requests": n_requests,
+            "backend": server.runtime.backend.describe(),
             "wall_s": wall,
             "requests_per_s": n_requests / wall,
             "tokens_per_s": s["tokens"] / wall,
@@ -86,13 +88,15 @@ def bench_decode(n_requests: int, max_tokens: int, policy: str,
             **_percentiles(lat)}
 
 
-def bench_encoder(n_requests: int, policy: str, plan_file=None) -> dict:
+def bench_encoder(n_requests: int, policy: str, plan_file=None,
+                  backend: str = "reference") -> dict:
     cfg, params, plan = _build("bert-base", policy, head=("cls", 15),
                                plan_file=plan_file)
     # 50 ms batching window: requests accumulate into per-bucket
     # micro-batches instead of flushing one-by-one
     server = EncoderServeEngine(cfg, params, plan, target=get_target("cls"),
-                                max_batch=8, max_wait=0.05, max_len=64)
+                                max_batch=8, max_wait=0.05, max_len=64,
+                                backend=backend)
     rng = np.random.default_rng(0)
     submit_t, retire_t = {}, {}
     t0 = time.perf_counter()
@@ -110,6 +114,7 @@ def bench_encoder(n_requests: int, policy: str, plan_file=None) -> dict:
     s = server.stats
     lat = [retire_t[u] - submit_t[u] for u in retire_t]
     return {"engine": "encoder", "arch": cfg.name, "requests": n_requests,
+            "backend": server.runtime.backend.describe(),
             "wall_s": wall,
             "requests_per_s": n_requests / wall,
             "micro_batches": s["batches"],
@@ -120,7 +125,8 @@ def bench_encoder(n_requests: int, policy: str, plan_file=None) -> dict:
 
 
 def main(quick: bool = False, out: str = "BENCH_serve.json",
-         policy: str = "ffn", plan_file=None, emit=print) -> dict:
+         policy: str = "ffn", plan_file=None, backend: str = "reference",
+         emit=print) -> dict:
     n_dec, n_enc = (6, 16) if quick else (16, 48)
     plan_fp = None
     if plan_file is not None:
@@ -129,16 +135,19 @@ def main(quick: bool = False, out: str = "BENCH_serve.json",
     result = {
         "benchmark": "serve_throughput",
         "policy": policy,
+        "backend": backend,
         "plan_file": plan_file,
         "plan_fingerprint": plan_fp,
         "decode": bench_decode(n_dec, max_tokens=4 if quick else 12,
-                               policy=policy, plan_file=plan_file),
+                               policy=policy, plan_file=plan_file,
+                               backend=backend),
         "encoder": bench_encoder(n_enc, policy=policy,
-                                 plan_file=plan_file),
+                                 plan_file=plan_file, backend=backend),
     }
     for side in ("decode", "encoder"):
         r = result[side]
-        emit(f"[{side}] {r['requests']} reqs in {r['wall_s']:.2f}s "
+        emit(f"[{side}] backend={r['backend']}: {r['requests']} reqs in "
+             f"{r['wall_s']:.2f}s "
              f"({r['requests_per_s']:.1f} req/s) p50={r['p50_latency_s']:.3f}s "
              f"p95={r['p95_latency_s']:.3f}s retraces={r['retraces']} "
              f"executables={r['executables']}")
@@ -157,6 +166,10 @@ if __name__ == "__main__":
                     help="saved PrecisionPlan JSON (overrides --policy; "
                          "the same plan is applied to both engines' archs "
                          "and must match their layer counts)")
+    ap.add_argument("--backend", default="reference",
+                    choices=("reference", "fused", "auto"),
+                    help="compute backend for quantized blocks (fused runs "
+                         "the Pallas kernels — interpret mode off-TPU)")
     args = ap.parse_args()
     main(quick=args.quick, out=args.out, policy=args.policy,
-         plan_file=args.plan)
+         plan_file=args.plan, backend=args.backend)

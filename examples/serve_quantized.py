@@ -45,6 +45,10 @@ ap.add_argument("--max-tokens", type=int, default=12)
 ap.add_argument("--slots", type=int, default=4)
 ap.add_argument("--bundle", default=None,
                 help="artifact dir (default: a temp dir)")
+ap.add_argument("--backend", default="reference",
+                choices=("reference", "fused", "auto"),
+                help="compute backend for the quantized blocks "
+                     "(docs/architecture.md)")
 args = ap.parse_args()
 
 cfg = get_config(args.arch).reduced()
@@ -65,7 +69,8 @@ if args.plan is None:
 plan = lint(args.plan, num_layers=cfg.num_layers)
 
 # -- 3. calibrate + apply + bundle -------------------------------------------
-samp = SAMP.from_config(cfg, task="lm", seq_len=32, float_dtype="float32")
+samp = SAMP.from_config(cfg, task="lm", seq_len=32, float_dtype="float32",
+                        backend=args.backend)
 samp.pipeline.init_params(jax.random.PRNGKey(0))
 
 if plan.num_quant_ffn or plan.num_quant_mha:
@@ -74,7 +79,9 @@ if plan.num_quant_ffn or plan.num_quant_mha:
     print(f"SAMP plan applied: {plan.describe()}")
     bundle = args.bundle or tempfile.mkdtemp(prefix="samp_bundle_")
     samp.save(bundle)
-    samp = SAMP.load(bundle)        # deploy path: no calibration batches
+    # deploy path: no calibration batches; the compute backend is chosen
+    # at load time (it is a deployment property, not part of the bundle)
+    samp = SAMP.load(bundle, backend=args.backend)
     reloaded = samp.current.precision
     assert reloaded.fingerprint() == plan.fingerprint(), "plan drifted!"
     print(f"reloaded artifact bundle from {bundle} "
@@ -82,6 +89,7 @@ if plan.num_quant_ffn or plan.num_quant_mha:
 
 # -- 4. serve -----------------------------------------------------------------
 server = samp.serve(batch_slots=args.slots, max_len=128)
+print(f"serving on compute backend: {server.runtime.backend.describe()}")
 rng = np.random.default_rng(0)
 for i in range(args.requests):
     prompt = rng.integers(1, cfg.vocab_size,

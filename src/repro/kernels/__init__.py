@@ -2,6 +2,11 @@
 
 Each kernel module holds the pl.pallas_call + BlockSpec implementation;
 ops.py is the jit'd public wrapper; ref.py the pure-jnp oracle the test
-suite sweeps against.
+suite sweeps against; backend.py is the ``BACKENDS`` registry
+(reference / fused / auto) that routes the model forward's block-level ops
+to these kernels per the layer's QuantSpec (see docs/architecture.md).
 """
-from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels import backend, ops, ref  # noqa: F401
+from repro.kernels.backend import (BACKENDS, ComputeBackend,  # noqa: F401
+                                   FusedBackend, get_backend,
+                                   register_backend)

@@ -11,10 +11,16 @@ kernel (= HBM) boundaries is int8. One pass over the rows computes
 and writes both h (needed for the next residual add) and q. Row-parallel:
 block = (bm, D) with the full feature dim resident in VMEM (D <= a few K for
 every assigned arch, far under the ~16 MB VMEM budget at bm = 256).
+
+``x_scale`` — the static activation scale of the *consuming* GEMM — is a
+scalar **operand**, not a compile-time constant, so recalibrating a plan (or
+running the kernel under a jitted forward whose params are call arguments)
+never forces a recompile.
 """
 from __future__ import annotations
 
 import functools
+from typing import Union
 
 import jax
 import jax.numpy as jnp
@@ -22,10 +28,11 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.pallas_compat import CompilerParams
+from repro.kernels.quant_linear import fit_block
 
 
-def _kernel(x_ref, res_ref, b_ref, g_ref, beta_ref, h_ref, q_ref, *,
-            kind: str, eps: float, x_scale: float):
+def _kernel(x_ref, res_ref, b_ref, g_ref, beta_ref, s_ref, h_ref, q_ref, *,
+            kind: str, eps: float):
     h = (x_ref[...].astype(jnp.float32) + res_ref[...].astype(jnp.float32)
          + b_ref[...])
     if kind == "layernorm":
@@ -36,29 +43,30 @@ def _kernel(x_ref, res_ref, b_ref, g_ref, beta_ref, h_ref, q_ref, *,
         var = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
         y = h * jax.lax.rsqrt(var + eps) * g_ref[...]
     h_ref[...] = h.astype(h_ref.dtype)
-    q = jnp.round(y / x_scale)
+    q = jnp.round(y / s_ref[...])
     q_ref[...] = jnp.clip(q, -128, 127).astype(jnp.int8)
 
 
 def addnorm_quant(x: jax.Array, residual: jax.Array, bias: jax.Array,
-                  gamma: jax.Array, beta: jax.Array | None, x_scale: float,
+                  gamma: jax.Array, beta: jax.Array | None,
+                  x_scale: Union[float, jax.Array],
                   *, kind: str = "layernorm", eps: float = 1e-6,
                   bm: int = 256, interpret: bool = False):
-    """x, residual: (M, D); bias/gamma/beta: (D,). Returns (h f32/bf16, q int8).
-    ``kind``: 'layernorm' | 'rmsnorm'."""
+    """x, residual: (M, D); bias/gamma/beta: (D,); x_scale: python float or
+    scalar array. Returns (h f32/bf16, q int8). ``kind``: 'layernorm' |
+    'rmsnorm'."""
     M, D = x.shape
-    bm = min(bm, M)
-    assert M % bm == 0, (M, bm)
+    bm = fit_block(M, bm)
     if beta is None:
         beta = jnp.zeros((D,), jnp.float32)
-    kernel = functools.partial(_kernel, kind=kind, eps=eps,
-                               x_scale=float(x_scale))
+    kernel = functools.partial(_kernel, kind=kind, eps=eps)
     row = pl.BlockSpec((bm, D), lambda i: (i, 0))
     vec = pl.BlockSpec((1, D), lambda i: (0, 0))
+    scalar = pl.BlockSpec((1, 1), lambda i: (0, 0))
     h, q = pl.pallas_call(
         kernel,
         grid=(M // bm,),
-        in_specs=[row, row, vec, vec, vec],
+        in_specs=[row, row, vec, vec, vec, scalar],
         out_specs=[row, row],
         out_shape=[jax.ShapeDtypeStruct((M, D), x.dtype),
                    jax.ShapeDtypeStruct((M, D), jnp.int8)],
@@ -67,5 +75,6 @@ def addnorm_quant(x: jax.Array, residual: jax.Array, bias: jax.Array,
         interpret=interpret,
     )(x, residual, bias.reshape(1, D).astype(jnp.float32),
       gamma.reshape(1, D).astype(jnp.float32),
-      beta.reshape(1, D).astype(jnp.float32))
+      beta.reshape(1, D).astype(jnp.float32),
+      jnp.asarray(x_scale, jnp.float32).reshape(1, 1))
     return h, q

@@ -1,0 +1,261 @@
+"""Compute backends: per-block dispatch between reference XLA and fused Pallas.
+
+The PrecisionPlan decides *what* is quantized; the **compute backend**
+decides *how* each quantized block executes. The registry holds three
+backends (see ``docs/architecture.md`` for the full dispatch table):
+
+* ``reference`` — the composable XLA ops the substrate always had
+  (``repro.models.layers``: float ``dot_general`` / ``int8_matmul``). This
+  backend *declines* every op, so model code falls through to its inline
+  implementation — backend=None and backend="reference" are byte-identical.
+* ``fused``     — the Pallas kernels in this package: block GEMMs through
+  ``quant_linear`` (dequant + bias + activation fused into the epilogue),
+  the attn→ffn residual boundary through ``addnorm_quant`` (emitting the
+  int8 tensor the FFN input GEMM consumes — the paper's Figure-2 int8
+  inter-kernel dataflow), per-token activation scales through
+  ``dynamic_quant``, and the embedding gather through ``fused_embed``.
+  Float blocks, MoE/MLA/recurrent bodies, and observer-capture runs keep
+  the reference path — dispatch is per-op, driven by the parameter leaves
+  the plan produced (QuantizedTensor weights + ``xs`` scales).
+* ``auto``      — ``fused`` where the platform compiles it (TPU / Mosaic),
+  ``reference`` everywhere else. On a CPU container the kernels only run in
+  interpret mode (a correctness tool, not a fast path), so ``auto``
+  resolves to reference there.
+
+Backends are instantiated via :func:`get_backend` (a name or an instance);
+every op either returns a result or ``None`` ("decline — use the reference
+path"), which is what makes per-op fallback structural rather than
+flag-driven. The backend's ``name`` is part of the serving runtime's
+executable-cache key, next to the plan fingerprint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QuantizedTensor, quantize
+from repro.kernels.quant_linear import ACTIVATIONS
+
+#: activation functions a fused GEMM epilogue can apply — exactly the
+#: kernel's own table, so a new activation is fusable the moment the
+#: kernel (and the reference path, which shares the table) supports it.
+FUSABLE_ACTS = tuple(ACTIVATIONS)
+
+
+@dataclasses.dataclass
+class QuantActivation:
+    """A pre-quantized activation handed between fused ops inside one trace:
+    the int8 layer-boundary tensor of the paper's Figure 2 (green arrows),
+    plus the float dtype the consumer should emit. Produced by the fused
+    ``addnorm`` op, consumed by the next block's ``linear``."""
+
+    q: QuantizedTensor
+    out_dtype: Any
+
+    @property
+    def shape(self):
+        return self.q.values.shape
+
+    @property
+    def dtype(self):
+        return self.out_dtype
+
+    def dequantize(self) -> jax.Array:
+        return self.q.dequantize(self.out_dtype)
+
+
+def ffn_input_scale(ffn_p: dict, ffn_kind: str) -> Optional[jax.Array]:
+    """The static activation scale the layer's ffn_in GEMMs were calibrated
+    with — present iff the plan made the block int8 with static acts. This
+    is the requant scale the fused addnorm kernel needs to emit the int8
+    tensor those GEMMs consume."""
+    key = "wg" if ffn_kind == "glu" else "wi"
+    sub = ffn_p.get(key)
+    if not isinstance(sub, dict) or not isinstance(sub.get("w"),
+                                                   QuantizedTensor):
+        return None
+    return sub.get("xs")
+
+
+class ComputeBackend:
+    """Reference backend: decline every op so model code runs its inline
+    XLA implementation. Also the base class fused backends extend."""
+
+    name = "reference"
+
+    def linear(self, x, p: dict, *, act: Optional[str] = None):
+        """One block GEMM: x (..., K) @ p["w"] (+ bias) (+ activation).
+        Return the result, or None to use the caller's reference path."""
+        return None
+
+    def addnorm(self, delta, residual, p: dict, kind: str, next_scale,
+                eps: float = 1e-6):
+        """The residual boundary: (residual + delta, norm(...)), requantized
+        for the next GEMM when ``next_scale`` is its static act scale.
+        Return (new_residual, norm_out_or_QuantActivation), or None."""
+        return None
+
+    def embed(self, tokens, p: dict, cfg, *, positions, segments,
+              compute_dtype):
+        """Token(+position)(+segment) embedding. Return (B, S, D), or None
+        to use the reference gather."""
+        return None
+
+    # -- plan validation -----------------------------------------------------
+    def supports(self, spec) -> bool:
+        """Whether this backend can execute a QuantSpec. The built-ins
+        execute every constructible spec (reference ops are the universal
+        per-op fallback); registered custom backends with a narrower op
+        set override this."""
+        return True
+
+    def validate_plan(self, precision) -> None:
+        """Fail at apply time — not serve time — if the plan names a spec
+        :meth:`supports` rejects. A no-op for the built-in backends; the
+        hook exists for custom registered backends."""
+        from repro.core.plan import BLOCKS
+        bad = [(i, b) for i, lp in enumerate(precision.layers)
+               for b in BLOCKS if not self.supports(lp.spec(b))]
+        if bad:
+            shown = ", ".join(f"layer{i}/{b}" for i, b in bad[:4])
+            raise ValueError(
+                f"backend {self.name!r} cannot execute {len(bad)} "
+                f"block(s): {shown}{', ...' if len(bad) > 4 else ''}")
+
+    def describe(self) -> str:
+        return self.name
+
+    def __repr__(self) -> str:
+        return f"<{type(self).__name__} {self.name!r}>"
+
+
+class FusedBackend(ComputeBackend):
+    """Pallas-fused backend: int8 blocks hit the fused kernels, float blocks
+    and unsupported bodies keep the reference path (per-op fallback)."""
+
+    name = "fused"
+
+    def __init__(self, enabled: bool = True):
+        # ``enabled=False`` turns every op into a decline — the AutoBackend
+        # constructor uses it to resolve to reference off-TPU.
+        self._enabled = enabled
+
+    # -- block GEMM ----------------------------------------------------------
+    def linear(self, x, p: dict, *, act: Optional[str] = None):
+        w = p.get("w")
+        if (not self._enabled or not isinstance(w, QuantizedTensor)
+                or w.values.ndim != 2 or act not in FUSABLE_ACTS):
+            return None          # float block / expert stack: reference path
+        K, N = w.values.shape
+        if isinstance(x, QuantActivation):
+            # already int8 — the fused addnorm quantized it with the static
+            # scale this GEMM was calibrated on; no runtime quant needed
+            out_dtype = x.out_dtype
+            lead = x.q.values.shape[:-1]
+            x_q = x.q.values.reshape(-1, K)
+            x_scale = x.q.scale
+        else:
+            out_dtype = x.dtype
+            lead = x.shape[:-1]
+            x2 = x.reshape(-1, K)
+            xs = p.get("xs")
+            if xs is not None:                     # static per-tensor scale
+                x_q, x_scale = quantize(x2, xs), xs
+            else:                                  # per-token dynamic scales
+                from repro.kernels import ops
+                x_q, x_scale = ops.dynamic_quant(x2)
+        w_scale = w.scale.astype(jnp.float32).reshape(-1)
+        if w_scale.shape[0] != N:                  # int8_per_tensor weights
+            w_scale = jnp.broadcast_to(w_scale, (N,))
+        from repro.kernels import ops
+        y = ops.quant_linear(x_q, w.values, w_scale, x_scale,
+                             bias=p.get("b"), act=act, out_dtype=out_dtype)
+        return y.reshape(lead + (N,))
+
+    # -- residual boundary ---------------------------------------------------
+    def addnorm(self, delta, residual, p: dict, kind: str, next_scale,
+                eps: float = 1e-6):
+        if not self._enabled or next_scale is None or residual.ndim != 3:
+            return None
+        from repro.kernels import ops
+        B, S, D = residual.shape
+        h2, q2 = ops.addnorm_quant(
+            delta.reshape(-1, D), residual.reshape(-1, D),
+            jnp.zeros((D,), jnp.float32),          # biases already applied
+            p["scale"], p.get("bias"), next_scale, kind=kind, eps=eps)
+        qa = QuantActivation(
+            QuantizedTensor(q2.reshape(B, S, D),
+                            jnp.asarray(next_scale, jnp.float32), None),
+            residual.dtype)
+        return h2.reshape(B, S, D), qa
+
+    # -- embedding -----------------------------------------------------------
+    def embed(self, tokens, p: dict, cfg, *, positions, segments,
+              compute_dtype):
+        # learned-position archs only (the paper's BERT family); rope archs
+        # have no position table to gather and keep the reference path
+        if not self._enabled or "pos" not in p or cfg.frontend is not None:
+            return None
+        from repro.kernels import ops
+        B, S = tokens.shape
+        pos = jnp.broadcast_to(jnp.asarray(positions, jnp.int32), (B, S))
+        seg_table = seg = None
+        if "seg" in p and segments is not None:
+            seg_table = p["seg"]
+            seg = jnp.asarray(segments).reshape(-1)
+        x = ops.fused_embed(tokens.reshape(-1), p["tok"], p["pos"],
+                            seg_table, seg, positions=pos.reshape(-1),
+                            out_dtype=compute_dtype)
+        x = x.reshape(B, S, -1)
+        # scale/emb-norm epilogue mirrors repro.models.layers.embed exactly
+        # (function-local import: layers imports this module at top level)
+        if cfg.emb_scale_by_sqrt_dim:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), compute_dtype)
+        if "emb_norm" in p:
+            from repro.models.layers import layer_norm
+            x = layer_norm(x, p["emb_norm"])
+        return x
+
+
+class AutoBackend(FusedBackend):
+    """Fused where the platform supports compiled Pallas (TPU), reference
+    elsewhere — interpret mode is a correctness tool, not a serving path."""
+
+    name = "auto"
+
+    def __init__(self):
+        super().__init__(enabled=jax.default_backend() == "tpu")
+
+    def describe(self) -> str:
+        return f"auto[{'fused' if self._enabled else 'reference'}]"
+
+
+BACKENDS: dict[str, type] = {
+    "reference": ComputeBackend,
+    "fused": FusedBackend,
+    "auto": AutoBackend,
+}
+
+
+def register_backend(name: str, cls: type) -> type:
+    BACKENDS[name] = cls
+    return cls
+
+
+def get_backend(backend: Union[str, ComputeBackend, None]) -> ComputeBackend:
+    """Resolve a backend name (or pass an instance through). ``None`` means
+    reference — the substrate's inline ops."""
+    if backend is None:
+        return ComputeBackend()
+    if isinstance(backend, ComputeBackend):
+        return backend
+    try:
+        cls = BACKENDS[backend]
+    except (KeyError, TypeError):
+        raise KeyError(f"unknown compute backend {backend!r}; have "
+                       f"{sorted(BACKENDS)}") from None
+    return cls()

@@ -14,6 +14,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.pallas_compat import CompilerParams
+from repro.kernels.quant_linear import fit_block
 
 _EPS = 1e-8
 
@@ -31,8 +32,7 @@ def dynamic_quant(x: jax.Array, *, bm: int = 256,
                   interpret: bool = False):
     """x: (M, D) float -> (q (M, D) int8, scale (M, 1) f32)."""
     M, D = x.shape
-    bm = min(bm, M)
-    assert M % bm == 0, (M, bm)
+    bm = fit_block(M, bm)   # ragged row counts: shrink to a divisor
     q, s = pl.pallas_call(
         _kernel,
         grid=(M // bm,),

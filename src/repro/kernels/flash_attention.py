@@ -88,13 +88,18 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                    causal: bool = True, window: Optional[int] = None,
+                    causal: bool = False, window: Optional[int] = None,
                     softcap: Optional[float] = None,
                     scale: Optional[float] = None,
                     bq: int = 512, bk: int = 512,
                     interpret: bool = False) -> jax.Array:
     """q: (B, Hq, Sq, d); k, v: (B, Hkv, Sk, d) with Hq % Hkv == 0.
-    Returns (B, Hq, Sq, d)."""
+    Returns (B, Hq, Sq, d).
+
+    ``causal`` defaults **off**: the paper's workloads are encoder-only
+    (bidirectional) — decoder callers must opt in with ``causal=True``
+    explicitly at the call site.
+    """
     B, Hq, Sq, D = q.shape
     _, Hkv, Sk, _ = k.shape
     assert Hq % Hkv == 0

@@ -7,6 +7,11 @@ one kernel using ``PrefetchScalarGridSpec`` — the token/segment/position ids
 are scalar-prefetched into SMEM and drive the BlockSpec index_map, so each
 grid step DMAs exactly the three needed table rows HBM→VMEM and writes one
 fused output row. One pass over HBM instead of three.
+
+Position ids are an explicit prefetch operand so callers with non-trivial
+position streams (the serving runtime's pad-masked positions, packed
+sequences) fuse correctly; ``positions=None`` falls back to the row-major
+``arange(N) mod S`` convention.
 """
 from __future__ import annotations
 
@@ -18,9 +23,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(tok_ids, seg_ids, tok_row, pos_row, seg_row, o_ref, *,
+def _kernel(tok_ids, seg_ids, pos_ids, tok_row, pos_row, seg_row, o_ref, *,
             scale: float):
-    del tok_ids, seg_ids
+    del tok_ids, seg_ids, pos_ids
     x = tok_row[...].astype(jnp.float32)
     if scale != 1.0:
         x = x * scale
@@ -30,30 +35,33 @@ def _kernel(tok_ids, seg_ids, tok_row, pos_row, seg_row, o_ref, *,
 
 def fused_embed(tokens: jax.Array, tok_table: jax.Array,
                 pos_table: jax.Array, seg_table: jax.Array | None,
-                segments: jax.Array | None, *, scale: float = 1.0,
+                segments: jax.Array | None, *,
+                positions: jax.Array | None = None, scale: float = 1.0,
                 out_dtype=jnp.float32, interpret: bool = False) -> jax.Array:
     """tokens: (N,) int32 (flattened batch*seq); tables: (V|P|S, D).
-    positions are ``arange(N) mod pos_table.shape[0]`` rows — the caller
-    flattens (B, S) row-major so position ids repeat per sequence.
-    Returns (N, D).
+    ``positions``: (N,) int32 rows into ``pos_table``; when None the rows
+    are ``arange(N) mod pos_table.shape[0]`` — the caller flattens (B, S)
+    row-major so position ids repeat per sequence. Returns (N, D).
     """
     N = tokens.shape[0]
     V, D = tok_table.shape
     if seg_table is None:
         seg_table = jnp.zeros((1, D), tok_table.dtype)
         segments = jnp.zeros((N,), jnp.int32)
-    kernel = functools.partial(_kernel, scale=float(scale))
     S = pos_table.shape[0]
+    if positions is None:
+        positions = jnp.arange(N, dtype=jnp.int32) % S
+    kernel = functools.partial(_kernel, scale=float(scale))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(N,),
         in_specs=[
-            pl.BlockSpec((1, D), lambda i, tok, seg: (tok[i], 0)),
-            pl.BlockSpec((1, D), lambda i, tok, seg: (i % S, 0)),
-            pl.BlockSpec((1, D), lambda i, tok, seg: (seg[i], 0)),
+            pl.BlockSpec((1, D), lambda i, tok, seg, pos: (tok[i], 0)),
+            pl.BlockSpec((1, D), lambda i, tok, seg, pos: (pos[i], 0)),
+            pl.BlockSpec((1, D), lambda i, tok, seg, pos: (seg[i], 0)),
         ],
-        out_specs=pl.BlockSpec((1, D), lambda i, tok, seg: (i, 0)),
+        out_specs=pl.BlockSpec((1, D), lambda i, tok, seg, pos: (i, 0)),
     )
     return pl.pallas_call(
         kernel,
@@ -61,4 +69,4 @@ def fused_embed(tokens: jax.Array, tok_table: jax.Array,
         out_shape=jax.ShapeDtypeStruct((N, D), out_dtype),
         interpret=interpret,
     )(tokens.astype(jnp.int32), segments.astype(jnp.int32),
-      tok_table, pos_table, seg_table)
+      positions.astype(jnp.int32), tok_table, pos_table, seg_table)

@@ -4,11 +4,20 @@ On TPU these lower to Mosaic; on this CPU container they run in interpret
 mode (``interpret=True`` executes the kernel body in Python per grid step —
 the correctness path used by the test suite). ``KERNEL_INTERPRET`` flips
 globally so model code can call the same entry points everywhere.
+
+Activation scales are **operands** (traced arrays), not static arguments:
+the serving runtime jits the whole forward with params as call arguments,
+so calibrated scales must flow through the kernels as data — swapping a
+recalibrated checkpoint or a per-token dynamic scale never retraces.
+
+These wrappers are the only kernel entry points the compute-backend layer
+(:mod:`repro.kernels.backend`) dispatches to; model code selects between
+them and the reference XLA ops per block via the ``BACKENDS`` registry.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -24,19 +33,25 @@ KERNEL_INTERPRET = jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "x_scale", "act", "out_scale", "out_dtype", "bm", "bn", "bk"))
-def quant_linear(x_q, w_q, w_scale, x_scale: float, *, bias=None,
-                 act: Optional[str] = None, out_scale: Optional[float] = None,
+    "act", "out_scale", "out_dtype", "bm", "bn", "bk"))
+def quant_linear(x_q, w_q, w_scale, x_scale: Union[float, jax.Array], *,
+                 bias=None, act: Optional[str] = None,
+                 out_scale: Optional[float] = None,
                  out_dtype=jnp.bfloat16, bm=128, bn=128, bk=128):
+    """Fused W8A8 GEMM; ``x_scale`` is a scalar (static per-tensor) or
+    (M,)/(M, 1) per-token operand."""
     return _ql.quant_linear(x_q, w_q, w_scale, x_scale, bias=bias, act=act,
                             out_scale=out_scale, out_dtype=out_dtype,
                             bm=bm, bn=bn, bk=bk,
                             interpret=KERNEL_INTERPRET)
 
 
-@functools.partial(jax.jit, static_argnames=("x_scale", "kind", "eps", "bm"))
-def addnorm_quant(x, residual, bias, gamma, beta, x_scale: float, *,
+@functools.partial(jax.jit, static_argnames=("kind", "eps", "bm"))
+def addnorm_quant(x, residual, bias, gamma, beta,
+                  x_scale: Union[float, jax.Array], *,
                   kind: str = "layernorm", eps: float = 1e-6, bm: int = 256):
+    """Fused residual add + norm + requantize; ``x_scale`` is a scalar
+    operand (the consuming GEMM's static activation scale)."""
     return _anq.addnorm_quant(x, residual, bias, gamma, beta, x_scale,
                               kind=kind, eps=eps, bm=bm,
                               interpret=KERNEL_INTERPRET)
@@ -44,10 +59,13 @@ def addnorm_quant(x, residual, bias, gamma, beta, x_scale: float, *,
 
 @functools.partial(jax.jit, static_argnames=("scale", "out_dtype"))
 def fused_embed(tokens, tok_table, pos_table, seg_table=None, segments=None,
-                *, scale: float = 1.0, out_dtype=jnp.float32):
+                *, positions=None, scale: float = 1.0,
+                out_dtype=jnp.float32):
+    """Fused token+position+segment gather; ``positions`` (N,) overrides the
+    default row-major ``arange(N) mod S`` position stream."""
     return _fe.fused_embed(tokens, tok_table, pos_table, seg_table, segments,
-                           scale=scale, out_dtype=out_dtype,
-                           interpret=KERNEL_INTERPRET)
+                           positions=positions, scale=scale,
+                           out_dtype=out_dtype, interpret=KERNEL_INTERPRET)
 
 
 @functools.partial(jax.jit, static_argnames=("bm",))
@@ -57,11 +75,14 @@ def dynamic_quant(x, *, bm: int = 256):
 
 @functools.partial(jax.jit, static_argnames=(
     "causal", "window", "softcap", "scale", "bq", "bk"))
-def flash_attention(q, k, v, *, causal: bool = True,
+def flash_attention(q, k, v, *, causal: bool = False,
                     window: Optional[int] = None,
                     softcap: Optional[float] = None,
                     scale: Optional[float] = None, bq: int = 512,
                     bk: int = 512):
+    """Flash attention. ``causal`` defaults off (the paper's encoder-only
+    workloads are bidirectional); decoder paths must pass ``causal=True``
+    explicitly."""
     return _fa.flash_attention(q, k, v, causal=causal, window=window,
                                softcap=softcap, scale=scale, bq=bq, bk=bk,
                                interpret=KERNEL_INTERPRET)

@@ -8,13 +8,21 @@ dequant + bias + activation + (optional) requantize **in-register** before
 the single HBM write-back. In Fully-Quant mode the layer boundary tensor is
 int8 — 1 byte/elt of HBM traffic instead of 2.
 
-Tiling: (bm x bk) @ (bk x bn) MXU tiles; all block dims multiples of the
-(8/32, 128) TPU tile grid, 128-aligned on the matmul dims.
+The activation scale is a **per-row operand** (an (M, 1) f32 array), not a
+compile-time constant, so one compiled kernel serves both of the plan's
+activation schemes: static per-tensor scales (the paper's calibrated path —
+the caller broadcasts the scalar) and per-token dynamic scales (the row
+scales emitted by the ``dynamic_quant`` kernel). Traced scales also mean a
+re-calibration never forces a recompile.
+
+Tiling: (bm x bk) @ (bk x bn) MXU tiles; block dims are shrunk to the
+largest divisor of the actual dims (128-aligned shapes keep the full
+(8/32, 128) TPU tile grid).
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +31,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.pallas_compat import CompilerParams
 
-_ACT = {
+# The one activation table shared by the kernel epilogue, the reference
+# dense path (repro.models.layers) and the jnp oracle (kernels/ref.py):
+# fused-vs-reference parity requires a single definition.
+ACTIVATIONS = {
     None: lambda x: x,
     "silu": jax.nn.silu,
     "gelu": functools.partial(jax.nn.gelu, approximate=True),
@@ -31,9 +42,18 @@ _ACT = {
 }
 
 
-def _kernel(x_ref, w_ref, ws_ref, b_ref, o_ref, acc_ref, *,
-            nk: int, act: Optional[str], x_scale: float,
-            out_scale: Optional[float]):
+def fit_block(n: int, b: int) -> int:
+    """Largest divisor of ``n`` that is <= the requested block size ``b``
+    (power-of-two / 128-multiple dims keep the requested tiling; ragged
+    dims shrink instead of asserting)."""
+    b = min(b, n)
+    while n % b:
+        b -= 1
+    return b
+
+
+def _kernel(x_ref, w_ref, ws_ref, xs_ref, b_ref, o_ref, acc_ref, *,
+            nk: int, act: Optional[str], out_scale: Optional[float]):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -48,9 +68,9 @@ def _kernel(x_ref, w_ref, ws_ref, b_ref, o_ref, acc_ref, *,
     @pl.when(k == nk - 1)
     def _epilogue():
         y = acc_ref[...].astype(jnp.float32)
-        y = y * (x_scale * ws_ref[...])          # dequant: per-channel w scale
+        y = y * (xs_ref[...] * ws_ref[...])      # dequant: (bm,1) x (1,bn)
         y = y + b_ref[...]
-        y = _ACT[act](y)
+        y = ACTIVATIONS[act](y)
         if out_scale is not None:                # requantize: int8 stays int8
             q = jnp.round(y / out_scale)
             o_ref[...] = jnp.clip(q, -128, 127).astype(jnp.int8)
@@ -59,7 +79,8 @@ def _kernel(x_ref, w_ref, ws_ref, b_ref, o_ref, acc_ref, *,
 
 
 def quant_linear(x_q: jax.Array, w_q: jax.Array, w_scale: jax.Array,
-                 x_scale: float, *, bias: Optional[jax.Array] = None,
+                 x_scale: Union[float, jax.Array], *,
+                 bias: Optional[jax.Array] = None,
                  act: Optional[str] = None,
                  out_scale: Optional[float] = None,
                  out_dtype=jnp.bfloat16,
@@ -68,20 +89,24 @@ def quant_linear(x_q: jax.Array, w_q: jax.Array, w_scale: jax.Array,
     """y = epilogue((x_q @ w_q) * x_scale * w_scale + bias).
 
     x_q: (M, K) int8; w_q: (K, N) int8; w_scale: (N,) f32 per-channel;
-    x_scale: python float (static per-tensor activation scale — the paper's
-    calibrated scheme). ``out_scale`` requantizes the output to int8 for
-    int8 inter-layer dataflow.
+    x_scale: a python float / scalar array (static per-tensor activation
+    scale — the paper's calibrated scheme) or an (M,) / (M, 1) array of
+    per-token dynamic scales. ``out_scale`` requantizes the output to int8
+    for int8 inter-layer dataflow.
     """
     M, K = x_q.shape
     K2, N = w_q.shape
     assert K == K2, (x_q.shape, w_q.shape)
-    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
-    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    bm, bn, bk = fit_block(M, bm), fit_block(N, bn), fit_block(K, bk)
     nk = K // bk
     if bias is None:
         bias = jnp.zeros((N,), jnp.float32)
-    kernel = functools.partial(_kernel, nk=nk, act=act,
-                               x_scale=float(x_scale), out_scale=out_scale)
+    xs = jnp.asarray(x_scale, jnp.float32)
+    if xs.ndim == 0:
+        xs = jnp.broadcast_to(xs.reshape(1, 1), (M, 1))
+    else:
+        xs = xs.reshape(M, 1)
+    kernel = functools.partial(_kernel, nk=nk, act=act, out_scale=out_scale)
     out = pl.pallas_call(
         kernel,
         grid=(M // bm, N // bn, nk),
@@ -89,6 +114,7 @@ def quant_linear(x_q: jax.Array, w_q: jax.Array, w_scale: jax.Array,
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
             pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
             pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
             pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
@@ -98,6 +124,6 @@ def quant_linear(x_q: jax.Array, w_q: jax.Array, w_scale: jax.Array,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(x_q, w_q, w_scale.reshape(1, N).astype(jnp.float32),
+    )(x_q, w_q, w_scale.reshape(1, N).astype(jnp.float32), xs,
       bias.reshape(1, N).astype(jnp.float32))
     return out

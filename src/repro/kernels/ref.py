@@ -1,19 +1,13 @@
 """Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
 from __future__ import annotations
 
-import functools
 import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-_ACT = {
-    None: lambda x: x,
-    "silu": jax.nn.silu,
-    "gelu": functools.partial(jax.nn.gelu, approximate=True),
-    "relu": jax.nn.relu,
-}
+from repro.kernels.quant_linear import ACTIVATIONS as _ACT
 
 
 def quant_linear(x_q, w_q, w_scale, x_scale, *, bias=None, act=None,
@@ -47,11 +41,13 @@ def addnorm_quant(x, residual, bias, gamma, beta, x_scale, *,
 
 
 def fused_embed(tokens, tok_table, pos_table, seg_table, segments, *,
-                scale=1.0, out_dtype=jnp.float32):
+                positions=None, scale=1.0, out_dtype=jnp.float32):
     N = tokens.shape[0]
     S = pos_table.shape[0]
+    if positions is None:
+        positions = jnp.arange(N) % S
     x = jnp.take(tok_table, tokens, axis=0).astype(jnp.float32) * scale
-    x = x + jnp.take(pos_table, jnp.arange(N) % S, axis=0).astype(jnp.float32)
+    x = x + jnp.take(pos_table, positions, axis=0).astype(jnp.float32)
     if seg_table is not None and segments is not None:
         x = x + jnp.take(seg_table, segments, axis=0).astype(jnp.float32)
     return x.astype(out_dtype)
@@ -65,7 +61,7 @@ def dynamic_quant(x):
     return q, scale
 
 
-def flash_attention(q, k, v, *, causal=True, window: Optional[int] = None,
+def flash_attention(q, k, v, *, causal=False, window: Optional[int] = None,
                     softcap: Optional[float] = None,
                     scale: Optional[float] = None):
     B, Hq, Sq, D = q.shape

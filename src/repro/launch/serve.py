@@ -12,6 +12,9 @@
     ... --plan plan.json
     ... --strategy greedy            # prefix_grid | greedy | latency_budget
 
+    # compute backend for the quantized blocks (docs/architecture.md)
+    ... --backend fused              # reference | fused | auto
+
 Instantiates the reduced config (this is the CPU-container path; on TPU the
 same flow runs the full config), PTQ-calibrates on synthetic batches,
 applies the requested precision — a named mode policy (``--policy``), a
@@ -119,7 +122,8 @@ def serve_decode(cfg, args) -> None:
                                plan_file=args.plan, strategy=args.strategy,
                                max_latency=args.max_latency)
     server = ServeEngine(cfg, params, plan, batch_slots=args.slots,
-                         max_len=args.max_len, seed=args.seed)
+                         max_len=args.max_len, seed=args.seed,
+                         backend=args.backend)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         plen = int(rng.integers(2, 9))
@@ -133,7 +137,8 @@ def serve_decode(cfg, args) -> None:
     for req in sorted(done, key=lambda r: r.uid):
         print(f"  req{req.uid}: prompt={req.prompt} -> {req.output}")
     s = server.stats
-    print(f"[serve] {s['retired']} requests, {s['tokens']} tokens in "
+    print(f"[serve] backend={server.runtime.backend.describe()}: "
+          f"{s['retired']} requests, {s['tokens']} tokens in "
           f"{s['ticks']} ticks, {dt:.2f}s "
           f"({s['tokens'] / max(dt, 1e-9):.1f} tok/s CPU); "
           f"{s['runtime_traces']} compile(s) / "
@@ -150,7 +155,8 @@ def serve_encoder(cfg, args) -> None:
                                plan_file=args.plan, strategy=args.strategy,
                                max_latency=args.max_latency)
     server = EncoderServeEngine(cfg, params, plan, target=spec,
-                                max_batch=args.slots, max_len=args.max_len)
+                                max_batch=args.slots, max_len=args.max_len,
+                                backend=args.backend)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         n = int(rng.integers(4, args.max_len // 2))
@@ -160,7 +166,8 @@ def serve_encoder(cfg, args) -> None:
     server.run()                      # flush full + partial micro-batches
     dt = time.perf_counter() - t0
     s = server.stats
-    print(f"[serve] task={args.task} target={spec.name}: {s['retired']} "
+    print(f"[serve] task={args.task} target={spec.name} "
+          f"backend={server.runtime.backend.describe()}: {s['retired']} "
           f"requests in {s['batches']} micro-batches, {dt:.2f}s "
           f"({s['retired'] / max(dt, 1e-9):.1f} req/s CPU); "
           f"{s['runtime_traces']} compile(s) / "
@@ -186,6 +193,11 @@ def main():
     ap.add_argument("--max-latency", type=float, default=None,
                     help="latency ceiling (roofline seconds) for "
                          "--strategy latency_budget")
+    ap.add_argument("--backend", default="reference",
+                    choices=("reference", "fused", "auto"),
+                    help="compute backend for quantized blocks: reference "
+                         "XLA ops, fused Pallas kernels, or auto (fused on "
+                         "TPU, reference elsewhere)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-tokens", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4,

@@ -31,21 +31,26 @@ from repro.core.quantize import (QuantizedTensor, compute_scale_symmetric,
                                  dequantize, int8_matmul, quantize,
                                  quantize_per_token, quantize_unsigned,
                                  INT8_MAX, UINT8_MAX)
+from repro.kernels.backend import ACTIVATIONS as _ACT
+from repro.kernels.backend import QuantActivation
 
 # ---------------------------------------------------------------------------
 # observer plumbing
 # ---------------------------------------------------------------------------
 
 
-def observe(obs: Optional[dict], site: str, x: jax.Array) -> None:
-    """Record max|x| for a quantization site (calibration mode only)."""
-    if obs is not None:
+def observe(obs: Optional[dict], site: str, x) -> None:
+    """Record max|x| for a quantization site (calibration mode only).
+    Pre-quantized activations are never observed — capture runs on the
+    float model with the reference backend."""
+    if obs is not None and not isinstance(x, QuantActivation):
         obs[site] = jnp.max(jnp.abs(x)).astype(jnp.float32)
 
 
-def observe_values(obs: Optional[dict], site: str, x: jax.Array) -> None:
+def observe_values(obs: Optional[dict], site: str, x) -> None:
     """Record raw values for histogram calibrators (small models only)."""
-    if obs is not None and obs.get("__values__", False):
+    if obs is not None and obs.get("__values__", False) \
+            and not isinstance(x, QuantActivation):
         obs.setdefault("__raw__", {})[site] = x
 
 
@@ -62,16 +67,30 @@ def _act_quantize(x: jax.Array, xs: Optional[jax.Array]) -> QuantizedTensor:
     return quantize_per_token(x)
 
 
-def dense(x: jax.Array, p: dict, obs: Optional[dict] = None,
-          site: str = "x") -> jax.Array:
-    """y = x @ w (+ b). Dispatches on the weight leaf type:
+def dense(x, p: dict, obs: Optional[dict] = None,
+          site: str = "x", backend=None,
+          act: Optional[str] = None) -> jax.Array:
+    """y = act(x @ w (+ b)). Dispatches on the weight leaf type:
 
     * ``jnp.ndarray`` — float GEMM in x.dtype
     * ``QuantizedTensor`` — W8A8 int8 GEMM with int32 accumulation
+
+    ``backend`` (a :mod:`repro.kernels.backend` ComputeBackend) may claim
+    the op — the fused backend routes int8 blocks through the Pallas
+    ``quant_linear`` kernel — or decline (None), keeping this reference
+    path. ``x`` may arrive pre-quantized (a
+    :class:`~repro.kernels.backend.QuantActivation` from the fused addnorm
+    kernel); the reference path dequantizes it back.
     """
-    w = p["w"]
     observe(obs, site, x)
     observe_values(obs, site, x)
+    if backend is not None:
+        y = backend.linear(x, p, act=act)
+        if y is not None:
+            return y
+    if isinstance(x, QuantActivation):
+        x = x.dequantize()
+    w = p["w"]
     if isinstance(w, QuantizedTensor):
         xq = _act_quantize(x, p.get("xs"))
         y = int8_matmul(xq, w, out_dtype=x.dtype)
@@ -81,7 +100,7 @@ def dense(x: jax.Array, p: dict, obs: Optional[dict] = None,
             dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())))
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
-    return y
+    return _ACT[act](y) if act is not None else y
 
 
 def quant_bmm(a: jax.Array, b: jax.Array,
@@ -148,6 +167,26 @@ def layer_norm(x: jax.Array, p: dict, eps: float = 1e-6) -> jax.Array:
 
 def norm(x: jax.Array, p: dict, kind: str, eps: float = 1e-6) -> jax.Array:
     return layer_norm(x, p, eps) if kind == "layernorm" else rms_norm(x, p, eps)
+
+
+def residual_norm(delta: jax.Array, x: jax.Array, p: dict, kind: str, *,
+                  next_scale=None, backend=None,
+                  constrain=lambda t, _tag: t):
+    """The residual boundary: ``(x + delta, norm(x + delta))``.
+
+    When a fused backend claims it and ``next_scale`` carries the consuming
+    GEMM's static activation scale, the Pallas ``addnorm_quant`` kernel
+    computes both outputs in one pass and returns the norm output
+    **pre-quantized** (a QuantActivation) — the paper's int8 inter-kernel
+    dataflow. Otherwise: reference add + norm.
+    """
+    if backend is not None and next_scale is not None:
+        fused = backend.addnorm(delta, x, p, kind, next_scale)
+        if fused is not None:
+            x_new, h = fused
+            return constrain(x_new, "residual"), h
+    x_new = constrain(x + delta, "residual")
+    return x_new, norm(x_new, p, kind)
 
 
 def init_norm(kind: str, dim: int, dtype=jnp.float32) -> dict:
@@ -433,7 +472,8 @@ def attention_block(x: jax.Array, p: dict, cfg, *, positions: jax.Array,
                     kv_cache: Optional[dict] = None,
                     active: Optional[jax.Array] = None,
                     constrain=lambda t, _tag: t,
-                    chunk: Optional[int] = None):
+                    chunk: Optional[int] = None,
+                    backend=None):
     """Full GQA attention block. Returns (out, new_kv_cache|None).
 
     ``kv_cache`` (decode): {"k": (B, W, Hkv, d), "v": ..., "k_pos": (B, W),
@@ -449,12 +489,12 @@ def attention_block(x: jax.Array, p: dict, cfg, *, positions: jax.Array,
     # explicit head sharding after the (q_dim -> H, hd) reshape: without it
     # GSPMD may split the head_dim (contracting in qk^T) and all-reduce the
     # score tensor — measured at +1.8 TB/step on deepseek-coder train_4k
-    q = constrain(dense(x, p["wq"], obs=None)
+    q = constrain(dense(x, p["wq"], obs=None, backend=backend)
                   .reshape(B, S, cfg.num_heads, cfg.head_dim), "attn_heads")
-    k = constrain(dense(x, p["wk"], obs=None)
+    k = constrain(dense(x, p["wk"], obs=None, backend=backend)
                   .reshape(B, S, cfg.num_kv_heads, cfg.head_dim),
                   "attn_heads")
-    v = constrain(dense(x, p["wv"], obs=None)
+    v = constrain(dense(x, p["wv"], obs=None, backend=backend)
                   .reshape(B, S, cfg.num_kv_heads, cfg.head_dim),
                   "attn_heads")
     if cfg.position == "rope":
@@ -481,7 +521,7 @@ def attention_block(x: jax.Array, p: dict, cfg, *, positions: jax.Array,
     o = o.reshape(B, S, cfg.q_dim)
     observe(obs, "attn_out", o)
     observe_values(obs, "attn_out", o)
-    out = dense(o, p["wo"], obs=None)
+    out = dense(o, p["wo"], obs=None, backend=backend)
     return out, new_cache
 
 
@@ -613,19 +653,20 @@ def init_ffn(key, cfg, d_ff: Optional[int] = None, dtype=jnp.float32) -> dict:
             "wo": init_linear(ks[1], d_ff, cfg.d_model, True, dtype)}
 
 
-def ffn_block(x: jax.Array, p: dict, cfg, obs: Optional[dict] = None,
-              prefix: str = "") -> jax.Array:
+def ffn_block(x, p: dict, cfg, obs: Optional[dict] = None,
+              prefix: str = "", backend=None) -> jax.Array:
     observe(obs, prefix + "ffn_in", x)
     observe_values(obs, prefix + "ffn_in", x)
     if cfg.ffn_kind == "glu":
-        h = jax.nn.silu(dense(x, p["wg"])) * dense(x, p["wu"])
+        h = (dense(x, p["wg"], backend=backend, act="silu")
+             * dense(x, p["wu"], backend=backend))
         observe(obs, prefix + "ffn_hidden", h)
         observe_values(obs, prefix + "ffn_hidden", h)
-        return dense(h, p["wd"])
-    h = jax.nn.gelu(dense(x, p["wi"]), approximate=True)
+        return dense(h, p["wd"], backend=backend)
+    h = dense(x, p["wi"], backend=backend, act="gelu")
     observe(obs, prefix + "ffn_hidden", h)
     observe_values(obs, prefix + "ffn_hidden", h)
-    return dense(h, p["wo"])
+    return dense(h, p["wo"], backend=backend)
 
 
 # ---------------------------------------------------------------------------
@@ -815,9 +856,15 @@ def init_embeddings(key, cfg, dtype=jnp.float32) -> dict:
 
 def embed(tokens: jax.Array, p: dict, cfg, *, positions: jax.Array,
           segments: Optional[jax.Array] = None,
-          compute_dtype=jnp.bfloat16) -> jax.Array:
+          compute_dtype=jnp.bfloat16, backend=None) -> jax.Array:
     """Fused token(+segment)(+position) embedding — the paper's Tensor-fusion
-    target; the Pallas `fused_embed` kernel is the TPU hot-path."""
+    target. A fused backend routes learned-position archs through the Pallas
+    ``fused_embed`` kernel (one HBM pass); otherwise three XLA gathers."""
+    if backend is not None:
+        y = backend.embed(tokens, p, cfg, positions=positions,
+                          segments=segments, compute_dtype=compute_dtype)
+        if y is not None:
+            return y
     x = jnp.take(p["tok"], tokens, axis=0).astype(compute_dtype)
     if "pos" in p:
         x = x + jnp.take(p["pos"], positions, axis=0).astype(compute_dtype)

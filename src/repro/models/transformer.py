@@ -31,6 +31,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, BlockKind
 from repro.core.precision import EncoderPolicy, LayerMode
+from repro.kernels.backend import ffn_input_scale
 from repro.models import layers as L
 from repro.models import rglru as R
 from repro.models import xlstm as X
@@ -232,7 +233,8 @@ def repack(params: dict, old_plan: tuple[Group, ...],
 
 def layer_forward(x, lp, cfg: ArchConfig, kind: BlockKind, mode: LayerMode,
                   scheme: QuantScheme, *, positions, obs, cache, chunk,
-                  constrain: Constrain, active=None, quant_bmm=None):
+                  constrain: Constrain, active=None, quant_bmm=None,
+                  backend=None):
     quant = L.AttnQuant(enabled=(mode.quant_mha if quant_bmm is None
                                  else quant_bmm),
                         softmax_mode=scheme.softmax_mode)
@@ -252,20 +254,28 @@ def layer_forward(x, lp, cfg: ArchConfig, kind: BlockKind, mode: LayerMode,
             a, new_cache = L.attention_block(
                 h, lp["attn"], cfg, positions=positions, spec=spec,
                 quant=quant, obs=obs, kv_cache=cache, active=active,
-                constrain=constrain, chunk=chunk)
-        x = constrain(x + a, "residual")
-        h2 = L.norm(x, lp["norm2"], cfg.norm_kind)
+                constrain=constrain, chunk=chunk, backend=backend)
         if kind.moe:
+            x = constrain(x + a, "residual")
+            h2 = L.norm(x, lp["norm2"], cfg.norm_kind)
             f = L.moe_block(h2, lp["ffn"], cfg, obs=obs, constrain=constrain)
         else:
-            f = L.ffn_block(h2, lp["ffn"], cfg, obs=obs)
+            # fused backends collapse add-residual + norm + requant into one
+            # kernel when the ffn_in GEMM has a static int8 scale to feed
+            ns = (ffn_input_scale(lp["ffn"], cfg.ffn_kind)
+                  if backend is not None else None)
+            x, h2 = L.residual_norm(a, x, lp["norm2"], cfg.norm_kind,
+                                    next_scale=ns, backend=backend,
+                                    constrain=constrain)
+            f = L.ffn_block(h2, lp["ffn"], cfg, obs=obs, backend=backend)
         x = constrain(x + f, "residual")
     elif kind.body == "rglru":
         a, new_cache = R.rglru_mix(h, lp["rec"], cfg, obs=obs, state=cache,
                                    active=active)
         x = constrain(x + a, "residual")
         h2 = L.norm(x, lp["norm2"], cfg.norm_kind)
-        x = constrain(x + L.ffn_block(h2, lp["ffn"], cfg, obs=obs),
+        x = constrain(x + L.ffn_block(h2, lp["ffn"], cfg, obs=obs,
+                                      backend=backend),
                       "residual")
     else:
         blk = X.mlstm_block if kind.body == "mlstm" else X.slstm_block
@@ -278,13 +288,19 @@ def layer_forward(x, lp, cfg: ArchConfig, kind: BlockKind, mode: LayerMode,
 def run_groups(x, params, cfg: ArchConfig, plan: tuple[Group, ...],
                scheme: QuantScheme, *, positions, obs=None, caches=None,
                chunk=DEFAULT_CHUNK, constrain: Constrain = _IDENTITY,
-               remat: bool = False, active=None):
+               remat: bool = False, active=None, backend=None):
     """Execute all layer groups. Returns (x, new_caches|None).
 
     ``remat``: rematerialize each layer in the backward pass (activation
     checkpointing at layer-boundary granularity — the standard large-model
     memory policy: only the per-layer residual stream is saved).
+
+    ``backend``: a ComputeBackend routing per-block ops to fused kernels;
+    observer capture always runs the reference path (calibration observes
+    the float dataflow the plan's scales were defined on).
     """
+    if obs is not None:
+        backend = None
     new_caches = [] if caches is not None else None
     for gi, (g, gp) in enumerate(zip(plan, params["groups"])):
         gcache = caches[gi] if caches is not None else None
@@ -295,7 +311,7 @@ def run_groups(x, params, cfg: ArchConfig, plan: tuple[Group, ...],
                 return layer_forward(
                     xc, lp, cfg, kind, mode, scheme, positions=positions,
                     obs=lobs, cache=lcache, chunk=chunk, constrain=constrain,
-                    active=active, quant_bmm=g.quant_bmm)
+                    active=active, quant_bmm=g.quant_bmm, backend=backend)
             return (jax.checkpoint(lf) if remat and lobs is None else lf)
 
         if unrolled:
@@ -358,7 +374,7 @@ def run_groups(x, params, cfg: ArchConfig, plan: tuple[Group, ...],
 
 
 def embed_inputs(params, batch: dict, cfg: ArchConfig, *, positions,
-                 compute_dtype) -> jax.Array:
+                 compute_dtype, backend=None) -> jax.Array:
     """Map raw inputs to the first-layer activation per family."""
     emb = params["embed"]
     if cfg.frontend == "audio":
@@ -366,7 +382,8 @@ def embed_inputs(params, batch: dict, cfg: ArchConfig, *, positions,
                     emb["frontend_proj"])
         return x
     x = L.embed(batch["tokens"], emb, cfg, positions=positions,
-                segments=batch.get("segments"), compute_dtype=compute_dtype)
+                segments=batch.get("segments"), compute_dtype=compute_dtype,
+                backend=backend)
     if cfg.frontend == "vision" and "prefix_embeds" in batch:
         pfx = L.dense(batch["prefix_embeds"].astype(compute_dtype),
                       emb["frontend_proj"])
@@ -390,12 +407,15 @@ def forward(params, batch: dict, cfg: ArchConfig, plan: tuple[Group, ...],
             obs: Optional[dict] = None, caches=None, pos=None, active=None,
             chunk: Optional[int] = DEFAULT_CHUNK,
             constrain: Constrain = _IDENTITY, remat: bool = False,
-            compute_dtype=jnp.bfloat16, return_hidden: bool = False):
+            compute_dtype=jnp.bfloat16, return_hidden: bool = False,
+            backend=None):
     """Full-sequence (train/prefill) or incremental (decode) forward.
 
     decode: pass ``caches`` + ``pos``: an int scalar (synchronized batch) or
     an (B,) int vector (continuous batching — per-row positions, with
     ``active`` (B,) bool gating cache/state writes of idle slots).
+    ``backend``: a ComputeBackend (repro.kernels.backend) selecting the
+    reference XLA or fused Pallas execution per quantized block.
     Returns (logits, new_caches).
     """
     if cfg.frontend == "audio":
@@ -410,12 +430,13 @@ def forward(params, batch: dict, cfg: ArchConfig, plan: tuple[Group, ...],
         positions = (positions[None] + pos[:, None] if pos.ndim == 1
                      else positions + pos)
     x = embed_inputs(params, batch, cfg, positions=positions,
-                     compute_dtype=compute_dtype)
+                     compute_dtype=compute_dtype,
+                     backend=None if obs is not None else backend)
     x = constrain(x, "activation")
     x, new_caches = run_groups(x, params, cfg, plan, scheme,
                                positions=positions, obs=obs, caches=caches,
                                chunk=chunk, constrain=constrain, remat=remat,
-                               active=active)
+                               active=active, backend=backend)
     x = L.norm(x, params["final_norm"], cfg.norm_kind)
     if return_hidden or "head" in params:
         return x, new_caches
@@ -524,10 +545,11 @@ def init_caches(cfg: ArchConfig, plan: tuple[Group, ...],
 def decode_step(params, tokens, caches, pos, cfg: ArchConfig, plan,
                 scheme: QuantScheme = QuantScheme(), *, active=None,
                 constrain: Constrain = _IDENTITY,
-                compute_dtype=jnp.bfloat16):
+                compute_dtype=jnp.bfloat16, backend=None):
     """One serving step: tokens (B, 1) at absolute position(s) ``pos``
     (scalar = synchronized batch; (B,) vector = continuous batching, with
     ``active`` gating idle slots). Returns (logits (B, 1, V), new_caches)."""
     return forward(params, {"tokens": tokens}, cfg, plan, scheme,
                    caches=caches, pos=pos, active=active, chunk=None,
-                   constrain=constrain, compute_dtype=compute_dtype)
+                   constrain=constrain, compute_dtype=compute_dtype,
+                   backend=backend)

@@ -315,11 +315,21 @@ def apply_plan(params: dict, cfg: ArchConfig,
                precision: Union[PrecisionPlan, EncoderPolicy],
                stats: dict[str, dict[str, float]], *,
                scheme: T.QuantScheme = T.QuantScheme(),
-               float_plan=None):
+               float_plan=None, backend=None):
     """float params (packed under ``float_plan``) + calibration stats
     -> (quantized params packed under the plan's execution plan, that
-    execution plan). The PrecisionPlan entry point every consumer uses."""
+    execution plan). The PrecisionPlan entry point every consumer uses.
+
+    ``backend`` (a name or ComputeBackend from
+    :mod:`repro.kernels.backend`) validates up front that every spec the
+    plan names passes the deployment backend's ``supports()`` check — the
+    built-in backends execute everything (reference ops are the universal
+    fallback), so this is the fail-fast hook for custom registered
+    backends with a narrower op set."""
     precision = as_plan(precision, dynamic_acts=scheme.dynamic_acts)
+    if backend is not None:
+        from repro.kernels.backend import get_backend
+        get_backend(backend).validate_plan(precision)
     if precision.num_layers != cfg.num_layers:
         raise ValueError(f"plan has {precision.num_layers} layers, arch "
                          f"{cfg.num_layers}")

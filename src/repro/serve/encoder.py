@@ -38,7 +38,10 @@ class EncoderServeEngine:
                  scheme: T.QuantScheme = T.QuantScheme(),
                  max_batch: int = 8, max_wait: float = 0.0,
                  max_len: int = 256, compute_dtype=jnp.float32,
-                 runtime: Optional[Runtime] = None):
+                 runtime: Optional[Runtime] = None,
+                 backend="reference"):
+        # ``backend`` names the compute backend (repro.kernels.backend) for
+        # the engine's Runtime; ignored when a runtime is shared in.
         if isinstance(target, str):
             # lazy: repro.toolkit imports repro.serve for the facade
             from repro.toolkit.registry import get_target
@@ -55,7 +58,8 @@ class EncoderServeEngine:
         self.runtime = runtime or Runtime(
             cfg, plan, scheme=scheme, compute_dtype=compute_dtype,
             head=lambda p, h: target.apply(p, h, cfg),
-            token_level=target.token_level, max_len=max_len)
+            token_level=target.token_level, max_len=max_len,
+            backend=backend)
         self.batcher = MicroBatcher(max_batch=max_batch, max_wait=max_wait,
                                     max_len=max_len)
         self._stats = {"requests": 0, "batches": 0, "retired": 0,

@@ -54,7 +54,11 @@ class ServeEngine:
                  scheme: T.QuantScheme = T.QuantScheme(),
                  batch_slots: int = 4, max_len: int = 256,
                  cache_dtype=jnp.float32, compute_dtype=jnp.float32,
-                 seed: int = 0, runtime: Optional[Runtime] = None):
+                 seed: int = 0, runtime: Optional[Runtime] = None,
+                 backend="reference"):
+        # ``backend`` names the compute backend (repro.kernels.backend) the
+        # engine's Runtime executes on; ignored when a runtime is passed in
+        # (the shared runtime's backend governs).
         if not cfg.supports_decode:
             raise ValueError(f"{cfg.name} is encoder-only; no decode — "
                              f"serve it through EncoderServeEngine")
@@ -68,7 +72,8 @@ class ServeEngine:
         self.cache_dtype = cache_dtype
         self.sched = SlotScheduler(batch_slots)
         self.runtime = runtime or Runtime(cfg, plan, scheme=scheme,
-                                          compute_dtype=compute_dtype)
+                                          compute_dtype=compute_dtype,
+                                          backend=backend)
         self.caches = T.init_caches(cfg, plan, batch_slots, max_len,
                                     cache_dtype)
         self._fresh1 = T.init_caches(cfg, plan, 1, max_len, cache_dtype)

@@ -3,7 +3,7 @@
 Every inference path (the token-level serving engine, the encoder serving
 engine, ``Pipeline.predict``/``eval``, and the wall-clock benchmarks) funnels
 through one :class:`Runtime`, which owns the jitted executables keyed by
-``(precision_fingerprint, kind, bucket_shape)``:
+``(backend_name, precision_fingerprint, kind, bucket_shape)``:
 
 * a Runtime instance is bound to one ``(cfg, plan, scheme, compute_dtype,
   head)`` configuration — but the executable-cache key leads with the
@@ -11,7 +11,9 @@ through one :class:`Runtime`, which owns the jitted executables keyed by
   :class:`~repro.core.plan.PrecisionPlan`'s stable ``fingerprint()`` (or a
   structural hash of (plan, scheme) when no PrecisionPlan was given), so
   :meth:`share` can hand sibling views of one cache to pipelines running
-  *different* plans without key collisions;
+  *different* plans without key collisions. The compute-backend name
+  (reference / fused / auto — :mod:`repro.kernels.backend`) leads the key:
+  one plan compiles to different executables per backend;
 * request shapes are rounded up to power-of-two *buckets* (batch and, for
   token inputs, sequence length), so a mixed-length request stream compiles
   at most once per bucket instead of once per shape;
@@ -86,7 +88,9 @@ class Runtime:
                  head: Optional[HeadFn] = None, token_level: bool = False,
                  min_batch: int = 1, min_len: int = 8,
                  max_len: Optional[int] = None,
-                 chunk: Optional[int] = T.DEFAULT_CHUNK):
+                 chunk: Optional[int] = T.DEFAULT_CHUNK,
+                 backend="reference"):
+        from repro.kernels.backend import get_backend
         self.cfg = cfg
         self.plan = plan
         self.scheme = scheme
@@ -98,30 +102,37 @@ class Runtime:
         self.min_len = min_len
         self.max_len = max_len
         self.chunk = chunk
+        self.backend = get_backend(backend)
         # MoE expert capacity scales with the token count: padded tokens
         # would consume capacity and change routing for real rows.
         self.bucketed = cfg.moe is None
-        # the scheme-identity half of every cache key: the PrecisionPlan's
-        # stable fingerprint when one is bound, else a structural hash of
-        # (execution plan, scheme) — both shareable across sibling views
-        self._plan_key = (precision.fingerprint() if precision is not None
+        # the scheme-identity half of every cache key: the compute backend's
+        # name plus the PrecisionPlan's stable fingerprint when one is
+        # bound, else a structural hash of (execution plan, scheme) — all
+        # shareable across sibling views. The backend name matters: the
+        # same plan compiles to *different* executables (reference XLA vs
+        # fused Pallas), so switching backends must not collide.
+        self._plan_key = (self.backend.name,
+                          precision.fingerprint() if precision is not None
                           else hash((plan, scheme)))
         self._exe: dict[tuple, Callable] = {}
         self._stats = {"calls": 0, "traces": 0,
                        "real_tokens": 0, "padded_tokens": 0}
 
     def share(self, plan, *, scheme: Optional[T.QuantScheme] = None,
-              precision=None) -> "Runtime":
-        """A sibling Runtime bound to a different (plan, scheme, precision)
-        that SHARES this runtime's executable cache and counters. Cache keys
-        lead with the precision fingerprint, so two pipelines under
-        different plans share one runtime without collisions — and still
-        compile at most once per (plan, kind, bucket)."""
+              precision=None, backend=None) -> "Runtime":
+        """A sibling Runtime bound to a different (plan, scheme, precision,
+        backend) that SHARES this runtime's executable cache and counters.
+        Cache keys lead with (backend name, precision fingerprint), so two
+        pipelines under different plans — or the same plan on different
+        compute backends — share one runtime without key collisions, and
+        still compile at most once per (backend, plan, kind, bucket)."""
         rt = Runtime(self.cfg, plan, scheme=scheme or self.scheme,
                      precision=precision, compute_dtype=self.compute_dtype,
                      head=self.head, token_level=self.token_level,
                      min_batch=self.min_batch, min_len=self.min_len,
-                     max_len=self.max_len, chunk=self.chunk)
+                     max_len=self.max_len, chunk=self.chunk,
+                     backend=backend or self.backend)
         rt._exe = self._exe
         rt._stats = self._stats
         return rt
@@ -149,6 +160,7 @@ class Runtime:
     def _build_encode(self):
         cfg, plan, scheme = self.cfg, self.plan, self.scheme
         head, compute_dtype, chunk = self.head, self.compute_dtype, self.chunk
+        backend = self.backend
 
         def fn(params, inputs, lengths):
             self._stats["traces"] += 1          # trace-time side effect
@@ -166,9 +178,10 @@ class Runtime:
             positions = jnp.where(valid, idx[None], -1)
             x = T.embed_inputs(params, inputs, cfg,
                                positions=jnp.maximum(positions, 0),
-                               compute_dtype=compute_dtype)
+                               compute_dtype=compute_dtype, backend=backend)
             x, _ = T.run_groups(x, params, cfg, plan, scheme,
-                                positions=positions, chunk=chunk)
+                                positions=positions, chunk=chunk,
+                                backend=backend)
             x = L.norm(x, params["final_norm"], cfg.norm_kind)
             return head(params, x) if head is not None else x
         return fn
@@ -223,13 +236,13 @@ class Runtime:
     # -- decode / token-level path ------------------------------------------
     def _build_decode(self):
         cfg, plan, scheme = self.cfg, self.plan, self.scheme
-        compute_dtype = self.compute_dtype
+        compute_dtype, backend = self.compute_dtype, self.backend
 
         def fn(params, caches, tokens, pos, active):
             self._stats["traces"] += 1          # trace-time side effect
             logits, caches = T.decode_step(
                 params, tokens, caches, pos, cfg, plan, scheme,
-                active=active, compute_dtype=compute_dtype)
+                active=active, compute_dtype=compute_dtype, backend=backend)
             return logits[:, -1, :], caches
         return fn
 

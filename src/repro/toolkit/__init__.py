@@ -14,6 +14,8 @@ The paper's modular design as importable pieces:
 """
 from repro.core.plan import LayerPlan, PrecisionPlan, QuantSpec  # noqa: F401
 from repro.core.samp import SEARCH_STRATEGIES, register_strategy  # noqa: F401
+from repro.kernels.backend import (BACKENDS, ComputeBackend,  # noqa: F401
+                                   get_backend, register_backend)
 from repro.toolkit import artifact, latency, registry, targets  # noqa: F401
 from repro.toolkit.artifact import Artifact, load_artifact, save_artifact
 from repro.toolkit.latency import (LatencyBackend, RooflineBackend,
@@ -31,6 +33,7 @@ from repro.toolkit.targets import TargetSpec
 __all__ = [
     "PrecisionPlan", "LayerPlan", "QuantSpec",
     "SEARCH_STRATEGIES", "register_strategy",
+    "BACKENDS", "ComputeBackend", "get_backend", "register_backend",
     "SAMP", "AutotuneReport", "Pipeline", "TargetSpec",
     "TokenizerStage", "EmbeddingStage", "EncoderStage", "TargetStage",
     "Artifact", "save_artifact", "load_artifact",

@@ -66,8 +66,10 @@ class Artifact:
         """The precision description (kept under the pre-plan name)."""
         return self.precision
 
-    def pipeline(self):
-        """Rebuild the (quantized) Pipeline this artifact was saved from."""
+    def pipeline(self, backend: str = "reference"):
+        """Rebuild the (quantized) Pipeline this artifact was saved from.
+        ``backend`` picks the compute backend (a deployment-time choice —
+        the bundle persists the plan, not how it executes)."""
         from repro.toolkit.pipeline import Pipeline
         task = self.task or TaskSpec(name="lm", kind="lm", n_classes=0,
                                      vocab_size=self.cfg.vocab_size,
@@ -75,7 +77,8 @@ class Artifact:
         float_pipe = Pipeline(self.cfg, task, get_target(self.target_name),
                               n_out=self.n_out, scheme=self.scheme,
                               tokenizer=self.tokenizer,
-                              compute_dtype=jnp.dtype(self.compute_dtype))
+                              compute_dtype=jnp.dtype(self.compute_dtype),
+                              backend=backend)
         return float_pipe.with_policy(self.params, self.plan, self.precision)
 
 

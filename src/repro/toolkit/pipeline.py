@@ -27,6 +27,7 @@ from repro.core.plan import PrecisionPlan, as_plan
 from repro.core.precision import EncoderPolicy
 from repro.data.pipeline import TaskSpec, eval_accuracy, get_batch, make_task
 from repro.data.tokenizer import WordPieceTokenizer
+from repro.kernels.backend import get_backend
 from repro.models import layers as L
 from repro.models import transformer as T
 from repro.serve.runtime import Runtime
@@ -73,27 +74,32 @@ class EmbeddingStage:
     """Model inputs -> first-layer activations (token + position + segment
     embeddings, or the modality frontend for audio/vision configs)."""
 
-    def __init__(self, cfg: ArchConfig):
+    def __init__(self, cfg: ArchConfig, backend=None):
         self.cfg = cfg
+        self.backend = backend
 
     def __call__(self, params: dict, batch: dict, *, positions,
                  compute_dtype) -> jax.Array:
         return T.embed_inputs(params, batch, self.cfg, positions=positions,
-                              compute_dtype=compute_dtype)
+                              compute_dtype=compute_dtype,
+                              backend=self.backend)
 
 
 class EncoderStage:
     """Activations -> final-norm hidden states under an execution plan (the
-    per-layer SAMP precision modes compiled into scan groups)."""
+    per-layer SAMP precision modes compiled into scan groups), executed on
+    a compute backend (reference XLA or fused Pallas kernels)."""
 
-    def __init__(self, cfg: ArchConfig, plan, scheme: T.QuantScheme):
+    def __init__(self, cfg: ArchConfig, plan, scheme: T.QuantScheme,
+                 backend=None):
         self.cfg = cfg
         self.plan = plan
         self.scheme = scheme
+        self.backend = backend
 
     def __call__(self, params: dict, x: jax.Array, *, positions) -> jax.Array:
         x, _ = T.run_groups(x, params, self.cfg, self.plan, self.scheme,
-                            positions=positions)
+                            positions=positions, backend=self.backend)
         return L.norm(x, params["final_norm"], self.cfg.norm_kind)
 
 
@@ -128,9 +134,10 @@ class Pipeline:
                  plan=None, scheme: T.QuantScheme = T.QuantScheme(),
                  params: Optional[dict] = None,
                  tokenizer: Optional[WordPieceTokenizer] = None,
-                 compute_dtype=jnp.float32):
+                 compute_dtype=jnp.float32, backend="reference"):
         self.cfg = cfg
         self.task = task
+        self.backend = get_backend(backend)
         # the precision description is always a PrecisionPlan internally;
         # EncoderPolicies coerce through the lossless shim
         self.policy = (PrecisionPlan.full_float(cfg.num_layers)
@@ -143,10 +150,10 @@ class Pipeline:
         n_out = n_out if n_out is not None else max(task.n_classes, 1)
         # -- the four stages -------------------------------------------------
         self.tokenizer = TokenizerStage(tokenizer, task.seq_len)
-        self.embedding = EmbeddingStage(cfg)
+        self.embedding = EmbeddingStage(cfg, backend=self.backend)
         self.encoder = EncoderStage(cfg, plan if plan is not None
                                     else T.build_plan(cfg, self.policy),
-                                    scheme)
+                                    scheme, backend=self.backend)
         self.target = TargetStage(target, n_out, cfg)
         self._runtime: Optional[Runtime] = None
 
@@ -156,9 +163,11 @@ class Pipeline:
               seq_len: int = 64, float_dtype: str = "bfloat16",
               scheme: T.QuantScheme = T.QuantScheme(),
               tokenizer: Optional[WordPieceTokenizer] = None,
-              compute_dtype=None) -> "Pipeline":
+              compute_dtype=None, backend="reference") -> "Pipeline":
         """ArchConfig + task spec -> float Pipeline (params uninitialized;
-        call ``init_params`` or let the SAMP facade fine-tune)."""
+        call ``init_params`` or let the SAMP facade fine-tune).
+        ``backend`` picks the compute backend quantized blocks execute on
+        (reference | fused | auto — see repro.kernels.backend)."""
         if isinstance(task, str):
             task = make_task(task, vocab_size=cfg.vocab_size,
                              seq_len=seq_len)
@@ -169,7 +178,7 @@ class Pipeline:
                 if float_dtype != "float16" else jnp.float32
         return cls(cfg, task, spec, n_out=n_out, policy=policy,
                    scheme=scheme, tokenizer=tokenizer,
-                   compute_dtype=compute_dtype)
+                   compute_dtype=compute_dtype, backend=backend)
 
     # -- construction --------------------------------------------------------
     @property
@@ -195,7 +204,7 @@ class Pipeline:
                 precision=self.precision,
                 compute_dtype=self.compute_dtype,
                 head=lambda p, h: spec.apply(p, h, cfg),
-                token_level=spec.token_level)
+                token_level=spec.token_level, backend=self.backend)
         return self._runtime
 
     def init_params(self, key, dtype=jnp.float32) -> dict:
@@ -221,9 +230,11 @@ class Pipeline:
                         n_out=self.target.n_out, policy=policy, plan=plan,
                         scheme=self.scheme, params=params,
                         tokenizer=self.tokenizer.tokenizer,
-                        compute_dtype=self.compute_dtype)
+                        compute_dtype=self.compute_dtype,
+                        backend=self.backend)
         pipe._runtime = self.runtime.share(plan, scheme=self.scheme,
-                                           precision=pipe.precision)
+                                           precision=pipe.precision,
+                                           backend=pipe.backend)
         return pipe
 
     # -- forward / predict ---------------------------------------------------
@@ -298,4 +309,5 @@ class Pipeline:
     def describe(self) -> str:
         return (f"Pipeline[{self.cfg.name}] task={self.task.name} "
                 f"target={self.target.spec.name} "
-                f"policy={self.policy.describe()}")
+                f"policy={self.policy.describe()} "
+                f"backend={self.backend.describe()}")

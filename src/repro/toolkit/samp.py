@@ -25,6 +25,7 @@ from repro.core.plan import PrecisionPlan, as_plan
 from repro.core.precision import EncoderPolicy
 from repro.core.samp import SAMPEngine, SAMPResult, SweepPoint
 from repro.data.pipeline import get_batch
+from repro.kernels.backend import get_backend
 from repro.models import transformer as T
 from repro.serve import EncoderServeEngine, ServeEngine
 from repro.toolkit import artifact as A
@@ -96,24 +97,32 @@ class SAMP:
                     float_dtype: str = "bfloat16",
                     scheme: T.QuantScheme = T.QuantScheme(),
                     latency: Union[str, LatencyBackend] = "roofline",
-                    latency_batch: int = 32, tokenizer=None) -> "SAMP":
+                    latency_batch: int = 32, tokenizer=None,
+                    backend: str = "reference") -> "SAMP":
         """Build the float pipeline for ``arch`` (a registry name or an
-        explicit ArchConfig) on ``task`` and wrap it in the facade."""
+        explicit ArchConfig) on ``task`` and wrap it in the facade.
+        ``backend`` names the compute backend quantized blocks execute on
+        (reference | fused | auto — repro.kernels.backend); it follows the
+        pipeline through ``apply``/``autotune`` into serving."""
         cfg = arch if isinstance(arch, ArchConfig) else get_config(arch)
         if task is None:
             task = get_target(target).default_task if target else "tnews"
         pipe = Pipeline.build(cfg, task, target=target, n_out=n_out,
                               seq_len=seq_len, float_dtype=float_dtype,
-                              scheme=scheme, tokenizer=tokenizer)
+                              scheme=scheme, tokenizer=tokenizer,
+                              backend=backend)
         return cls(pipe, latency=latency, latency_batch=latency_batch)
 
     @classmethod
     def load(cls, directory: str, *,
-             latency: Union[str, LatencyBackend] = "roofline") -> "SAMP":
+             latency: Union[str, LatencyBackend] = "roofline",
+             backend: str = "reference") -> "SAMP":
         """Reload a saved artifact: the quantized pipeline is ready to
-        predict/serve immediately — no calibration batches needed."""
+        predict/serve immediately — no calibration batches needed. The
+        compute backend is a deployment choice, not part of the artifact:
+        pick it at load time."""
         art = A.load_artifact(directory)
-        qpipe = art.pipeline()
+        qpipe = art.pipeline(backend=backend)
         samp = cls(qpipe, latency=latency)
         samp.stats = art.stats
         samp.quantized = qpipe
@@ -254,6 +263,9 @@ class SAMP:
             self.calibrate()
         precision = as_plan(policy,
                             dynamic_acts=self.pipeline.scheme.dynamic_acts)
+        # fail now, not at serve time, if the deployment's compute backend
+        # cannot execute a scheme the plan names
+        self.pipeline.backend.validate_plan(precision)
         qparams, qplan = self.engine.apply(params, self.stats, precision)
         self.quantized = self.pipeline.with_policy(qparams, qplan, precision)
         return self.quantized
@@ -342,19 +354,27 @@ class SAMP:
         bucketed-runtime layers; the encoder engine shares the pipeline's
         runtime, so predict() and serving hit one executable cache.
         ``batch_slots`` sets the compiled slot count (decode) / the
-        micro-batch flush size (encoder)."""
+        micro-batch flush size (encoder). ``backend=`` overrides the
+        pipeline's compute backend for this server (both engine types)."""
         pipe = self.current
         if pipe.params is None:
             raise ValueError("pipeline has no params to serve")
+        backend = kw.pop("backend", None)
         if pipe.cfg.supports_decode and pipe.target.spec.name == "lm":
             return ServeEngine(pipe.cfg, pipe.params, pipe.plan,
                                scheme=pipe.scheme, batch_slots=batch_slots,
                                max_len=max_len,
-                               compute_dtype=pipe.compute_dtype, **kw)
+                               compute_dtype=pipe.compute_dtype,
+                               backend=(pipe.backend if backend is None
+                                        else backend), **kw)
+        enc_kw = dict(target=pipe.target.spec, scheme=pipe.scheme,
+                      max_batch=kw.pop("max_batch", batch_slots),
+                      max_len=max_len, compute_dtype=pipe.compute_dtype)
+        if backend is not None \
+                and get_backend(backend).name != pipe.backend.name:
+            # explicit override: a fresh runtime on the requested backend
+            # (sharing the pipeline's would silently keep its backend)
+            return EncoderServeEngine(pipe.cfg, pipe.params, pipe.plan,
+                                      backend=backend, **enc_kw, **kw)
         return EncoderServeEngine(pipe.cfg, pipe.params, pipe.plan,
-                                  target=pipe.target.spec,
-                                  scheme=pipe.scheme,
-                                  max_batch=kw.pop("max_batch", batch_slots),
-                                  max_len=max_len,
-                                  compute_dtype=pipe.compute_dtype,
-                                  runtime=pipe.runtime, **kw)
+                                  runtime=pipe.runtime, **enc_kw, **kw)

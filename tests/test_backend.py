@@ -1,0 +1,286 @@
+"""Compute-backend parity and cache-keying suite.
+
+The ``fused`` backend (Pallas kernels, interpret mode on this CPU
+container) must match the ``reference`` XLA substrate within tolerance for
+every block dtype combination a PrecisionPlan can express, and switching
+backends on one shared Runtime must produce distinct executable-cache
+entries rather than colliding.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.calibration import synthetic_calibration_batches
+from repro.core.plan import (BLOCKS, LayerPlan, PrecisionPlan, QuantSpec,
+                             INT8_SPEC)
+from repro.kernels import ops, ref
+from repro.kernels.backend import (BACKENDS, ComputeBackend, FusedBackend,
+                                   QuantActivation, ffn_input_scale,
+                                   get_backend)
+from repro.models import transformer as T
+from repro.quant import ptq
+from repro.serve.runtime import Runtime
+
+KEY = jax.random.PRNGKey(0)
+GOLDEN = "tests/data/golden_plan.json"
+
+DYN_SPEC = QuantSpec(weight="int8_per_channel", act="int8_per_token")
+PT_SPEC = QuantSpec(weight="int8_per_tensor", act="int8_per_tensor")
+
+
+def rel_linf(a, b) -> float:
+    a, b = np.asarray(a, np.float32), np.asarray(b, np.float32)
+    return float(np.abs(a - b).max() / (np.abs(a).max() + 1e-9))
+
+
+@pytest.fixture(scope="module")
+def bert_setup():
+    """Float bert-base reduced (4 layers) + calibration stats covering the
+    golden plan's calibrator mix (minmax/percentile/mse/entropy)."""
+    cfg = get_config("bert-base").reduced()
+    golden = PrecisionPlan.load(GOLDEN)
+    assert golden.num_layers == cfg.num_layers
+    float_plan = T.build_plan(
+        cfg, PrecisionPlan.full_float(cfg.num_layers, "float32"))
+    params = T.init_params(KEY, cfg, PrecisionPlan.full_float(
+        cfg.num_layers, "float32"))
+    batches = synthetic_calibration_batches(cfg, num_batches=2, seq_len=16)
+    stats = ptq.capture_stats(params, batches, cfg, float_plan,
+                              precision=golden)
+    return cfg, params, float_plan, stats, batches[0]
+
+
+def _forward(cfg, qparams, qplan, batch, backend):
+    out, _ = T.forward(qparams, batch, cfg, qplan, compute_dtype=jnp.float32,
+                       backend=backend)
+    return np.asarray(out)
+
+
+def _apply(setup, precision):
+    cfg, params, float_plan, stats, batch = setup
+    qparams, qplan = ptq.apply_plan(params, cfg, precision, stats,
+                                    float_plan=float_plan)
+    return cfg, qparams, qplan, batch
+
+
+# ---------------------------------------------------------------------------
+# forward parity: fused (interpret) vs reference
+# ---------------------------------------------------------------------------
+
+
+def test_golden_plan_parity(bert_setup):
+    """The golden plan mixes static/dynamic acts, per-channel/per-tensor
+    weights and float blocks across layers — one forward covers the full
+    dispatch table."""
+    cfg, qparams, qplan, batch = _apply(bert_setup, PrecisionPlan.load(GOLDEN))
+    ref_out = _forward(cfg, qparams, qplan, batch, None)
+    fused_out = _forward(cfg, qparams, qplan, batch, get_backend("fused"))
+    assert rel_linf(ref_out, fused_out) < 5e-3
+
+
+@pytest.mark.parametrize("block,spec", [
+    ("qkv", INT8_SPEC), ("attn_out", INT8_SPEC),
+    ("ffn_in", INT8_SPEC), ("ffn_out", INT8_SPEC),
+    ("ffn_in", DYN_SPEC), ("ffn_out", DYN_SPEC),
+    ("qkv", PT_SPEC), ("ffn_out", PT_SPEC),
+])
+def test_single_block_parity(bert_setup, block, spec):
+    """Each encoder block x (static | dynamic acts) x (per-channel |
+    per-tensor weights) matches reference in isolation."""
+    cfg = bert_setup[0]
+    plan = PrecisionPlan.uniform(cfg.num_layers, LayerPlan(**{block: spec}),
+                                 float_dtype="float32")
+    cfg, qparams, qplan, batch = _apply(bert_setup, plan)
+    ref_out = _forward(cfg, qparams, qplan, batch, None)
+    fused_out = _forward(cfg, qparams, qplan, batch, get_backend("fused"))
+    assert rel_linf(ref_out, fused_out) < 5e-3
+
+
+def test_glu_arch_parity():
+    """GLU FFN (silu fused into the quant_linear epilogue) + rope embedding
+    (reference path — no position table) on a decode-capable arch."""
+    cfg = get_config("qwen2-0.5b").reduced()
+    plan = PrecisionPlan.uniform(
+        cfg.num_layers,
+        LayerPlan(ffn_in=INT8_SPEC, ffn_out=INT8_SPEC),
+        float_dtype="float32")
+    float_plan = T.build_plan(
+        cfg, PrecisionPlan.full_float(cfg.num_layers, "float32"))
+    params = T.init_params(KEY, cfg, PrecisionPlan.full_float(
+        cfg.num_layers, "float32"))
+    batches = synthetic_calibration_batches(cfg, num_batches=2, seq_len=16)
+    stats = ptq.capture_stats(params, batches, cfg, float_plan,
+                              precision=plan)
+    qparams, qplan = ptq.apply_plan(params, cfg, plan, stats,
+                                    float_plan=float_plan)
+    ref_out = _forward(cfg, qparams, qplan, batches[0], None)
+    fused_out = _forward(cfg, qparams, qplan, batches[0],
+                         get_backend("fused"))
+    assert rel_linf(ref_out, fused_out) < 5e-3
+
+
+def test_fused_kernels_actually_engage(bert_setup, monkeypatch):
+    """Guard against a silently-declining fused backend: the Pallas GEMM,
+    addnorm and embed entry points must all fire under the golden plan."""
+    cfg, qparams, qplan, batch = _apply(bert_setup, PrecisionPlan.load(GOLDEN))
+    calls = {"quant_linear": 0, "addnorm_quant": 0, "fused_embed": 0,
+             "dynamic_quant": 0}
+
+    def spy(name, fn):
+        def wrapper(*a, **kw):
+            calls[name] += 1
+            return fn(*a, **kw)
+        return wrapper
+
+    for name in calls:
+        monkeypatch.setattr(ops, name, spy(name, getattr(ops, name)))
+    _forward(cfg, qparams, qplan, batch, get_backend("fused"))
+    assert all(n > 0 for n in calls.values()), calls
+
+
+def test_capture_ignores_backend(bert_setup):
+    """Observer capture must run the reference dataflow: stats captured
+    with a fused backend threaded through equal the reference capture."""
+    cfg, params, float_plan, stats, batch = bert_setup
+    obs = {}
+    T.forward(params, batch, cfg, float_plan, obs=obs,
+              compute_dtype=jnp.float32, backend=get_backend("fused"))
+    obs_ref = {}
+    T.forward(params, batch, cfg, float_plan, obs=obs_ref,
+              compute_dtype=jnp.float32)
+    assert obs.keys() == obs_ref.keys()
+    for k in obs:
+        np.testing.assert_array_equal(np.asarray(obs[k]),
+                                      np.asarray(obs_ref[k]))
+
+
+# ---------------------------------------------------------------------------
+# backend registry + plan validation
+# ---------------------------------------------------------------------------
+
+
+def test_registry_and_resolution():
+    assert set(BACKENDS) >= {"reference", "fused", "auto"}
+    assert get_backend("reference").name == "reference"
+    assert get_backend(None).name == "reference"
+    fused = get_backend("fused")
+    assert get_backend(fused) is fused            # instances pass through
+    with pytest.raises(KeyError, match="unknown compute backend"):
+        get_backend("cuda")
+
+
+def test_auto_backend_matches_reference_off_tpu(bert_setup):
+    """On a CPU container ``auto`` resolves to the reference path — outputs
+    are bit-identical, and the resolution is visible in describe()."""
+    cfg, qparams, qplan, batch = _apply(bert_setup, PrecisionPlan.load(GOLDEN))
+    auto = get_backend("auto")
+    if jax.default_backend() == "tpu":
+        pytest.skip("auto resolves to fused on TPU")
+    assert auto.describe() == "auto[reference]"
+    ref_out = _forward(cfg, qparams, qplan, batch, None)
+    auto_out = _forward(cfg, qparams, qplan, batch, auto)
+    np.testing.assert_array_equal(ref_out, auto_out)
+
+
+def test_apply_plan_validates_backend(bert_setup):
+    cfg, params, float_plan, stats, _ = bert_setup
+    plan = PrecisionPlan.load(GOLDEN)
+    # every current scheme is executable on every backend
+    ptq.apply_plan(params, cfg, plan, stats, float_plan=float_plan,
+                   backend="fused")
+    with pytest.raises(KeyError, match="unknown compute backend"):
+        ptq.apply_plan(params, cfg, plan, stats, float_plan=float_plan,
+                       backend="tensorrt")
+
+
+def test_ffn_input_scale_detection(bert_setup):
+    """The fused addnorm requant scale is exactly the ffn_in GEMM's static
+    scale: present for int8_per_tensor acts, absent for dynamic/float."""
+    cfg = bert_setup[0]
+    static = PrecisionPlan.uniform(cfg.num_layers,
+                                   LayerPlan(ffn_in=INT8_SPEC), "float32")
+    dyn = PrecisionPlan.uniform(cfg.num_layers,
+                                LayerPlan(ffn_in=DYN_SPEC), "float32")
+    for plan, expect in ((static, True), (dyn, False)):
+        _, qparams, qplan, _ = _apply(bert_setup, plan)
+        layer0 = T.unpack_layers(qparams, qplan)[0]
+        got = ffn_input_scale(layer0["ffn"], cfg.ffn_kind)
+        assert (got is not None) == expect
+
+
+# ---------------------------------------------------------------------------
+# runtime cache keying across backends
+# ---------------------------------------------------------------------------
+
+
+def test_runtime_backend_keys_do_not_collide(bert_setup):
+    """One shared executable cache, two backends, same plan: two distinct
+    executables (no collision), one trace each, matching outputs."""
+    cfg, qparams, qplan, batch = _apply(bert_setup, PrecisionPlan.load(GOLDEN))
+    precision = PrecisionPlan.load(GOLDEN)
+    rt_ref = Runtime(cfg, qplan, precision=precision,
+                     compute_dtype=jnp.float32, backend="reference")
+    rt_fused = rt_ref.share(qplan, precision=precision,
+                            backend=get_backend("fused"))
+    inputs = {k: np.asarray(v) for k, v in batch.items()}
+    out_ref = rt_ref.encode(qparams, inputs)
+    assert rt_ref.stats["executables"] == 1
+    out_fused = rt_fused.encode(qparams, inputs)
+    stats = rt_fused.stats                         # shared counters
+    assert stats["executables"] == 2, "backend switch must not collide"
+    assert stats["traces"] == 2
+    assert rel_linf(out_ref, out_fused) < 5e-3
+    # same backend + same bucket again: cache hit, no retrace
+    rt_fused.encode(qparams, inputs)
+    assert rt_fused.stats["traces"] == 2
+
+
+def test_runtime_same_backend_shares_executables(bert_setup):
+    cfg, qparams, qplan, batch = _apply(bert_setup, PrecisionPlan.load(GOLDEN))
+    precision = PrecisionPlan.load(GOLDEN)
+    rt = Runtime(cfg, qplan, precision=precision, compute_dtype=jnp.float32,
+                 backend="fused")
+    sibling = rt.share(qplan, precision=precision)   # inherits the backend
+    assert sibling.backend.name == "fused"
+    inputs = {k: np.asarray(v) for k, v in batch.items()}
+    rt.encode(qparams, inputs)
+    sibling.encode(qparams, inputs)
+    assert rt.stats["executables"] == 1              # one shared entry
+
+
+# ---------------------------------------------------------------------------
+# flash-attention causality default (encoder-first)
+# ---------------------------------------------------------------------------
+
+
+def test_flash_attention_defaults_bidirectional():
+    """The kernel and its oracle default to non-causal — the paper's
+    encoder workloads; decoders opt in explicitly."""
+    q = jax.random.normal(KEY, (1, 2, 64, 16), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 64, 16), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 64, 16), jnp.float32)
+    got = ops.flash_attention(q, k, v, bq=32, bk=32)
+    want = ref.flash_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    causal = ref.flash_attention(q, k, v, causal=True)
+    assert np.abs(np.asarray(want) - np.asarray(causal)).max() > 1e-3
+
+
+def test_quant_activation_reference_fallback():
+    """A pre-quantized activation degrades gracefully on the reference
+    path: dense dequantizes it back to floats."""
+    from repro.core.quantize import QuantizedTensor
+    from repro.models import layers as L
+    x = jax.random.normal(KEY, (4, 8), jnp.float32)
+    scale = jnp.float32(0.05)
+    qa = QuantActivation(
+        QuantizedTensor(jnp.clip(jnp.round(x / scale), -128, 127)
+                        .astype(jnp.int8), scale, None), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (8, 4), jnp.float32)
+    got = L.dense(qa, {"w": w})
+    want = qa.dequantize() @ w
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)

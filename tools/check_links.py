@@ -1,0 +1,55 @@
+#!/usr/bin/env python
+"""Fail on broken intra-repo markdown links.
+
+    python tools/check_links.py README.md docs/*.md
+
+Checks every ``[text](target)`` whose target is a relative path (external
+``http(s)://``/``mailto:`` links and pure ``#anchor`` fragments are
+skipped): the target — resolved against the markdown file's directory,
+fragment stripped — must exist in the repo. Exit 1 with a per-link report
+otherwise. Stdlib only, so the CI docs job needs no extra deps.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# inline links only; reference-style links are not used in this repo.
+LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+SKIP = ("http://", "https://", "mailto:")
+
+
+def check(paths: list[str]) -> list[str]:
+    errors = []
+    for name in paths:
+        md = pathlib.Path(name)
+        text = md.read_text(encoding="utf-8")
+        # drop fenced code blocks: ``[...](...)`` inside examples is code
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for m in LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(SKIP) or target.startswith("#"):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (md.parent / rel).exists():
+                errors.append(f"{md}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: check_links.py FILE.md [FILE.md ...]", file=sys.stderr)
+        return 2
+    errors = check(argv)
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"[check_links] {len(argv)} file(s), "
+          f"{len(errors)} broken link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
