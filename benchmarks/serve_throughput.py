@@ -31,6 +31,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 
 from repro.configs import get_config
+from repro.distributed.sharding import mesh_fingerprint
+from repro.launch.mesh import make_serving_mesh
 from repro.launch.serve import build_model
 from repro.serve import (EncoderRequest, EncoderServeEngine, Request,
                          ServeEngine)
@@ -55,10 +57,11 @@ def _build(arch: str, policy: str, head=None, plan_file=None):
 
 
 def bench_decode(n_requests: int, max_tokens: int, policy: str,
-                 plan_file=None, backend: str = "reference") -> dict:
+                 plan_file=None, backend: str = "reference",
+                 mesh=None) -> dict:
     cfg, params, plan = _build("qwen2-0.5b", policy, plan_file=plan_file)
     server = ServeEngine(cfg, params, plan, batch_slots=4, max_len=64,
-                         backend=backend)
+                         backend=backend, mesh=mesh)
     rng = np.random.default_rng(0)
     submit_t, retire_t = {}, {}
     reqs = [Request(uid=i,
@@ -79,6 +82,7 @@ def bench_decode(n_requests: int, max_tokens: int, policy: str,
     lat = [retire_t[u] - submit_t[u] for u in retire_t]
     return {"engine": "decode", "arch": cfg.name, "requests": n_requests,
             "backend": server.runtime.backend.describe(),
+            "mesh": mesh_fingerprint(server.runtime.mesh),
             "wall_s": wall,
             "requests_per_s": n_requests / wall,
             "tokens_per_s": s["tokens"] / wall,
@@ -89,14 +93,14 @@ def bench_decode(n_requests: int, max_tokens: int, policy: str,
 
 
 def bench_encoder(n_requests: int, policy: str, plan_file=None,
-                  backend: str = "reference") -> dict:
+                  backend: str = "reference", mesh=None) -> dict:
     cfg, params, plan = _build("bert-base", policy, head=("cls", 15),
                                plan_file=plan_file)
     # 50 ms batching window: requests accumulate into per-bucket
     # micro-batches instead of flushing one-by-one
     server = EncoderServeEngine(cfg, params, plan, target=get_target("cls"),
                                 max_batch=8, max_wait=0.05, max_len=64,
-                                backend=backend)
+                                backend=backend, mesh=mesh)
     rng = np.random.default_rng(0)
     submit_t, retire_t = {}, {}
     t0 = time.perf_counter()
@@ -115,6 +119,7 @@ def bench_encoder(n_requests: int, policy: str, plan_file=None,
     lat = [retire_t[u] - submit_t[u] for u in retire_t]
     return {"engine": "encoder", "arch": cfg.name, "requests": n_requests,
             "backend": server.runtime.backend.describe(),
+            "mesh": mesh_fingerprint(server.runtime.mesh),
             "wall_s": wall,
             "requests_per_s": n_requests / wall,
             "micro_batches": s["batches"],
@@ -126,27 +131,31 @@ def bench_encoder(n_requests: int, policy: str, plan_file=None,
 
 def main(quick: bool = False, out: str = "BENCH_serve.json",
          policy: str = "ffn", plan_file=None, backend: str = "reference",
-         emit=print) -> dict:
+         mesh_spec: str = "1,1", emit=print) -> dict:
     n_dec, n_enc = (6, 16) if quick else (16, 48)
     plan_fp = None
     if plan_file is not None:
         from repro.core.plan import PrecisionPlan
         plan_fp = PrecisionPlan.load(plan_file).fingerprint()
+    mesh = make_serving_mesh(mesh_spec)
     result = {
         "benchmark": "serve_throughput",
         "policy": policy,
         "backend": backend,
+        "mesh": mesh_fingerprint(mesh),
         "plan_file": plan_file,
         "plan_fingerprint": plan_fp,
         "decode": bench_decode(n_dec, max_tokens=4 if quick else 12,
                                policy=policy, plan_file=plan_file,
-                               backend=backend),
+                               backend=backend, mesh=mesh),
         "encoder": bench_encoder(n_enc, policy=policy,
-                                 plan_file=plan_file, backend=backend),
+                                 plan_file=plan_file, backend=backend,
+                                 mesh=mesh),
     }
     for side in ("decode", "encoder"):
         r = result[side]
-        emit(f"[{side}] backend={r['backend']}: {r['requests']} reqs in "
+        emit(f"[{side}] backend={r['backend']} mesh={r['mesh']}: "
+             f"{r['requests']} reqs in "
              f"{r['wall_s']:.2f}s "
              f"({r['requests_per_s']:.1f} req/s) p50={r['p50_latency_s']:.3f}s "
              f"p95={r['p95_latency_s']:.3f}s retraces={r['retraces']} "
@@ -170,6 +179,9 @@ if __name__ == "__main__":
                     choices=("reference", "fused", "auto"),
                     help="compute backend for quantized blocks (fused runs "
                          "the Pallas kernels — interpret mode off-TPU)")
+    ap.add_argument("--mesh", default="1,1",
+                    help="serving mesh 'dp,tp' (see repro.launch.serve); "
+                         "the topology is recorded in the JSON artifact")
     args = ap.parse_args()
     main(quick=args.quick, out=args.out, policy=args.policy,
-         plan_file=args.plan, backend=args.backend)
+         plan_file=args.plan, backend=args.backend, mesh_spec=args.mesh)

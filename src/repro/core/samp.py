@@ -36,26 +36,39 @@ from repro.models.transformer import QuantScheme, build_plan
 from repro.quant import ptq
 
 # Callbacks receive (qparams, execution_plan, precision) — ``precision`` is
-# the candidate's PrecisionPlan (its EncoderPolicy-compatible surface:
-# .modes / .num_quant_ffn / .num_quant_mha / .float_dtype).
+# the candidate's PrecisionPlan: per-layer LayerPlans under
+# ``precision.layers`` (each a per-block QuantSpec via ``.spec(block)``),
+# plus ``.num_layers`` / ``.float_dtype`` / ``.describe()`` /
+# ``.fingerprint()`` and the quantized-layer counts ``.num_quant_ffn`` /
+# ``.num_quant_mha``.
 EvalFn = Callable[[dict, tuple, PrecisionPlan], float]
 LatencyFn = Callable[[dict, tuple, PrecisionPlan], float]
 
 
 @dataclasses.dataclass(frozen=True)
 class SweepPoint:
+    """One measured candidate of a search strategy. ``plan`` is the
+    candidate's :class:`~repro.core.plan.PrecisionPlan` — the declarative
+    per-layer/per-block precision description every consumer speaks
+    (``plan.describe()`` / ``plan.fingerprint()`` / ``plan.save(path)``).
+    """
     mode_name: str            # candidate family: 'float' | 'fully_quant' |
     #                           'quant_ffn_only' | 'greedy' | ...
     k: int                    # number of quantized layers
-    policy: PrecisionPlan     # the candidate's precision description
+    plan: PrecisionPlan       # the candidate's precision description
     accuracy: float
     latency: float
 
     @property
-    def plan(self) -> PrecisionPlan:
-        """The candidate's PrecisionPlan (alias of ``policy`` — strategies
-        emit plans; the old field name is kept for callers)."""
-        return self.policy
+    def policy(self) -> PrecisionPlan:
+        """Deprecated EncoderPolicy-era name for :attr:`plan` (the object
+        has been a PrecisionPlan since the plan API redesign — there is no
+        ``.modes`` lattice here). Use ``point.plan``."""
+        import warnings
+        warnings.warn("SweepPoint.policy is deprecated; the field holds a "
+                      "PrecisionPlan — use SweepPoint.plan",
+                      DeprecationWarning, stacklevel=2)
+        return self.plan
 
     @property
     def speedup_key(self):

@@ -1,4 +1,6 @@
 from repro.distributed import compression, sharding
-from repro.distributed.sharding import MeshAxes, Rules, infer_axes
+from repro.distributed.sharding import (MeshAxes, Rules, infer_axes,
+                                        mesh_fingerprint)
 
-__all__ = ["compression", "sharding", "MeshAxes", "Rules", "infer_axes"]
+__all__ = ["compression", "sharding", "MeshAxes", "Rules", "infer_axes",
+           "mesh_fingerprint"]

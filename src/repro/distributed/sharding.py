@@ -21,8 +21,23 @@ activation/cache tensors onto that mesh:
   repro.distributed.compression).
 
 Everything is *rules by leaf path + shape divisibility*, so the same code
-shards all 11 archs, both precisions (QuantizedTensor leaves inherit the
-weight's spec with 1-sized dims unsharded), and any mesh shape.
+shards all 11 archs, both precisions, and any mesh shape. Quantized param
+trees (the output of :func:`repro.quant.ptq.apply_plan`) need no extra
+rules:
+
+* int8 ``values`` leaves inherit the column/row TP spec of the float
+  weight they replaced (the path is the weight's path + ``/values``);
+* per-channel ``scale`` leaves shard along the same output axis as their
+  weight — the broadcast (size-1) dims are forced unsharded, so a
+  ``(1, N)`` scale rides the weight's ``N``-axis spec;
+* per-tensor scales, ``zero_point`` scalars, static activation scales
+  (``xs``) and the attention bmm scalars (``q/k/p/v_scale``) replicate
+  (their non-stack shape is all-1 or 0-rank).
+
+Serving consumes the same rules (``fsdp=False`` — inference replicates
+params over the data axis and shards batches over it; see
+serve/runtime.py); :func:`mesh_fingerprint` is the topology component of
+the serving runtime's executable-cache key.
 """
 from __future__ import annotations
 
@@ -52,6 +67,17 @@ class MeshAxes:
 def infer_axes(mesh: Mesh) -> MeshAxes:
     names = mesh.axis_names
     return MeshAxes(pod="pod" if "pod" in names else None)
+
+
+def mesh_fingerprint(mesh: Optional[Mesh]) -> str:
+    """Stable topology identity for cache keys: axis names + sizes in mesh
+    order (``"data=2,model=1"``), ``"unmeshed"`` for ``None``. Two meshes
+    with the same fingerprint compile identical executables; anything that
+    caches mesh-placed executables must fold this in (the serving runtime
+    keys on it next to the backend name and plan fingerprint)."""
+    if mesh is None:
+        return "unmeshed"
+    return ",".join(f"{a}={int(mesh.shape[a])}" for a in mesh.axis_names)
 
 
 # --- param rules: (regex on "/"-joined path, spec builder) -------------------
@@ -184,11 +210,19 @@ class Rules:
             lambda s: NamedSharding(self.mesh, s), self.params_spec(params),
             is_leaf=lambda x: isinstance(x, P))
 
+    @property
+    def dp_size(self) -> int:
+        """Total batch-sharding factor (product of the dp axes). Serving
+        rounds batch buckets up to multiples of this so request batches
+        always split evenly over the data axis."""
+        bsz = 1
+        for a in self.axes.dp:
+            bsz *= self.mesh.shape[a]
+        return bsz
+
     def batch_spec(self, batch) -> dict:
         dp = self.axes.dp
-        bsz = 1
-        for a in dp:
-            bsz *= self.mesh.shape[a]
+        bsz = self.dp_size
 
         def spec(leaf):
             if leaf.ndim == 0:
@@ -196,6 +230,11 @@ class Rules:
             b = P(dp) if leaf.shape[0] % bsz == 0 else P()
             return P(*(b + (None,) * (leaf.ndim - 1)))
         return jax.tree_util.tree_map(spec, batch)
+
+    def batch_sharding(self, batch):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s), self.batch_spec(batch),
+            is_leaf=lambda x: isinstance(x, P))
 
     def cache_spec(self, caches) -> list:
         """Decode caches: batch over dp where divisible; kv-heads over model

@@ -26,10 +26,18 @@ Backends are instantiated via :func:`get_backend` (a name or an instance);
 every op either returns a result or ``None`` ("decline — use the reference
 path"), which is what makes per-op fallback structural rather than
 flag-driven. The backend's ``name`` is part of the serving runtime's
-executable-cache key, next to the plan fingerprint.
+executable-cache key, next to the plan fingerprint and (for meshed
+deployments) the mesh topology fingerprint.
+
+Meshed serving binds the backend to the topology via :meth:`with_mesh`:
+the fused backend then declines any GEMM whose per-device output shard is
+narrower than one kernel tile (:data:`MIN_SHARD_TILE`) — tensor-parallel
+splits that starve the MXU fall back to the reference path on that op,
+per-op, exactly like every other decline.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import math
 from typing import Any, Optional, Union
@@ -44,6 +52,14 @@ from repro.kernels.quant_linear import ACTIVATIONS
 #: kernel's own table, so a new activation is fusable the moment the
 #: kernel (and the reference path, which shares the table) supports it.
 FUSABLE_ACTS = tuple(ACTIVATIONS)
+
+#: the minimum per-device output width a fused GEMM is worth compiling
+#: for: one MXU lane tile. Under tensor parallelism a weight's N axis is
+#: split over the 'model' mesh axis; when the local shard drops below one
+#: lane tile the kernel degenerates (sub-tile blocks, no MXU utilization),
+#: so the fused backend declines that op and the reference XLA path — which
+#: GSPMD partitions natively — runs it instead.
+MIN_SHARD_TILE = 128
 
 
 @dataclasses.dataclass
@@ -105,6 +121,16 @@ class ComputeBackend:
         to use the reference gather."""
         return None
 
+    # -- mesh binding --------------------------------------------------------
+    def with_mesh(self, mesh) -> "ComputeBackend":
+        """Bind this backend to a serving mesh topology. The reference
+        backend is sharding-oblivious (XLA/GSPMD partitions its ops
+        natively), so the base implementation returns self; the fused
+        backend returns a copy that knows the tensor-parallel degree and
+        declines GEMMs whose local shard is narrower than one kernel
+        tile."""
+        return self
+
     # -- plan validation -----------------------------------------------------
     def supports(self, spec) -> bool:
         """Whether this backend can execute a QuantSpec. The built-ins
@@ -143,6 +169,33 @@ class FusedBackend(ComputeBackend):
         # ``enabled=False`` turns every op into a decline — the AutoBackend
         # constructor uses it to resolve to reference off-TPU.
         self._enabled = enabled
+        # tensor-parallel degree of the bound mesh (1 = unmeshed); set via
+        # with_mesh so Runtime(mesh=...) deployments get shard-aware
+        # declines without plumbing a mesh through every op call.
+        self.model_shards = 1
+
+    def with_mesh(self, mesh) -> "FusedBackend":
+        b = copy.copy(self)
+        b.model_shards = (int(mesh.shape.get("model", 1))
+                          if mesh is not None else 1)
+        return b
+
+    def _shard_too_narrow(self, K: int, N: int) -> bool:
+        """Under TP the sharding rules split exactly one GEMM axis over
+        'model': N for column-parallel blocks (qkv / ffn_in), K for
+        row-parallel ones (attn_out / ffn_out). The backend sees only the
+        weight — not which layout the rules chose — so it declines when
+        EITHER divisible axis would leave a per-device shard below one
+        lane tile (declining is always safe: the reference path is
+        GSPMD-partitioned XLA). Non-divisible dims replicate under the
+        rules — params are never padded — so they keep their full width.
+        Production-scale TP dims clear ``MIN_SHARD_TILE * shards`` on both
+        axes, so the conservatism only bites models too small to TP."""
+        if self.model_shards <= 1:
+            return False
+        return any(dim % self.model_shards == 0
+                   and dim // self.model_shards < MIN_SHARD_TILE
+                   for dim in (K, N))
 
     # -- block GEMM ----------------------------------------------------------
     def linear(self, x, p: dict, *, act: Optional[str] = None):
@@ -151,6 +204,8 @@ class FusedBackend(ComputeBackend):
                 or w.values.ndim != 2 or act not in FUSABLE_ACTS):
             return None          # float block / expert stack: reference path
         K, N = w.values.shape
+        if self._shard_too_narrow(K, N):
+            return None          # per-device shard below one kernel tile
         if isinstance(x, QuantActivation):
             # already int8 — the fused addnorm quantized it with the static
             # scale this GEMM was calibrated on; no runtime quant needed

@@ -18,3 +18,31 @@ def make_host_mesh(model: int = 1):
     n = len(jax.devices())
     model = min(model, n)
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_serving_mesh(spec: str):
+    """Parse a serving CLI ``--mesh dp,tp`` spec into a (data, model) mesh.
+
+    ``"2,1"`` = 2-way data parallel, ``"1,2"`` = 2-way tensor parallel,
+    ``"4,2"`` = both. The product must not exceed the visible device count;
+    on a CPU container grow it with the host-device trick
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before the
+    process starts). ``"1,1"`` returns ``None`` — the unmeshed single-
+    device runtime, byte-identical to omitting ``--mesh``.
+    """
+    try:
+        dp, tp = (int(p) for p in spec.split(","))
+    except ValueError:
+        raise ValueError(f"--mesh wants 'dp,tp' (two integers), got "
+                         f"{spec!r}") from None
+    if dp < 1 or tp < 1:
+        raise ValueError(f"--mesh axes must be >= 1, got {spec!r}")
+    if dp == tp == 1:
+        return None
+    n = len(jax.devices())
+    if dp * tp > n:
+        raise ValueError(
+            f"--mesh {spec} needs {dp * tp} devices but only {n} visible; "
+            f"on CPU set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{dp * tp}")
+    return jax.make_mesh((dp, tp), ("data", "model"))

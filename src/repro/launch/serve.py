@@ -15,6 +15,10 @@
     # compute backend for the quantized blocks (docs/architecture.md)
     ... --backend fused              # reference | fused | auto
 
+    # mesh-sharded serving: dp-way data parallel x tp-way tensor parallel
+    # (docs/serving.md; needs dp*tp visible devices)
+    ... --mesh 2,1
+
 Instantiates the reduced config (this is the CPU-container path; on TPU the
 same flow runs the full config), PTQ-calibrates on synthetic batches,
 applies the requested precision — a named mode policy (``--policy``), a
@@ -39,6 +43,8 @@ from repro.core.plan import PrecisionPlan, plan_from_policy
 from repro.core.precision import make_policy
 from repro.core.samp import SAMPEngine
 from repro.data.pipeline import make_task
+from repro.distributed.sharding import mesh_fingerprint
+from repro.launch.mesh import make_serving_mesh
 from repro.models import transformer as T
 from repro.serve import (EncoderRequest, EncoderServeEngine, Request,
                          ServeEngine)
@@ -121,9 +127,10 @@ def serve_decode(cfg, args) -> None:
     params, plan = build_model(cfg, args.policy, seed=args.seed,
                                plan_file=args.plan, strategy=args.strategy,
                                max_latency=args.max_latency)
+    mesh = make_serving_mesh(args.mesh)
     server = ServeEngine(cfg, params, plan, batch_slots=args.slots,
                          max_len=args.max_len, seed=args.seed,
-                         backend=args.backend)
+                         backend=args.backend, mesh=mesh)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         plen = int(rng.integers(2, 9))
@@ -137,7 +144,8 @@ def serve_decode(cfg, args) -> None:
     for req in sorted(done, key=lambda r: r.uid):
         print(f"  req{req.uid}: prompt={req.prompt} -> {req.output}")
     s = server.stats
-    print(f"[serve] backend={server.runtime.backend.describe()}: "
+    print(f"[serve] backend={server.runtime.backend.describe()} "
+          f"mesh={mesh_fingerprint(server.runtime.mesh)}: "
           f"{s['retired']} requests, {s['tokens']} tokens in "
           f"{s['ticks']} ticks, {dt:.2f}s "
           f"({s['tokens'] / max(dt, 1e-9):.1f} tok/s CPU); "
@@ -154,9 +162,10 @@ def serve_encoder(cfg, args) -> None:
                                head=(head_kind, max(task.n_classes, 1)),
                                plan_file=args.plan, strategy=args.strategy,
                                max_latency=args.max_latency)
+    mesh = make_serving_mesh(args.mesh)
     server = EncoderServeEngine(cfg, params, plan, target=spec,
                                 max_batch=args.slots, max_len=args.max_len,
-                                backend=args.backend)
+                                backend=args.backend, mesh=mesh)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         n = int(rng.integers(4, args.max_len // 2))
@@ -167,7 +176,8 @@ def serve_encoder(cfg, args) -> None:
     dt = time.perf_counter() - t0
     s = server.stats
     print(f"[serve] task={args.task} target={spec.name} "
-          f"backend={server.runtime.backend.describe()}: {s['retired']} "
+          f"backend={server.runtime.backend.describe()} "
+          f"mesh={mesh_fingerprint(server.runtime.mesh)}: {s['retired']} "
           f"requests in {s['batches']} micro-batches, {dt:.2f}s "
           f"({s['retired'] / max(dt, 1e-9):.1f} req/s CPU); "
           f"{s['runtime_traces']} compile(s) / "
@@ -198,6 +208,11 @@ def main():
                     help="compute backend for quantized blocks: reference "
                          "XLA ops, fused Pallas kernels, or auto (fused on "
                          "TPU, reference elsewhere)")
+    ap.add_argument("--mesh", default="1,1",
+                    help="serving mesh as 'dp,tp' (data-parallel x tensor-"
+                         "parallel device counts); 1,1 = unmeshed. Needs "
+                         "dp*tp visible devices — on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-tokens", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4,

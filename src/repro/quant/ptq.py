@@ -247,6 +247,13 @@ def capture_stats(params: dict, batches: Sequence[dict], cfg: ArchConfig,
     intended for calibration-size models only; sites without raw captures
     fall back to the scalar minmax amax.
 
+    Sharded calibration (params/batches placed over a mesh, e.g. batches
+    data-parallel over the ``data`` axis) needs no special handling: the
+    observers record ``jnp.max(|x|)`` — a *global* reduction, so a batch
+    sharded over the data axis yields exactly the amax of the whole batch,
+    and replicated params observe identical values on every shard.
+    ``tests/test_mesh_serving.py`` pins sharded == unsharded stats.
+
     Returns {"layer{i}": {site: amax}}.
     """
     def site_calibrator(layer_idx: int, site: str) -> str:

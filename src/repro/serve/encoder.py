@@ -39,9 +39,10 @@ class EncoderServeEngine:
                  max_batch: int = 8, max_wait: float = 0.0,
                  max_len: int = 256, compute_dtype=jnp.float32,
                  runtime: Optional[Runtime] = None,
-                 backend="reference"):
+                 backend="reference", mesh=None):
         # ``backend`` names the compute backend (repro.kernels.backend) for
-        # the engine's Runtime; ignored when a runtime is shared in.
+        # the engine's Runtime, ``mesh`` the serving mesh its executables
+        # are placed over; both ignored when a runtime is shared in.
         if isinstance(target, str):
             # lazy: repro.toolkit imports repro.serve for the facade
             from repro.toolkit.registry import get_target
@@ -59,7 +60,7 @@ class EncoderServeEngine:
             cfg, plan, scheme=scheme, compute_dtype=compute_dtype,
             head=lambda p, h: target.apply(p, h, cfg),
             token_level=target.token_level, max_len=max_len,
-            backend=backend)
+            backend=backend, mesh=mesh)
         self.batcher = MicroBatcher(max_batch=max_batch, max_wait=max_wait,
                                     max_len=max_len)
         self._stats = {"requests": 0, "batches": 0, "retired": 0,

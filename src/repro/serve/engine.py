@@ -55,10 +55,11 @@ class ServeEngine:
                  batch_slots: int = 4, max_len: int = 256,
                  cache_dtype=jnp.float32, compute_dtype=jnp.float32,
                  seed: int = 0, runtime: Optional[Runtime] = None,
-                 backend="reference"):
+                 backend="reference", mesh=None):
         # ``backend`` names the compute backend (repro.kernels.backend) the
-        # engine's Runtime executes on; ignored when a runtime is passed in
-        # (the shared runtime's backend governs).
+        # engine's Runtime executes on, ``mesh`` the serving mesh it places
+        # executables over; both are ignored when a runtime is passed in
+        # (the shared runtime's backend/mesh govern).
         if not cfg.supports_decode:
             raise ValueError(f"{cfg.name} is encoder-only; no decode — "
                              f"serve it through EncoderServeEngine")
@@ -73,7 +74,7 @@ class ServeEngine:
         self.sched = SlotScheduler(batch_slots)
         self.runtime = runtime or Runtime(cfg, plan, scheme=scheme,
                                           compute_dtype=compute_dtype,
-                                          backend=backend)
+                                          backend=backend, mesh=mesh)
         self.caches = T.init_caches(cfg, plan, batch_slots, max_len,
                                     cache_dtype)
         self._fresh1 = T.init_caches(cfg, plan, 1, max_len, cache_dtype)

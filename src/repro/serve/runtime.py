@@ -3,7 +3,8 @@
 Every inference path (the token-level serving engine, the encoder serving
 engine, ``Pipeline.predict``/``eval``, and the wall-clock benchmarks) funnels
 through one :class:`Runtime`, which owns the jitted executables keyed by
-``(backend_name, precision_fingerprint, kind, bucket_shape)``:
+``(backend_name, precision_fingerprint, mesh_fingerprint, kind,
+bucket_shape)``:
 
 * a Runtime instance is bound to one ``(cfg, plan, scheme, compute_dtype,
   head)`` configuration — but the executable-cache key leads with the
@@ -33,6 +34,27 @@ XLA actually re-traces), so a serving log can *prove* "≤ 1 compile per
 MoE configs are the one exception to bucketing: expert capacity is derived
 from the token count, so padding would change routing for real rows. They
 run at natural shapes (still cached per shape, still counted).
+
+**Mesh-aware serving.** A Runtime bound to a ``mesh=`` (a ``jax.sharding``
+Mesh with ``data``/``model`` axes) places every executable over that mesh:
+
+* params/batch/cache shardings come from the same
+  :class:`~repro.distributed.sharding.Rules` engine training uses, with
+  ``fsdp=False`` — inference replicates params over ``data`` (pure DP on
+  the batch) and tensor-parallelizes over ``model``. Quantized leaves need
+  no extra rules: int8 ``values`` inherit the weight's spec, per-channel
+  scales shard along the same output axis, per-tensor scales / zero
+  points / ``xs`` activation scales replicate;
+* the executable-cache key gains the mesh topology fingerprint next to
+  the backend name and plan fingerprint, so one shared cache serves
+  deployments on different topologies without collisions;
+* batch buckets round up to multiples of the dp axis size (after the
+  power-of-two rounding), so every compiled batch splits evenly over
+  ``data`` — no padded batch sharding;
+* the fused backend learns the mesh too (:meth:`ComputeBackend.with_mesh`)
+  and declines any GEMM whose per-device shard would be narrower than the
+  minimum Pallas tile on either splittable axis, falling back to
+  reference on that op.
 """
 from __future__ import annotations
 
@@ -89,7 +111,8 @@ class Runtime:
                  min_batch: int = 1, min_len: int = 8,
                  max_len: Optional[int] = None,
                  chunk: Optional[int] = T.DEFAULT_CHUNK,
-                 backend="reference"):
+                 backend="reference", mesh=None):
+        from repro.distributed.sharding import Rules, mesh_fingerprint
         from repro.kernels.backend import get_backend
         self.cfg = cfg
         self.plan = plan
@@ -102,48 +125,78 @@ class Runtime:
         self.min_len = min_len
         self.max_len = max_len
         self.chunk = chunk
-        self.backend = get_backend(backend)
+        # mesh-aware deployments shard params/batches via the training
+        # Rules engine with fsdp off (inference: replicate params over
+        # 'data', TP over 'model'); the backend learns the topology so the
+        # fused kernels can decline shards narrower than their tile.
+        self.mesh = mesh
+        self.rules = Rules(cfg, mesh, fsdp=False) if mesh is not None \
+            else None
+        self.backend = get_backend(backend).with_mesh(mesh)
         # MoE expert capacity scales with the token count: padded tokens
         # would consume capacity and change routing for real rows.
         self.bucketed = cfg.moe is None
         # the scheme-identity half of every cache key: the compute backend's
-        # name plus the PrecisionPlan's stable fingerprint when one is
-        # bound, else a structural hash of (execution plan, scheme) — all
-        # shareable across sibling views. The backend name matters: the
-        # same plan compiles to *different* executables (reference XLA vs
-        # fused Pallas), so switching backends must not collide.
+        # name, the PrecisionPlan's stable fingerprint when one is bound
+        # (else a structural hash of (execution plan, scheme)), and the
+        # mesh topology fingerprint — all shareable across sibling views.
+        # Each component exists because the same plan compiles to
+        # *different* executables per backend (reference XLA vs fused
+        # Pallas) AND per mesh topology (different shardings, different
+        # collectives), so neither switch may collide.
         self._plan_key = (self.backend.name,
                           precision.fingerprint() if precision is not None
-                          else hash((plan, scheme)))
+                          else hash((plan, scheme)),
+                          mesh_fingerprint(mesh))
         self._exe: dict[tuple, Callable] = {}
         self._stats = {"calls": 0, "traces": 0,
                        "real_tokens": 0, "padded_tokens": 0}
 
     def share(self, plan, *, scheme: Optional[T.QuantScheme] = None,
-              precision=None, backend=None) -> "Runtime":
+              precision=None, backend=None, mesh="inherit") -> "Runtime":
         """A sibling Runtime bound to a different (plan, scheme, precision,
-        backend) that SHARES this runtime's executable cache and counters.
-        Cache keys lead with (backend name, precision fingerprint), so two
-        pipelines under different plans — or the same plan on different
-        compute backends — share one runtime without key collisions, and
-        still compile at most once per (backend, plan, kind, bucket)."""
+        backend, mesh) that SHARES this runtime's executable cache and
+        counters. Cache keys lead with (backend name, precision
+        fingerprint, mesh fingerprint), so two pipelines under different
+        plans — or the same plan on different compute backends or mesh
+        topologies — share one runtime without key collisions, and still
+        compile at most once per (backend, plan, mesh, kind, bucket).
+        ``mesh`` defaults to this runtime's mesh; pass ``None`` to get an
+        explicitly unmeshed sibling."""
         rt = Runtime(self.cfg, plan, scheme=scheme or self.scheme,
                      precision=precision, compute_dtype=self.compute_dtype,
                      head=self.head, token_level=self.token_level,
                      min_batch=self.min_batch, min_len=self.min_len,
                      max_len=self.max_len, chunk=self.chunk,
-                     backend=backend or self.backend)
+                     backend=backend or self.backend,
+                     mesh=self.mesh if mesh == "inherit" else mesh)
         rt._exe = self._exe
         rt._stats = self._stats
         return rt
 
     # -- cache plumbing ------------------------------------------------------
-    def _get(self, key: tuple, build: Callable[[], Callable]) -> Callable:
+    def _get(self, key: tuple, build: Callable[[], Callable],
+             shardings: Optional[Callable[[], tuple]] = None) -> Callable:
+        # ``shardings`` is a thunk so cache hits never pay the spec-tree
+        # walk — it only runs when an executable is actually created
         fn = self._exe.get(key)
         if fn is None:
-            fn = jax.jit(build())
+            if shardings is None:
+                fn = jax.jit(build())
+            else:
+                in_s, out_s = shardings()
+                fn = jax.jit(build(), in_shardings=in_s, out_shardings=out_s)
             self._exe[key] = fn
         return fn
+
+    @property
+    def _dp(self) -> int:
+        """Batch-sharding factor of the bound mesh (1 when unmeshed)."""
+        return self.rules.dp_size if self.rules is not None else 1
+
+    def _sharding(self, spec) -> "jax.sharding.NamedSharding":
+        from jax.sharding import NamedSharding
+        return NamedSharding(self.mesh, spec)
 
     @property
     def stats(self) -> dict:
@@ -161,6 +214,8 @@ class Runtime:
         cfg, plan, scheme = self.cfg, self.plan, self.scheme
         head, compute_dtype, chunk = self.head, self.compute_dtype, self.chunk
         backend = self.backend
+        constrain_kw = {} if self.rules is None else \
+            {"constrain": self.rules}
 
         def fn(params, inputs, lengths):
             self._stats["traces"] += 1          # trace-time side effect
@@ -181,10 +236,25 @@ class Runtime:
                                compute_dtype=compute_dtype, backend=backend)
             x, _ = T.run_groups(x, params, cfg, plan, scheme,
                                 positions=positions, chunk=chunk,
-                                backend=backend)
+                                backend=backend, **constrain_kw)
             x = L.norm(x, params["final_norm"], cfg.norm_kind)
             return head(params, x) if head is not None else x
         return fn
+
+    def _encode_shardings(self, params, padded: dict, lengths) -> tuple:
+        """(in_shardings, out_shardings) for one encode executable: params
+        from the rule table, inputs/lengths batch-sharded over dp, the
+        (batch-leading) output sharded over dp when the bucket divides."""
+        from jax.sharding import PartitionSpec
+        r = self.rules
+        in_s = (r.params_sharding(params),
+                r.batch_sharding(padded),
+                r.batch_sharding({"lengths": lengths})["lengths"])
+        B = lengths.shape[0]
+        out_s = self._sharding(
+            PartitionSpec(r.axes.dp) if B % r.dp_size == 0
+            else PartitionSpec())
+        return in_s, out_s
 
     def encode(self, params, inputs: dict,
                lengths: Optional[np.ndarray] = None) -> np.ndarray:
@@ -204,6 +274,11 @@ class Runtime:
         lengths = np.asarray(lengths, np.int32)
         seq_bucketed = self.bucketed and "tokens" in arrs
         Bb = bucket_size(B, self.min_batch) if self.bucketed else B
+        if self.bucketed and Bb % self._dp:
+            # meshed serving: the compiled batch must split evenly over the
+            # data axis, so buckets round up to dp multiples (a non-power-
+            # of-two dp size yields non-power-of-two buckets, still cached)
+            Bb = -(-Bb // self._dp) * self._dp
         Sb = (bucket_size(S, self.min_len, self.max_len) if seq_bucketed
               else S)
         padded = {}
@@ -218,7 +293,10 @@ class Runtime:
         # structure (float vs quantized leaves) are part of the compiled
         # signature: distinct signatures get distinct cache entries
         fn = self._get(("encode", self._plan_key, Bb, Sb, _tree_sig(padded),
-                        _tree_sig(params)), self._build_encode)
+                        _tree_sig(params)), self._build_encode,
+                       shardings=None if self.rules is None else
+                       (lambda: self._encode_shardings(params, padded,
+                                                       full_len)))
         out = fn(params, {k: jnp.asarray(v) for k, v in padded.items()},
                  jnp.asarray(full_len))
         self._stats["calls"] += 1
@@ -237,14 +315,30 @@ class Runtime:
     def _build_decode(self):
         cfg, plan, scheme = self.cfg, self.plan, self.scheme
         compute_dtype, backend = self.compute_dtype, self.backend
+        constrain_kw = {} if self.rules is None else \
+            {"constrain": self.rules}
 
         def fn(params, caches, tokens, pos, active):
             self._stats["traces"] += 1          # trace-time side effect
             logits, caches = T.decode_step(
                 params, tokens, caches, pos, cfg, plan, scheme,
-                active=active, compute_dtype=compute_dtype, backend=backend)
+                active=active, compute_dtype=compute_dtype, backend=backend,
+                **constrain_kw)
             return logits[:, -1, :], caches
         return fn
+
+    def _decode_shardings(self, params, caches) -> tuple:
+        """(in_shardings, out_shardings) for one decode executable: params
+        from the rule table, caches batch/head-sharded per the cache rules,
+        per-tick operands (tokens/pos/active) replicated — they are tiny —
+        and the caches come back under the same shardings they went in."""
+        from jax.sharding import PartitionSpec
+        r = self.rules
+        caches_sh = jax.tree_util.tree_map(
+            self._sharding, r.cache_spec(caches),
+            is_leaf=lambda x: isinstance(x, PartitionSpec))
+        in_s = (r.params_sharding(params), caches_sh, None, None, None)
+        return in_s, (None, caches_sh)
 
     def decode_fn(self, params, caches):
         """Resolve the decode executable for this (slot count, cache
@@ -255,7 +349,9 @@ class Runtime:
         per token."""
         key = ("decode", self._plan_key, self._decode_batch(caches),
                _tree_sig(caches), _tree_sig(params))
-        fn = self._get(key, self._build_decode)
+        fn = self._get(key, self._build_decode,
+                       shardings=None if self.rules is None else
+                       (lambda: self._decode_shardings(params, caches)))
 
         def step(params, caches, tokens, pos, active):
             self._stats["calls"] += 1

@@ -66,10 +66,11 @@ class Artifact:
         """The precision description (kept under the pre-plan name)."""
         return self.precision
 
-    def pipeline(self, backend: str = "reference"):
+    def pipeline(self, backend: str = "reference", mesh=None):
         """Rebuild the (quantized) Pipeline this artifact was saved from.
-        ``backend`` picks the compute backend (a deployment-time choice —
-        the bundle persists the plan, not how it executes)."""
+        ``backend`` picks the compute backend and ``mesh`` the serving
+        topology (both deployment-time choices — the bundle persists the
+        plan, not how or where it executes)."""
         from repro.toolkit.pipeline import Pipeline
         task = self.task or TaskSpec(name="lm", kind="lm", n_classes=0,
                                      vocab_size=self.cfg.vocab_size,
@@ -78,7 +79,7 @@ class Artifact:
                               n_out=self.n_out, scheme=self.scheme,
                               tokenizer=self.tokenizer,
                               compute_dtype=jnp.dtype(self.compute_dtype),
-                              backend=backend)
+                              backend=backend, mesh=mesh)
         return float_pipe.with_policy(self.params, self.plan, self.precision)
 
 

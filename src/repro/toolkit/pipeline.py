@@ -134,10 +134,14 @@ class Pipeline:
                  plan=None, scheme: T.QuantScheme = T.QuantScheme(),
                  params: Optional[dict] = None,
                  tokenizer: Optional[WordPieceTokenizer] = None,
-                 compute_dtype=jnp.float32, backend="reference"):
+                 compute_dtype=jnp.float32, backend="reference",
+                 mesh=None):
         self.cfg = cfg
         self.task = task
         self.backend = get_backend(backend)
+        # serving mesh the runtime places executables over (None = single
+        # device); quantized siblings and serving engines inherit it
+        self.mesh = mesh
         # the precision description is always a PrecisionPlan internally;
         # EncoderPolicies coerce through the lossless shim
         self.policy = (PrecisionPlan.full_float(cfg.num_layers)
@@ -163,11 +167,14 @@ class Pipeline:
               seq_len: int = 64, float_dtype: str = "bfloat16",
               scheme: T.QuantScheme = T.QuantScheme(),
               tokenizer: Optional[WordPieceTokenizer] = None,
-              compute_dtype=None, backend="reference") -> "Pipeline":
+              compute_dtype=None, backend="reference",
+              mesh=None) -> "Pipeline":
         """ArchConfig + task spec -> float Pipeline (params uninitialized;
         call ``init_params`` or let the SAMP facade fine-tune).
         ``backend`` picks the compute backend quantized blocks execute on
-        (reference | fused | auto — see repro.kernels.backend)."""
+        (reference | fused | auto — see repro.kernels.backend); ``mesh``
+        (a jax Mesh with data/model axes) makes the runtime shard params
+        and batches over it (see docs/serving.md)."""
         if isinstance(task, str):
             task = make_task(task, vocab_size=cfg.vocab_size,
                              seq_len=seq_len)
@@ -178,7 +185,7 @@ class Pipeline:
                 if float_dtype != "float16" else jnp.float32
         return cls(cfg, task, spec, n_out=n_out, policy=policy,
                    scheme=scheme, tokenizer=tokenizer,
-                   compute_dtype=compute_dtype, backend=backend)
+                   compute_dtype=compute_dtype, backend=backend, mesh=mesh)
 
     # -- construction --------------------------------------------------------
     @property
@@ -204,7 +211,8 @@ class Pipeline:
                 precision=self.precision,
                 compute_dtype=self.compute_dtype,
                 head=lambda p, h: spec.apply(p, h, cfg),
-                token_level=spec.token_level, backend=self.backend)
+                token_level=spec.token_level, backend=self.backend,
+                mesh=self.mesh)
         return self._runtime
 
     def init_params(self, key, dtype=jnp.float32) -> dict:
@@ -231,7 +239,7 @@ class Pipeline:
                         scheme=self.scheme, params=params,
                         tokenizer=self.tokenizer.tokenizer,
                         compute_dtype=self.compute_dtype,
-                        backend=self.backend)
+                        backend=self.backend, mesh=self.mesh)
         pipe._runtime = self.runtime.share(plan, scheme=self.scheme,
                                            precision=pipe.precision,
                                            backend=pipe.backend)
@@ -307,7 +315,9 @@ class Pipeline:
         return loss
 
     def describe(self) -> str:
+        from repro.distributed.sharding import mesh_fingerprint
         return (f"Pipeline[{self.cfg.name}] task={self.task.name} "
                 f"target={self.target.spec.name} "
                 f"policy={self.policy.describe()} "
-                f"backend={self.backend.describe()}")
+                f"backend={self.backend.describe()} "
+                f"mesh={mesh_fingerprint(self.mesh)}")

@@ -59,11 +59,15 @@ class AutotuneReport:
         return "\n".join(lines)
 
     def summary(self) -> str:
+        """One line per recommended candidate family. Each line names the
+        candidate's PrecisionPlan (``rec.plan`` — ``rec.point.policy`` is
+        the deprecated spelling) via its ``describe()`` string."""
         lines = []
         for rec in self.recommendations:
             r = rec.recommendation
             lines.append(
                 f"SAMP recommends [{rec.mode_name}]: k={rec.point.k} "
+                f"plan={rec.plan.describe()} "
                 f"accuracy={r.accuracy:.4f} (drop {r.accuracy_drop:+.4f}) "
                 f"speedup={r.speedup:.3f}x")
         return "\n".join(lines)
@@ -98,31 +102,32 @@ class SAMP:
                     scheme: T.QuantScheme = T.QuantScheme(),
                     latency: Union[str, LatencyBackend] = "roofline",
                     latency_batch: int = 32, tokenizer=None,
-                    backend: str = "reference") -> "SAMP":
+                    backend: str = "reference", mesh=None) -> "SAMP":
         """Build the float pipeline for ``arch`` (a registry name or an
         explicit ArchConfig) on ``task`` and wrap it in the facade.
         ``backend`` names the compute backend quantized blocks execute on
-        (reference | fused | auto — repro.kernels.backend); it follows the
-        pipeline through ``apply``/``autotune`` into serving."""
+        (reference | fused | auto — repro.kernels.backend); ``mesh`` (a
+        jax Mesh with data/model axes) makes serving shard over it; both
+        follow the pipeline through ``apply``/``autotune`` into serving."""
         cfg = arch if isinstance(arch, ArchConfig) else get_config(arch)
         if task is None:
             task = get_target(target).default_task if target else "tnews"
         pipe = Pipeline.build(cfg, task, target=target, n_out=n_out,
                               seq_len=seq_len, float_dtype=float_dtype,
                               scheme=scheme, tokenizer=tokenizer,
-                              backend=backend)
+                              backend=backend, mesh=mesh)
         return cls(pipe, latency=latency, latency_batch=latency_batch)
 
     @classmethod
     def load(cls, directory: str, *,
              latency: Union[str, LatencyBackend] = "roofline",
-             backend: str = "reference") -> "SAMP":
+             backend: str = "reference", mesh=None) -> "SAMP":
         """Reload a saved artifact: the quantized pipeline is ready to
         predict/serve immediately — no calibration batches needed. The
-        compute backend is a deployment choice, not part of the artifact:
-        pick it at load time."""
+        compute backend and serving mesh are deployment choices, not part
+        of the artifact: pick them at load time."""
         art = A.load_artifact(directory)
-        qpipe = art.pipeline(backend=backend)
+        qpipe = art.pipeline(backend=backend, mesh=mesh)
         samp = cls(qpipe, latency=latency)
         samp.stats = art.stats
         samp.quantized = qpipe
@@ -354,27 +359,35 @@ class SAMP:
         bucketed-runtime layers; the encoder engine shares the pipeline's
         runtime, so predict() and serving hit one executable cache.
         ``batch_slots`` sets the compiled slot count (decode) / the
-        micro-batch flush size (encoder). ``backend=`` overrides the
-        pipeline's compute backend for this server (both engine types)."""
+        micro-batch flush size (encoder). ``backend=`` / ``mesh=``
+        override the pipeline's compute backend / serving mesh for this
+        server (both engine types)."""
+        from repro.distributed.sharding import mesh_fingerprint
         pipe = self.current
         if pipe.params is None:
             raise ValueError("pipeline has no params to serve")
         backend = kw.pop("backend", None)
+        mesh = kw.pop("mesh", pipe.mesh)
         if pipe.cfg.supports_decode and pipe.target.spec.name == "lm":
             return ServeEngine(pipe.cfg, pipe.params, pipe.plan,
                                scheme=pipe.scheme, batch_slots=batch_slots,
                                max_len=max_len,
                                compute_dtype=pipe.compute_dtype,
                                backend=(pipe.backend if backend is None
-                                        else backend), **kw)
+                                        else backend), mesh=mesh, **kw)
         enc_kw = dict(target=pipe.target.spec, scheme=pipe.scheme,
                       max_batch=kw.pop("max_batch", batch_slots),
                       max_len=max_len, compute_dtype=pipe.compute_dtype)
-        if backend is not None \
-                and get_backend(backend).name != pipe.backend.name:
-            # explicit override: a fresh runtime on the requested backend
-            # (sharing the pipeline's would silently keep its backend)
+        if (backend is not None
+                and get_backend(backend).name != pipe.backend.name) \
+                or mesh_fingerprint(mesh) != mesh_fingerprint(pipe.mesh):
+            # explicit override: a fresh runtime on the requested backend/
+            # topology (sharing the pipeline's would silently keep its
+            # own). Topology compares by fingerprint: an equal mesh built
+            # separately still shares the pipeline's warmed cache.
             return EncoderServeEngine(pipe.cfg, pipe.params, pipe.plan,
-                                      backend=backend, **enc_kw, **kw)
+                                      backend=(pipe.backend if backend is
+                                               None else backend),
+                                      mesh=mesh, **enc_kw, **kw)
         return EncoderServeEngine(pipe.cfg, pipe.params, pipe.plan,
                                   runtime=pipe.runtime, **enc_kw, **kw)

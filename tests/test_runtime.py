@@ -51,6 +51,59 @@ def test_bucket_size():
         bucket_size(0)
 
 
+def test_microbatcher_max_wait_expiry_flushes_partial_bucket():
+    """A bucket that never fills must still flush once its HEAD request has
+    waited max_wait — the flushed batch is smaller than max_batch, and
+    younger requests in other buckets stay queued."""
+    mb = MicroBatcher(max_batch=4, max_wait=1.0, min_len=8)
+    a = EncoderRequest(uid=0, tokens=[1] * 5)       # bucket 8
+    b = EncoderRequest(uid=1, tokens=[1] * 6)       # bucket 8
+    c = EncoderRequest(uid=2, tokens=[1] * 12)      # bucket 16, younger
+    mb.submit(a, now=0.0)
+    mb.submit(b, now=0.4)
+    mb.submit(c, now=0.9)
+    assert mb.ready(now=0.5) == []                  # nobody full or stale
+    got = mb.ready(now=1.0)                         # a expired: partial flush
+    assert [(blen, [q.uid for q in reqs]) for blen, reqs in got] == \
+        [(8, [0, 1])]                               # b rides a's flush
+    assert len(mb) == 1                             # c still waiting
+    assert mb.ready(now=1.5) == []                  # c not yet stale
+    got = mb.ready(now=2.0)
+    assert [q.uid for _, reqs in got for q in reqs] == [2]
+
+
+def test_microbatcher_force_drain_caps_batches_at_max_batch():
+    """Drain pops everything, but never emits a batch above max_batch."""
+    mb = MicroBatcher(max_batch=2, max_wait=100.0, min_len=8)
+    for i in range(5):
+        mb.submit(EncoderRequest(uid=i, tokens=[1] * 4), now=0.0)
+    got = mb.ready(now=0.0, force=True)
+    assert [[q.uid for q in reqs] for _, reqs in got] == [[0, 1], [2, 3], [4]]
+    assert len(mb) == 0
+
+
+def test_engine_shutdown_drains_partial_queues(bert_pipe):
+    """run() (shutdown/synchronous drain) must retire every queued request
+    even when no bucket is full or stale — and leave the queues empty."""
+    pipe = bert_pipe
+    eng = EncoderServeEngine(pipe.cfg, pipe.params, pipe.plan,
+                             target=pipe.target.spec,
+                             compute_dtype=jnp.float32,
+                             max_batch=8, max_wait=1e9)
+    rng = np.random.default_rng(5)
+    for i in range(3):                  # three buckets, none full
+        eng.submit(EncoderRequest(
+            uid=i,
+            tokens=rng.integers(1, pipe.cfg.vocab_size,
+                                size=3 + 5 * i).tolist()), now=0.0)
+    assert eng.step(now=0.0) == []      # nothing due yet
+    done = eng.run(now=0.0)             # shutdown drain
+    assert sorted(r.uid for r in done) == [0, 1, 2]
+    assert all(r.done and r.logits is not None for r in done)
+    assert len(eng.batcher) == 0
+    assert eng.stats["retired"] == 3
+
+
 def test_microbatcher_flush_rules():
     mb = MicroBatcher(max_batch=2, max_wait=10.0, min_len=8)
     r = [EncoderRequest(uid=i, tokens=[1] * (4 + i)) for i in range(5)]

@@ -1,13 +1,21 @@
 #!/usr/bin/env python
-"""Fail on broken intra-repo markdown links.
+"""Fail on broken intra-repo markdown links — including #anchor fragments.
 
     python tools/check_links.py README.md docs/*.md
 
-Checks every ``[text](target)`` whose target is a relative path (external
-``http(s)://``/``mailto:`` links and pure ``#anchor`` fragments are
-skipped): the target — resolved against the markdown file's directory,
-fragment stripped — must exist in the repo. Exit 1 with a per-link report
-otherwise. Stdlib only, so the CI docs job needs no extra deps.
+Checks every ``[text](target)`` whose target is a relative path or a pure
+``#anchor`` fragment (external ``http(s)://``/``mailto:`` links are
+skipped):
+
+* the path part — resolved against the markdown file's directory — must
+  exist in the repo;
+* when the target carries a ``#fragment`` and points at a markdown file
+  (or is a same-file ``#anchor``), the fragment must match a heading in
+  that file under GitHub's slug rules (lowercase, punctuation stripped,
+  spaces to hyphens, ``-1``/``-2`` suffixes for duplicates).
+
+Exit 1 with a per-link report otherwise. Stdlib only, so the CI docs job
+needs no extra deps.
 """
 from __future__ import annotations
 
@@ -17,11 +25,41 @@ import sys
 
 # inline links only; reference-style links are not used in this repo.
 LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#{1,6}\s+(.+?)\s*$", re.M)
 SKIP = ("http://", "https://", "mailto:")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug for a heading: markdown formatting stripped,
+    lowercased, anything but word chars / spaces / hyphens removed, spaces
+    hyphenated (consecutive spaces become consecutive hyphens)."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading)          # inline code
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # links -> text
+    text = text.strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(md: pathlib.Path, cache: dict) -> set:
+    """All valid anchor slugs of a markdown file (headings outside fenced
+    code blocks, with GitHub's -N dedup suffixes)."""
+    if md not in cache:
+        text = re.sub(r"```.*?```", "", md.read_text(encoding="utf-8"),
+                      flags=re.S)
+        slugs: set = set()
+        seen: dict[str, int] = {}
+        for m in HEADING.finditer(text):
+            slug = github_slug(m.group(1))
+            n = seen.get(slug, 0)
+            seen[slug] = n + 1
+            slugs.add(slug if n == 0 else f"{slug}-{n}")
+        cache[md] = slugs
+    return cache[md]
 
 
 def check(paths: list[str]) -> list[str]:
     errors = []
+    anchor_cache: dict = {}
     for name in paths:
         md = pathlib.Path(name)
         text = md.read_text(encoding="utf-8")
@@ -29,13 +67,20 @@ def check(paths: list[str]) -> list[str]:
         text = re.sub(r"```.*?```", "", text, flags=re.S)
         for m in LINK.finditer(text):
             target = m.group(1)
-            if target.startswith(SKIP) or target.startswith("#"):
+            if target.startswith(SKIP):
                 continue
-            rel = target.split("#", 1)[0]
-            if not rel:
-                continue
-            if not (md.parent / rel).exists():
+            rel, _, frag = target.partition("#")
+            dest = md if not rel else (md.parent / rel)
+            if rel and not dest.exists():
                 errors.append(f"{md}: broken link -> {target}")
+                continue
+            if not frag:
+                continue
+            # fragments are only checkable on markdown targets
+            if dest.is_file() and dest.suffix == ".md" \
+                    and frag not in anchors_of(dest, anchor_cache):
+                errors.append(f"{md}: broken anchor -> {target} "
+                              f"(no heading slug {frag!r} in {dest})")
     return errors
 
 
