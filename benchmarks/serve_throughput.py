@@ -9,10 +9,17 @@ reduced), measuring per-request latency from submit to retirement, and
 emits ``BENCH_serve.json``:
 
 * ``requests_per_s`` / ``tokens_per_s`` — end-to-end engine throughput;
-* ``p50_latency_s`` / ``p95_latency_s`` — request latency percentiles;
+* ``p50/p95/p99_latency_s`` + ``latency_buckets`` — the full client-side
+  latency histogram (same bucket bounds as the server's ``/metrics``
+  histogram, so benchmark and dashboard numbers line up);
 * ``retraces`` / ``executables`` — the runtime's compile census, proving
   the bucketed executable cache holds (≤ 1 trace per (plan, scheme,
-  bucket) over the whole mixed-length stream).
+  bucket) over the whole mixed-length stream);
+* ``encoder_fused`` — the same encoder load on the fused Pallas backend
+  (interpret mode off-TPU), the second point of the backend matrix;
+* ``frontend`` — the HTTP front-end under an over-capacity open-loop
+  load (``benchmarks/serve_http_load.py``): client-observed latency plus
+  the admission controller's ``rejection_rate``.
 
 Absolute numbers are CPU-container-specific; the artifact exists so the
 perf trajectory of the serving stack is tracked per commit, and CI smokes
@@ -21,12 +28,14 @@ it on the reduced config.
 from __future__ import annotations
 
 import argparse
+import asyncio
 import json
 import os
 import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
 import numpy as np
 
@@ -36,13 +45,15 @@ from repro.launch.mesh import make_serving_mesh
 from repro.launch.serve import build_model
 from repro.serve import (EncoderRequest, EncoderServeEngine, Request,
                          ServeEngine)
+from repro.serve.metrics import latency_summary
 from repro.toolkit.registry import get_target
 
 
 def _percentiles(latencies: list[float]) -> dict:
-    arr = np.asarray(latencies)
-    return {"p50_latency_s": float(np.percentile(arr, 50)),
-            "p95_latency_s": float(np.percentile(arr, 95))}
+    # kept as a thin alias so older readers of this module keep working;
+    # the real definition (quantiles + the /metrics-aligned cumulative
+    # buckets) is repro.serve.metrics.latency_summary
+    return latency_summary(latencies)
 
 
 def _build(arch: str, policy: str, head=None, plan_file=None):
@@ -129,6 +140,46 @@ def bench_encoder(n_requests: int, policy: str, plan_file=None,
             **_percentiles(lat)}
 
 
+def bench_frontend(n_requests: int, policy: str, plan_file=None,
+                   backend: str = "reference", mesh=None, *,
+                   max_pending: int = 2, concurrency: int = 8) -> dict:
+    """The HTTP front-end over the encoder engine, deliberately driven
+    past its admission budget (``concurrency > max_pending`` with a
+    generous micro-batch ageing window), so BENCH_serve.json records the
+    backpressure behaviour — ``rejection_rate`` — next to the latency
+    histogram the surviving requests observed."""
+    from serve_http_load import run_load
+
+    from repro.serve.frontend import HTTPFrontend
+
+    cfg, params, plan = _build("bert-base", policy, head=("cls", 15),
+                               plan_file=plan_file)
+    engine = EncoderServeEngine(cfg, params, plan, target=get_target("cls"),
+                                max_batch=8, max_wait=0.05, max_len=64,
+                                backend=backend, mesh=mesh)
+    fe = HTTPFrontend(encoder=engine, port=0, max_pending=max_pending,
+                      log=lambda *a, **k: None)
+
+    async def session():
+        await fe.start()
+        try:
+            return await run_load("127.0.0.1", fe.port, mode="encode",
+                                  n_requests=n_requests,
+                                  concurrency=concurrency,
+                                  vocab_size=cfg.vocab_size, max_len=64)
+        finally:
+            await fe.stop()
+
+    res = asyncio.run(session())
+    return {"engine": "http_frontend", "arch": cfg.name,
+            "backend": engine.runtime.backend.describe(),
+            "mesh": mesh_fingerprint(engine.runtime.mesh),
+            "max_pending": max_pending, **res,
+            "server_rejected_capacity":
+                fe.driver.counts["rejected_capacity"],
+            "server_admitted": fe.driver.counts["admitted"]}
+
+
 def main(quick: bool = False, out: str = "BENCH_serve.json",
          policy: str = "ffn", plan_file=None, backend: str = "reference",
          mesh_spec: str = "1,1", emit=print) -> dict:
@@ -151,8 +202,17 @@ def main(quick: bool = False, out: str = "BENCH_serve.json",
         "encoder": bench_encoder(n_enc, policy=policy,
                                  plan_file=plan_file, backend=backend,
                                  mesh=mesh),
+        # the backend matrix's second point: same encoder load through the
+        # fused Pallas kernels (interpret mode on CPU, so a small request
+        # count — the artifact tracks the ratio, not the absolute number)
+        "encoder_fused": bench_encoder(4 if quick else 8, policy=policy,
+                                       plan_file=plan_file, backend="fused",
+                                       mesh=mesh),
+        "frontend": bench_frontend(8 if quick else 24, policy=policy,
+                                   plan_file=plan_file, backend=backend,
+                                   mesh=mesh),
     }
-    for side in ("decode", "encoder"):
+    for side in ("decode", "encoder", "encoder_fused"):
         r = result[side]
         emit(f"[{side}] backend={r['backend']} mesh={r['mesh']}: "
              f"{r['requests']} reqs in "
@@ -160,6 +220,11 @@ def main(quick: bool = False, out: str = "BENCH_serve.json",
              f"({r['requests_per_s']:.1f} req/s) p50={r['p50_latency_s']:.3f}s "
              f"p95={r['p95_latency_s']:.3f}s retraces={r['retraces']} "
              f"executables={r['executables']}")
+    fr = result["frontend"]
+    emit(f"[frontend] backend={fr['backend']} max_pending="
+         f"{fr['max_pending']}: {fr['completed']} ok / {fr['rejected']} "
+         f"rejected (rate {fr['rejection_rate']:.2f}) "
+         f"p50={fr['p50_latency_s']:.3f}s p99={fr['p99_latency_s']:.3f}s")
     with open(out, "w") as f:
         json.dump(result, f, indent=1)
     emit(f"[serve_throughput] wrote {out}")

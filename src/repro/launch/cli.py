@@ -1,0 +1,59 @@
+"""Shared CLI surface for the serving entrypoints.
+
+``launch/serve.py`` (the synchronous one-shot CLI) and
+``launch/server.py`` (the HTTP/SSE front-end) serve the same deployments,
+so they must parse the same deployment flags the same way. This module is
+the single definition of that surface — ``--arch / --task / --policy /
+--plan / --strategy / --max-latency / --backend / --mesh / --slots /
+--max-len / --seed`` — so the two entrypoints cannot drift.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def add_serving_flags(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
+    """The deployment flags every serving entrypoint shares."""
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--task", default=None,
+                    help="lm (decode engine) | tnews|iflytek|afqmc|ner "
+                         "(encoder engine); default: lm when the arch "
+                         "decodes, tnews otherwise")
+    ap.add_argument("--policy", default="float",
+                    help="float | ffn[K] | full[K]")
+    ap.add_argument("--plan", default=None,
+                    help="path to a saved PrecisionPlan JSON (overrides "
+                         "--policy/--strategy)")
+    ap.add_argument("--strategy", default=None,
+                    choices=("prefix_grid", "greedy", "latency_budget"),
+                    help="pick the plan with a search strategy instead of "
+                         "--policy")
+    ap.add_argument("--max-latency", type=float, default=None,
+                    help="latency ceiling (roofline seconds) for "
+                         "--strategy latency_budget")
+    ap.add_argument("--backend", default="reference",
+                    choices=("reference", "fused", "auto"),
+                    help="compute backend for quantized blocks: reference "
+                         "XLA ops, fused Pallas kernels, or auto (fused on "
+                         "TPU, reference elsewhere)")
+    ap.add_argument("--mesh", default="1,1",
+                    help="serving mesh as 'dp,tp' (data-parallel x tensor-"
+                         "parallel device counts); 1,1 = unmeshed. Needs "
+                         "dp*tp visible devices — on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode batch slots / encoder micro-batch size")
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    return ap
+
+
+def resolve_task(cfg, task):
+    """Default/validate ``--task`` against the architecture: ``lm`` needs
+    a decode-capable config; encoder-only configs default to ``tnews``."""
+    if task is None:
+        return "lm" if cfg.supports_decode else "tnews"
+    if task == "lm" and not cfg.supports_decode:
+        raise SystemExit(f"{cfg.name} is encoder-only: pass --task "
+                         f"tnews|iflytek|afqmc|ner")
+    return task

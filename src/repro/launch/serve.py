@@ -44,6 +44,7 @@ from repro.core.precision import make_policy
 from repro.core.samp import SAMPEngine
 from repro.data.pipeline import make_task
 from repro.distributed.sharding import mesh_fingerprint
+from repro.launch.cli import add_serving_flags, resolve_task
 from repro.launch.mesh import make_serving_mesh
 from repro.models import transformer as T
 from repro.serve import (EncoderRequest, EncoderServeEngine, Request,
@@ -185,50 +186,17 @@ def serve_encoder(cfg, args) -> None:
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--task", default=None,
-                    help="lm (decode engine) | tnews|iflytek|afqmc|ner "
-                         "(encoder engine); default: lm when the arch "
-                         "decodes, tnews otherwise")
-    ap.add_argument("--policy", default="float",
-                    help="float | ffn[K] | full[K]")
-    ap.add_argument("--plan", default=None,
-                    help="path to a saved PrecisionPlan JSON (overrides "
-                         "--policy/--strategy)")
-    ap.add_argument("--strategy", default=None,
-                    choices=("prefix_grid", "greedy", "latency_budget"),
-                    help="pick the plan with a search strategy instead of "
-                         "--policy")
-    ap.add_argument("--max-latency", type=float, default=None,
-                    help="latency ceiling (roofline seconds) for "
-                         "--strategy latency_budget")
-    ap.add_argument("--backend", default="reference",
-                    choices=("reference", "fused", "auto"),
-                    help="compute backend for quantized blocks: reference "
-                         "XLA ops, fused Pallas kernels, or auto (fused on "
-                         "TPU, reference elsewhere)")
-    ap.add_argument("--mesh", default="1,1",
-                    help="serving mesh as 'dp,tp' (data-parallel x tensor-"
-                         "parallel device counts); 1,1 = unmeshed. Needs "
-                         "dp*tp visible devices — on CPU set XLA_FLAGS="
-                         "--xla_force_host_platform_device_count=N")
+    # deployment flags come from the shared launch.cli surface so this
+    # entrypoint and launch/server.py cannot drift
+    ap = add_serving_flags(argparse.ArgumentParser())
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-tokens", type=int, default=16)
-    ap.add_argument("--slots", type=int, default=4,
-                    help="decode batch slots / encoder micro-batch size")
-    ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
-    if args.task is None:
-        args.task = "lm" if cfg.supports_decode else "tnews"
+    args.task = resolve_task(cfg, args.task)
     if args.task == "lm":
-        if not cfg.supports_decode:
-            raise SystemExit(f"{cfg.name} is encoder-only: pass --task "
-                             f"tnews|iflytek|afqmc|ner")
         serve_decode(cfg, args)
     else:
         serve_encoder(cfg, args)

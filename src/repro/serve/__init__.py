@@ -1,9 +1,13 @@
 """The layered serving stack: Runtime (bucketed executable cache) ->
-schedulers (slots / micro-batches) -> engines (decode / encoder)."""
+schedulers (slots / micro-batches) -> engines (decode / encoder) ->
+HTTP/SSE front-end (repro.serve.frontend — imported lazily to keep
+`import repro.serve` free of asyncio machinery)."""
 from repro.serve.encoder import EncoderServeEngine
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.metrics import MetricsRegistry, engine_counters
 from repro.serve.runtime import Runtime, bucket_size
 from repro.serve.scheduler import EncoderRequest, MicroBatcher, SlotScheduler
 
 __all__ = ["Request", "ServeEngine", "EncoderRequest", "EncoderServeEngine",
-           "Runtime", "bucket_size", "MicroBatcher", "SlotScheduler"]
+           "Runtime", "bucket_size", "MicroBatcher", "SlotScheduler",
+           "MetricsRegistry", "engine_counters"]

@@ -120,7 +120,11 @@ class EncoderServeEngine:
 
     @property
     def stats(self) -> dict:
+        # unified counters surface shared with /metrics — see
+        # serve.metrics.engine_counters
+        from repro.serve.metrics import engine_counters
         s = dict(self._stats)
         s.update({f"runtime_{k}": v for k, v in self.runtime.stats.items()
                   if k != "buckets"})
+        s.update(engine_counters(self))
         return s

@@ -169,7 +169,12 @@ class ServeEngine:
 
     @property
     def stats(self) -> dict:
+        # the unified counters surface (queue depth / occupancy /
+        # completed / evicted) comes from serve.metrics.engine_counters —
+        # the same numbers the /metrics endpoint exports
+        from repro.serve.metrics import engine_counters
         s = dict(self._stats)
         s.update({f"runtime_{k}": v for k, v in self.runtime.stats.items()
                   if k != "buckets"})
+        s.update(engine_counters(self))
         return s

@@ -1,0 +1,8 @@
+"""Async HTTP/SSE serving front-end over the engines (the transport half
+of the engine/transport split — see docs/http-serving.md)."""
+from repro.serve.frontend.driver import (EngineDriver, FrontendRequest,
+                                         RequestError)
+from repro.serve.frontend.server import HTTPFrontend
+
+__all__ = ["HTTPFrontend", "EngineDriver", "FrontendRequest",
+           "RequestError"]

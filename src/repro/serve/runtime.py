@@ -199,6 +199,18 @@ class Runtime:
         return NamedSharding(self.mesh, spec)
 
     @property
+    def identity(self) -> dict:
+        """The deployment-identity triple every executable-cache key leads
+        with, as strings — the /metrics endpoint exports these as the
+        ``samp_build_info`` labels."""
+        from repro.distributed.sharding import mesh_fingerprint
+        fp = self._plan_key[1]
+        return {"backend": self.backend.name,
+                "plan": fp if isinstance(fp, str)
+                else f"structural:{fp & 0xFFFFFFFFFFFFFFFF:016x}",
+                "mesh": mesh_fingerprint(self.mesh)}
+
+    @property
     def stats(self) -> dict:
         """Counters + executable census. ``traces`` counts actual XLA traces
         (incremented inside the traced body); ``executables`` the distinct

@@ -58,6 +58,7 @@ class SlotScheduler:
         self.queue: deque = deque()
         self.active: list = [None] * slots
         self.cursor = np.zeros(slots, np.int64)
+        self.evicted = 0        # cancellations + deadline evictions
 
     def submit(self, req) -> None:
         self.queue.append(req)
@@ -78,6 +79,25 @@ class SlotScheduler:
 
     def release(self, s: int) -> None:
         self.active[s] = None
+
+    def cancel(self, req) -> Optional[str]:
+        """Abandon ``req`` wherever it is: drop it from the admission queue
+        (``"queued"``) or free its slot mid-generation (``"active"`` — the
+        slot stops consuming batch occupancy immediately; its cache rows
+        are reset on the next admit, exactly like a normal retirement).
+        Returns None when the request is not held by this scheduler."""
+        try:
+            self.queue.remove(req)
+            self.evicted += 1
+            return "queued"
+        except ValueError:
+            pass
+        for s in range(self.slots):
+            if self.active[s] is req:
+                self.release(s)
+                self.evicted += 1
+                return "active"
+        return None
 
     @property
     def busy(self) -> bool:
@@ -101,6 +121,7 @@ class MicroBatcher:
         self.min_len = min_len
         self.max_len = max_len
         self._queues: dict[int, deque] = {}
+        self.evicted = 0        # cancellations + deadline evictions
 
     def bucket(self, length: int) -> int:
         return bucket_size(length, self.min_len, self.max_len)
@@ -125,6 +146,24 @@ class MicroBatcher:
                                    for _ in range(min(self.max_batch,
                                                       len(q)))]))
         return out
+
+    def evict(self, predicate) -> list[EncoderRequest]:
+        """Remove every queued request with ``predicate(req)`` true —
+        deadline expiry and client disconnects — BEFORE it is batched, so
+        abandoned work never occupies a micro-batch row. Arrival order of
+        the survivors is preserved. Returns the evicted requests."""
+        out: list[EncoderRequest] = []
+        for blen, q in self._queues.items():
+            keep: deque = deque()
+            for req in q:
+                (out if predicate(req) else keep).append(req)
+            self._queues[blen] = keep
+        self.evicted += len(out)
+        return out
+
+    def cancel(self, req: EncoderRequest) -> bool:
+        """Drop one queued request (no-op if already flushed)."""
+        return bool(self.evict(lambda r: r is req))
 
     def __len__(self) -> int:
         return sum(len(q) for q in self._queues.values())

@@ -391,3 +391,24 @@ class SAMP:
                                       mesh=mesh, **enc_kw, **kw)
         return EncoderServeEngine(pipe.cfg, pipe.params, pipe.plan,
                                   runtime=pipe.runtime, **enc_kw, **kw)
+
+    def serve_http(self, *, host: str = "127.0.0.1", port: int = 8000,
+                   max_pending: int = 64,
+                   default_deadline_s: Optional[float] = None,
+                   batch_slots: int = 4, max_len: int = 256,
+                   log=print, **kw):
+        """Wrap :meth:`serve` in the asyncio HTTP/SSE front-end
+        (docs/http-serving.md): encoder pipelines mount ``POST /v1/encode``
+        (JSON), decode pipelines mount ``POST /v1/generate`` (SSE token
+        streaming); both get ``/metrics`` and ``/healthz``. Returns the
+        unstarted :class:`~repro.serve.frontend.HTTPFrontend` — call
+        ``run_forever()`` (blocking, SIGTERM-drains) or ``await start()``
+        inside an event loop. Engine kwargs (``backend=``, ``mesh=``,
+        ``max_wait=``, ...) pass through to :meth:`serve`."""
+        from repro.serve.frontend import HTTPFrontend
+        engine = self.serve(batch_slots=batch_slots, max_len=max_len, **kw)
+        sides = ({"decode": engine} if isinstance(engine, ServeEngine)
+                 else {"encoder": engine})
+        return HTTPFrontend(host=host, port=port, max_pending=max_pending,
+                            default_deadline_s=default_deadline_s, log=log,
+                            **sides)
