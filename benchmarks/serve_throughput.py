@@ -8,13 +8,19 @@ Streams a mixed-length request load through the token-level decode engine
 reduced), measuring per-request latency from submit to retirement, and
 emits ``BENCH_serve.json``:
 
-* ``requests_per_s`` / ``tokens_per_s`` — end-to-end engine throughput;
+* ``requests_per_s`` / ``tokens_per_s`` — end-to-end engine throughput.
+  Every section runs a warmup pass first, so first-compile latency never
+  pollutes the steady-state percentiles: compiles show up in
+  ``warmup_retraces``, and steady-state ``retraces`` should be 0;
 * ``p50/p95/p99_latency_s`` + ``latency_buckets`` — the full client-side
   latency histogram (same bucket bounds as the server's ``/metrics``
   histogram, so benchmark and dashboard numbers line up);
-* ``retraces`` / ``executables`` — the runtime's compile census, proving
-  the bucketed executable cache holds (≤ 1 trace per (plan, scheme,
-  bucket) over the whole mixed-length stream);
+* ``retraces`` / ``executables`` — the runtime's compile census AFTER
+  warmup, proving the bucketed executable cache holds (0 steady-state
+  traces over the whole mixed-length stream);
+* ``decode_sweep`` — float (dense) vs int8_per_token (paged) decode
+  caches at slots ∈ {4, 16, 64}, with ``tokens_per_s`` and
+  ``kv_cache_bytes`` per point — the paged-int8 memory win, measured;
 * ``encoder_fused`` — the same encoder load on the fused Pallas backend
   (interpret mode off-TPU), the second point of the backend matrix;
 * ``frontend`` — the HTTP front-end under an over-capacity open-loop
@@ -62,18 +68,32 @@ def _build(arch: str, policy: str, head=None, plan_file=None):
     serves. ``plan_file`` (a saved PrecisionPlan JSON) overrides the named
     policy, mirroring the launcher's ``--plan``."""
     cfg = get_config(arch).reduced()
-    params, plan = build_model(cfg, policy, head=head, plan_file=plan_file,
-                               log=lambda *_: None)
-    return cfg, params, plan
+    params, plan, precision = build_model(cfg, policy, head=head,
+                                          plan_file=plan_file,
+                                          log=lambda *_: None)
+    return cfg, params, plan, precision
 
 
 def bench_decode(n_requests: int, max_tokens: int, policy: str,
                  plan_file=None, backend: str = "reference",
-                 mesh=None) -> dict:
-    cfg, params, plan = _build("qwen2-0.5b", policy, plan_file=plan_file)
-    server = ServeEngine(cfg, params, plan, batch_slots=4, max_len=64,
-                         backend=backend, mesh=mesh)
+                 mesh=None, *, slots: int = 4, page_size=None,
+                 kv_cache=None, built=None) -> dict:
+    if built is None:
+        built = _build("qwen2-0.5b", policy, plan_file=plan_file)
+    cfg, params, plan, precision = built
+    server = ServeEngine(cfg, params, plan, batch_slots=slots, max_len=64,
+                         backend=backend, mesh=mesh, page_size=page_size,
+                         kv_cache=kv_cache, precision=precision)
     rng = np.random.default_rng(0)
+    # warmup: drive one short request end to end so the decode executable
+    # compiles OUTSIDE the timed window — first-compile latency used to
+    # land in p50/p95. The compile census stays visible as
+    # ``warmup_retraces``; steady-state ``retraces`` must be 0.
+    server.submit(Request(uid=-1, prompt=[1, 2, 3], max_tokens=2))
+    server.run()
+    server.step()   # idle tick: flushes the deferred page drain, so its
+    server.step()   # one-time compile also lands outside the timed window
+    warmup_retraces = server.stats["runtime_traces"]
     submit_t, retire_t = {}, {}
     reqs = [Request(uid=i,
                     prompt=rng.integers(1, cfg.vocab_size,
@@ -85,34 +105,86 @@ def bench_decode(n_requests: int, max_tokens: int, policy: str,
     for r in reqs:
         submit_t[r.uid] = time.perf_counter()
         server.submit(r)
+    kv_bytes = server.kv_cache_bytes
+    peak_pages = 0
     while server.sched.busy:
         for done in server.step():
             retire_t[done.uid] = time.perf_counter()
+        peak_pages = max(peak_pages, server.kv_pages_in_use)
     wall = time.perf_counter() - t0
     s = server.stats
     lat = [retire_t[u] - submit_t[u] for u in retire_t]
     return {"engine": "decode", "arch": cfg.name, "requests": n_requests,
             "backend": server.runtime.backend.describe(),
             "mesh": mesh_fingerprint(server.runtime.mesh),
+            "slots": slots,
+            "kv_cache": kv_cache or "float",
+            "page_size": page_size,
+            "kv_cache_bytes": kv_bytes,
+            "kv_pages_peak": peak_pages,
             "wall_s": wall,
             "requests_per_s": n_requests / wall,
             "tokens_per_s": s["tokens"] / wall,
             "ticks": s["ticks"],
-            "retraces": s["runtime_traces"],
+            "warmup_retraces": warmup_retraces,
+            "retraces": s["runtime_traces"] - warmup_retraces,
             "executables": s["runtime_executables"],
             **_percentiles(lat)}
 
 
+def bench_decode_sweep(slot_points, max_tokens: int, policy: str,
+                       plan_file=None, backend: str = "reference",
+                       mesh=None, *, page_size: int = 16,
+                       emit=print) -> list[dict]:
+    """Concurrency sweep: float (dense) vs int8_per_token (paged) decode
+    caches at each slot count, 2 requests per slot, so the paged-int8
+    footprint win and its throughput cost are MEASURED per point rather
+    than asserted. One model build serves every point."""
+    built = _build("qwen2-0.5b", policy, plan_file=plan_file)
+    points = []
+    for slots in slot_points:
+        for kv, ps in (("float", None), ("int8_per_token", page_size)):
+            r = bench_decode(2 * slots, max_tokens, policy,
+                             backend=backend, mesh=mesh, slots=slots,
+                             page_size=ps, kv_cache=None if ps is None
+                             else kv, built=built)
+            points.append(r)
+            emit(f"[decode_sweep] slots={slots} kv={r['kv_cache']}: "
+                 f"{r['tokens_per_s']:.1f} tok/s, "
+                 f"kv_cache_bytes={r['kv_cache_bytes']}")
+    return points
+
+
 def bench_encoder(n_requests: int, policy: str, plan_file=None,
                   backend: str = "reference", mesh=None) -> dict:
-    cfg, params, plan = _build("bert-base", policy, head=("cls", 15),
-                               plan_file=plan_file)
+    cfg, params, plan, _ = _build("bert-base", policy, head=("cls", 15),
+                                  plan_file=plan_file)
     # 50 ms batching window: requests accumulate into per-bucket
     # micro-batches instead of flushing one-by-one
     server = EncoderServeEngine(cfg, params, plan, target=get_target("cls"),
                                 max_batch=8, max_wait=0.05, max_len=64,
                                 backend=backend, mesh=mesh)
     rng = np.random.default_rng(0)
+    # warmup: compile the whole (batch-bucket, seq-bucket) grid the
+    # 4..32-token load below can land in — every power-of-two batch
+    # bucket up to max_batch, at every seq bucket — outside the timed
+    # window. Drain-time partial micro-batches then hit warm
+    # executables too, so steady-state ``retraces`` is 0 regardless of
+    # the request count; the compiles all show in ``warmup_retraces``.
+    wu = 0
+    batch_buckets = [1 << i for i in
+                     range((server.batcher.max_batch - 1).bit_length() + 1)
+                     if 1 << i <= server.batcher.max_batch]
+    for n in (5, 12, 25):                 # seq buckets 8 / 16 / 32
+        for bb in batch_buckets:
+            for _ in range(bb):
+                wu += 1
+                server.submit(EncoderRequest(
+                    uid=-wu,
+                    tokens=rng.integers(1, cfg.vocab_size, size=n).tolist()))
+            server.step(force=True)
+    s0 = server.stats                 # warmup baseline for the deltas below
+    warmup_retraces = s0["runtime_traces"]
     submit_t, retire_t = {}, {}
     t0 = time.perf_counter()
     for i in range(n_requests):
@@ -133,9 +205,11 @@ def bench_encoder(n_requests: int, policy: str, plan_file=None,
             "mesh": mesh_fingerprint(server.runtime.mesh),
             "wall_s": wall,
             "requests_per_s": n_requests / wall,
-            "micro_batches": s["batches"],
-            "mean_batch_occupancy": s["batched_rows"] / max(s["batches"], 1),
-            "retraces": s["runtime_traces"],
+            "micro_batches": s["batches"] - s0["batches"],
+            "mean_batch_occupancy": ((s["batched_rows"] - s0["batched_rows"])
+                                     / max(s["batches"] - s0["batches"], 1)),
+            "warmup_retraces": warmup_retraces,
+            "retraces": s["runtime_traces"] - warmup_retraces,
             "executables": s["runtime_executables"],
             **_percentiles(lat)}
 
@@ -152,8 +226,8 @@ def bench_frontend(n_requests: int, policy: str, plan_file=None,
 
     from repro.serve.frontend import HTTPFrontend
 
-    cfg, params, plan = _build("bert-base", policy, head=("cls", 15),
-                               plan_file=plan_file)
+    cfg, params, plan, _ = _build("bert-base", policy, head=("cls", 15),
+                                  plan_file=plan_file)
     engine = EncoderServeEngine(cfg, params, plan, target=get_target("cls"),
                                 max_batch=8, max_wait=0.05, max_len=64,
                                 backend=backend, mesh=mesh)
@@ -211,6 +285,12 @@ def main(quick: bool = False, out: str = "BENCH_serve.json",
         "frontend": bench_frontend(8 if quick else 24, policy=policy,
                                    plan_file=plan_file, backend=backend,
                                    mesh=mesh),
+        # float-vs-paged-int8 decode at increasing concurrency: the
+        # kv_cache_bytes column is the paged-int8 claim, measured
+        "decode_sweep": bench_decode_sweep(
+            (4, 16) if quick else (4, 16, 64),
+            max_tokens=4 if quick else 12, policy=policy,
+            plan_file=plan_file, backend=backend, mesh=mesh, emit=emit),
     }
     for side in ("decode", "encoder", "encoder_fused"):
         r = result[side]

@@ -37,10 +37,11 @@ from typing import Mapping, Optional, Sequence, Union
 
 from repro.core.precision import EncoderPolicy, LayerMode
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 WEIGHT_SCHEMES = ("float", "int8_per_channel", "int8_per_tensor")
 ACT_SCHEMES = ("float", "int8_per_tensor", "int8_per_token")
+KV_CACHE_SCHEMES = ("float", "int8_per_head", "int8_per_token")
 BLOCKS = ("qkv", "attn_out", "ffn_in", "ffn_out")
 FLOAT_DTYPES = ("float32", "bfloat16", "float16")
 
@@ -104,12 +105,28 @@ INT8_SPEC = QuantSpec(weight="int8_per_channel", act="int8_per_tensor")
 
 @dataclasses.dataclass(frozen=True)
 class LayerPlan:
-    """Per-block QuantSpecs for one layer."""
+    """Per-block QuantSpecs for one layer, plus the KV-cache scheme.
+
+    ``kv_cache`` (schema v2) selects how this layer's decode cache stores
+    K/V: ``float`` (the cache dtype), ``int8_per_head`` (static scales,
+    calibrated from the ``k_cache``/``v_cache`` observer sites and packed
+    as ``kc_scale``/``vc_scale`` params), or ``int8_per_token`` (dynamic
+    scales computed at cache-write time, stored in scale pages alongside
+    the int8 pages). It is a cache-layout decision, orthogonal to the
+    GEMM blocks, which is why it lives on the layer rather than inside a
+    :class:`QuantSpec`.
+    """
 
     qkv: QuantSpec = FLOAT_SPEC
     attn_out: QuantSpec = FLOAT_SPEC
     ffn_in: QuantSpec = FLOAT_SPEC
     ffn_out: QuantSpec = FLOAT_SPEC
+    kv_cache: str = "float"
+
+    def __post_init__(self):
+        if self.kv_cache not in KV_CACHE_SCHEMES:
+            raise ValueError(f"kv_cache scheme {self.kv_cache!r} not in "
+                             f"{KV_CACHE_SCHEMES}")
 
     def spec(self, block: str) -> QuantSpec:
         if block not in BLOCKS:
@@ -135,14 +152,22 @@ class LayerPlan:
         return LayerMode.FLOAT
 
     def to_dict(self) -> dict:
-        return {b: self.spec(b).to_dict() for b in BLOCKS}
+        d = {b: self.spec(b).to_dict() for b in BLOCKS}
+        if self.kv_cache != "float":
+            # omitted when float: the canonical (and fingerprinted) form of
+            # a plan with no KV quantization is byte-identical to schema v1
+            d["kv_cache"] = self.kv_cache
+        return d
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "LayerPlan":
-        extra = set(d) - set(BLOCKS)
+        extra = set(d) - set(BLOCKS) - {"kv_cache"}
         if extra:
             raise ValueError(f"unknown blocks {sorted(extra)}; have {BLOCKS}")
-        return cls(**{b: QuantSpec.from_dict(d[b]) for b in BLOCKS if b in d})
+        kw = {b: QuantSpec.from_dict(d[b]) for b in BLOCKS if b in d}
+        if "kv_cache" in d:
+            kw["kv_cache"] = d["kv_cache"]
+        return cls(**kw)
 
     @classmethod
     def for_mode(cls, mode: LayerMode, *, dynamic_acts: bool = False,
@@ -155,6 +180,10 @@ class LayerPlan:
                    attn_out=q if mode.quant_mha else FLOAT_SPEC,
                    ffn_in=q if mode.quant_ffn else FLOAT_SPEC,
                    ffn_out=q if mode.quant_ffn else FLOAT_SPEC)
+
+    def with_kv(self, kv_cache: str) -> "LayerPlan":
+        """Same GEMM blocks, different KV-cache scheme."""
+        return dataclasses.replace(self, kv_cache=kv_cache)
 
 
 FLOAT_LAYER = LayerPlan()
@@ -215,13 +244,23 @@ class PrecisionPlan:
                 start = i
         return runs
 
+    @property
+    def kv_schemes(self) -> tuple:
+        """Per-layer KV-cache schemes (what ``init_caches`` consumes)."""
+        return tuple(lp.kv_cache for lp in self.layers)
+
+    @property
+    def num_quant_kv(self) -> int:
+        return sum(lp.kv_cache != "float" for lp in self.layers)
+
     def describe(self) -> str:
         n = self.num_layers
         cals = sorted({s.calibrator for lp in self.layers for s in
                        (lp.qkv, lp.attn_out, lp.ffn_in, lp.ffn_out)
                        if s.quantized}) or ["-"]
         return (f"plan MHA {self.num_quant_mha}/{n} FFN "
-                f"{self.num_quant_ffn}/{n} [{self.float_dtype}] "
+                f"{self.num_quant_ffn}/{n} KV {self.num_quant_kv}/{n} "
+                f"[{self.float_dtype}] "
                 f"cal={','.join(cals)} #{self.fingerprint()[:12]}")
 
     # -- constructors -------------------------------------------------------
@@ -284,16 +323,27 @@ class PrecisionPlan:
 
     # -- serialization ------------------------------------------------------
     def to_dict(self) -> dict:
-        return {"schema_version": SCHEMA_VERSION,
+        # the canonical form carries the *minimal* schema version that can
+        # express the plan: plans without KV-cache quantization serialize
+        # exactly as they did under schema v1, so their fingerprints (and
+        # every executable-cache key / artifact identity derived from them)
+        # are unchanged by the v2 field
+        version = 2 if any(lp.kv_cache != "float"
+                           for lp in self.layers) else 1
+        return {"schema_version": version,
                 "float_dtype": self.float_dtype,
                 "layers": [lp.to_dict() for lp in self.layers]}
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "PrecisionPlan":
         version = d.get("schema_version")
-        if version != SCHEMA_VERSION:
-            raise ValueError(f"plan schema_version {version!r} != "
-                             f"{SCHEMA_VERSION}")
+        if version not in (1, SCHEMA_VERSION):
+            raise ValueError(f"plan schema_version {version!r} not in "
+                             f"(1, {SCHEMA_VERSION})")
+        if version == 1 and any(isinstance(lp, Mapping) and "kv_cache" in lp
+                                for lp in d.get("layers") or ()):
+            raise ValueError("'kv_cache' is a schema v2 field; this plan "
+                             "declares schema_version 1")
         extra = set(d) - {"schema_version", "float_dtype", "layers"}
         if extra:
             # reject rather than drop: a typoed key ("float_dtypes") would

@@ -250,6 +250,18 @@ class Rules:
             if leaf.ndim <= 2 or path.endswith("k_pos") or \
                     path.endswith("pos"):
                 return P(*(None,) * leaf.ndim)
+            if "pages_" in path:
+                # paged pool leaves (steps, NP, ps, ...): page ids are
+                # global — the pool axis never shards (a slot's table may
+                # reference any page), and the batch axis isn't there at
+                # all. Only the kv-head axis may take 'model'.
+                if (path.endswith("pages_k") or path.endswith("pages_v")
+                        or path.endswith("pages_ks")
+                        or path.endswith("pages_vs")) \
+                        and _div(shape[3], self.msize):
+                    return P(*(None, None, None, self.axes.model)
+                             + (None,) * (leaf.ndim - 4))
+                return P(*(None,) * leaf.ndim)
             b = dp if shape[1] % bsz == 0 else None
             if path.endswith("/k") or path.endswith("/v"):
                 # (steps, B, W, Hkv, hd)

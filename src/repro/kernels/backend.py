@@ -121,6 +121,14 @@ class ComputeBackend:
         to use the reference gather."""
         return None
 
+    def decode_attention(self, q, kv_cache, pages, *, positions, active,
+                         scale, softcap=None, static_scales=None):
+        """Single-token decode attention over a paged KV cache. ``q`` is
+        (B, 1, Hq, hd); ``kv_cache`` the paged cache dict (``pages_k``/...);
+        ``pages`` the (B, pages_per_slot) table. Return (B, 1, Hq, hd), or
+        None to use the reference gather-dequant + attention_core path."""
+        return None
+
     # -- mesh binding --------------------------------------------------------
     def with_mesh(self, mesh) -> "ComputeBackend":
         """Bind this backend to a serving mesh topology. The reference
@@ -274,6 +282,45 @@ class FusedBackend(ComputeBackend):
             from repro.models.layers import layer_norm
             x = layer_norm(x, p["emb_norm"])
         return x
+
+
+    # -- paged decode attention ----------------------------------------------
+    def decode_attention(self, q, kv_cache, pages, *, positions, active,
+                         scale, softcap=None, static_scales=None):
+        # The kernel's win is skipping the float-cache materialization, so
+        # it claims int8 pages only; float paged caches (and MLA's latent
+        # pages) keep the XLA gather path. Meshed serving declines too: the
+        # grid indexes the full KV-head axis, which GSPMD would split.
+        k, v = kv_cache.get("pages_k"), kv_cache.get("pages_v")
+        if (not self._enabled or self.model_shards > 1 or k is None
+                or v is None or k.dtype != jnp.int8):
+            return None
+        per_token = "pages_ks" in kv_cache
+        if per_token:
+            ks, vs = kv_cache["pages_ks"], kv_cache["pages_vs"]
+        else:
+            sc = static_scales or {}
+            if "k" not in sc or "v" not in sc:
+                return None
+            ks = sc["k"].astype(jnp.float32).reshape(-1)
+            vs = sc["v"].astype(jnp.float32).reshape(-1)
+        B, S, Hq, hd = q.shape
+        Hkv = k.shape[2]
+        if S != 1 or Hq % Hkv != 0:
+            return None
+        pos = jnp.asarray(positions, jnp.int32)
+        pos = jnp.broadcast_to(pos.reshape(-1)[0], (B,)) \
+            if pos.ndim == 1 else pos[:, 0]
+        lengths = pos + 1                    # incl. the token written above
+        if active is not None:
+            lengths = jnp.where(active, lengths, 0)
+        from repro.kernels import ops
+        out = ops.decode_attention(
+            q[:, 0].reshape(B, Hkv, Hq // Hkv, hd), k, v, pages, lengths,
+            k_scale=ks, v_scale=vs, per_head=not per_token,
+            scale=float(scale),
+            softcap=float(softcap) if softcap is not None else None)
+        return out.reshape(B, 1, Hq, hd)
 
 
 class AutoBackend(FusedBackend):

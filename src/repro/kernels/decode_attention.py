@@ -1,0 +1,173 @@
+"""Paged decode attention with fused int8-KV dequantization.
+
+Single-token decode attention over a **paged** KV cache: keys/values live in
+a shared pool of fixed-size pages ``(num_pages, page_size, Hkv, hd)`` and
+each slot owns an ordered list of page ids (its *page table* row, ``-1`` for
+unallocated entries).  The kernel walks a slot's page table with the page
+axis as the innermost grid dimension, using **scalar prefetch** so the page
+id for grid step ``j`` indexes the pool *in the BlockSpec index map* — the
+DMA engine fetches exactly the pages a slot owns, never the whole pool.
+
+K/V pages are int8.  Dequantization is fused into the two matmul epilogues
+rather than materializing a float cache:
+
+* QK^T epilogue — raw scores ``q @ k_i8^T`` are scaled by the key scale
+  (a per-token ``(page_size,)`` row gathered from the scale pages, or a
+  per-head scalar from the calibrated vector).
+* PV epilogue — softmax probabilities are scaled by the value scale before
+  the ``p @ v_i8`` dot, which is algebraically ``p @ (v_i8 * s)``.
+
+Softmax is the standard online (flash) recurrence across pages with
+``(g, 1)`` running max/denominator scratch, where ``g = Hq // Hkv`` is the
+GQA group: queries arrive as ``(B, Hkv, g, hd)`` so every grid step's QK^T
+is a ``(g, page_size)`` tile against one head's page.
+
+Masking is positional: token ``t = j * page_size + lane`` of slot ``b`` is
+visible iff ``t < lengths[b]``.  Pages the slot does not own (table entry
+``-1``) are skipped entirely via ``pl.when``; freed pages therefore never
+leak stale tokens into another slot even before they are rewritten.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import CompilerParams
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                   o_ref, m_ref, l_ref, acc_ref, *,
+                   page_size: int, pages_per_slot: int, scale: float,
+                   softcap: Optional[float], per_head: bool):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    page = pt_ref[b * pages_per_slot + j]
+    live = jnp.logical_and(page >= 0, length > j * page_size)
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (g, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)               # (ps, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        # QK^T epilogue: dequantize raw int8 scores by the key scale.
+        if per_head:
+            s = s * ks_ref[0]
+        else:
+            s = s * ks_ref[0, :, 0][None, :]
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        tok = j * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, page_size), 1)
+        s = jnp.where(tok < length, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                               # (g, ps)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+
+        # PV epilogue: fold the value scale into p, then one int8-V dot.
+        if per_head:
+            p = p * vs_ref[0]
+        else:
+            p = p * vs_ref[0, :, 0][None, :]
+        v = v_ref[0, :, 0].astype(jnp.float32)               # (ps, hd)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == pages_per_slot - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_pages, v_pages, page_table, lengths, *,
+                     k_scale, v_scale, per_head: bool,
+                     scale: Optional[float] = None,
+                     softcap: Optional[float] = None,
+                     interpret: bool = False):
+    """Paged int8-KV decode attention.
+
+    Args:
+      q: ``(B, Hkv, g, hd)`` float queries, GQA groups pre-folded
+        (query head ``h*g + i`` shares KV head ``h``).
+      k_pages / v_pages: ``(num_pages, page_size, Hkv, hd)`` int8 pool.
+      page_table: ``(B, pages_per_slot)`` int32, ``-1`` = unallocated.
+      lengths: ``(B,)`` int32 — valid tokens per slot **including** the
+        token written this step; 0 disables a slot (output row is zeros).
+      k_scale / v_scale: per-token ``(num_pages, page_size, Hkv)`` float32
+        scale pages when ``per_head=False``; calibrated ``(Hkv,)`` float32
+        vectors when ``per_head=True``.
+      scale: query scaling, default ``hd**-0.5``.
+      softcap: optional tanh soft-capping of logits.
+
+    Returns ``(B, Hkv, g, hd)`` in ``q.dtype``.
+    """
+    B, Hkv, g, hd = q.shape
+    num_pages, page_size = k_pages.shape[0], k_pages.shape[1]
+    pps = page_table.shape[1]
+    if scale is None:
+        scale = float(hd) ** -0.5
+
+    pt_flat = page_table.reshape(-1).astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+
+    # Scalar-prefetch args (pt, ln) are appended to every index map; a -1
+    # table entry is clamped to page 0 for the DMA and skipped in-kernel.
+    def page_map(bi, h, j, pt, ln):
+        return (jnp.maximum(pt[bi * pps + j], 0), 0, h, 0)
+
+    if per_head:
+        scale_spec = pl.BlockSpec((1,), lambda bi, h, j, pt, ln: (h,))
+    else:
+        scale_spec = pl.BlockSpec(
+            (1, page_size, 1),
+            lambda bi, h, j, pt, ln: (jnp.maximum(pt[bi * pps + j], 0), 0, h))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, pps),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda bi, h, j, pt, ln: (bi, h, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, hd), page_map),
+            pl.BlockSpec((1, page_size, 1, hd), page_map),
+            scale_spec,
+            scale_spec,
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda bi, h, j, pt, ln: (bi, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _decode_kernel, page_size=page_size, pages_per_slot=pps,
+        scale=scale, softcap=softcap, per_head=per_head)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, hd), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(pt_flat, lengths, q, k_pages, v_pages, k_scale, v_scale)

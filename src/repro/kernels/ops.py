@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import addnorm_quant as _anq
+from repro.kernels import decode_attention as _da
 from repro.kernels import dynamic_quant as _dq
 from repro.kernels import flash_attention as _fa
 from repro.kernels import fused_embed as _fe
@@ -86,3 +87,20 @@ def flash_attention(q, k, v, *, causal: bool = False,
     return _fa.flash_attention(q, k, v, causal=causal, window=window,
                                softcap=softcap, scale=scale, bq=bq, bk=bk,
                                interpret=KERNEL_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("per_head", "scale", "softcap"))
+def decode_attention(q, k_pages, v_pages, page_table, lengths, *,
+                     k_scale, v_scale, per_head: bool,
+                     scale: Optional[float] = None,
+                     softcap: Optional[float] = None):
+    """Paged int8-KV decode attention (single query token per slot).
+
+    ``page_table``/``lengths`` are operands — slots churn every step and
+    must not retrace; the kv scheme (``per_head``) and page geometry are
+    static and baked into the executable key by the serving runtime."""
+    return _da.decode_attention(q, k_pages, v_pages, page_table, lengths,
+                                k_scale=k_scale, v_scale=v_scale,
+                                per_head=per_head, scale=scale,
+                                softcap=softcap,
+                                interpret=KERNEL_INTERPRET)

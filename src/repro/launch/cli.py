@@ -45,6 +45,18 @@ def add_serving_flags(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
                     help="decode batch slots / encoder micro-batch size")
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="tokens per KV page; switches the decode caches "
+                         "to the paged layout (pages allocated on demand, "
+                         "freed on completion/cancel). Required for "
+                         "--kv-dtype int8_*")
+    ap.add_argument("--kv-dtype", default=None,
+                    choices=("float", "int8_per_head", "int8_per_token"),
+                    help="KV-cache page scheme for every full-attention "
+                         "layer; int8_per_head needs a plan calibrated "
+                         "with KV stats, int8_per_token quantizes "
+                         "dynamically at decode time. Default: the plan's "
+                         "per-layer kv_cache schemes")
     return ap
 
 

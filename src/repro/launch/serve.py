@@ -99,7 +99,9 @@ def build_model(cfg, policy_name: str = "float", *, seed: int = 0,
     benchmarks/serve_throughput.py — one build flow for everything that
     serves a synthetic-calibrated model). Precision comes from, in
     precedence order: a saved plan file, a search strategy, or the named
-    mode policy."""
+    mode policy. Returns ``(params, execution_plan, precision)`` — the
+    PrecisionPlan rides along so engines can read per-layer KV-cache
+    schemes (``precision.kv_schemes``)."""
     eng = SAMPEngine(cfg, float_dtype="float32")
     params = T.init_params(jax.random.PRNGKey(seed), cfg,
                            eng.float_policy, head=head)
@@ -110,28 +112,32 @@ def build_model(cfg, policy_name: str = "float", *, seed: int = 0,
     elif strategy is None:
         precision = plan_from_policy(make_policy(cfg, policy_name))
     if precision is not None and not (precision.num_quant_ffn
-                                      or precision.num_quant_mha):
-        return params, eng.float_plan
+                                      or precision.num_quant_mha
+                                      or precision.num_quant_kv):
+        return params, eng.float_plan, precision
     batches = synthetic_calibration_batches(cfg, seed=seed)
     stats = eng.calibrate(params, batches, precision=precision)
     if strategy is not None and precision is None:
         precision = search_plan(cfg, eng, params, stats, strategy,
                                 seed=seed, max_latency=max_latency, log=log)
-        if not (precision.num_quant_ffn or precision.num_quant_mha):
-            return params, eng.float_plan
+        if not (precision.num_quant_ffn or precision.num_quant_mha
+                or precision.num_quant_kv):
+            return params, eng.float_plan, precision
     params, plan = eng.apply(params, stats, precision)
     log(f"[serve] applied SAMP plan: {precision.describe()}")
-    return params, plan
+    return params, plan, precision
 
 
 def serve_decode(cfg, args) -> None:
-    params, plan = build_model(cfg, args.policy, seed=args.seed,
-                               plan_file=args.plan, strategy=args.strategy,
-                               max_latency=args.max_latency)
+    params, plan, precision = build_model(
+        cfg, args.policy, seed=args.seed, plan_file=args.plan,
+        strategy=args.strategy, max_latency=args.max_latency)
     mesh = make_serving_mesh(args.mesh)
     server = ServeEngine(cfg, params, plan, batch_slots=args.slots,
                          max_len=args.max_len, seed=args.seed,
-                         backend=args.backend, mesh=mesh)
+                         backend=args.backend, mesh=mesh,
+                         page_size=args.page_size, kv_cache=args.kv_dtype,
+                         precision=precision)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         plen = int(rng.integers(2, 9))
@@ -159,10 +165,11 @@ def serve_encoder(cfg, args) -> None:
                      seq_len=args.max_len)
     spec = get_target(TARGET_FOR_TASK_KIND[task.kind])
     head_kind = "ner" if spec.token_level else "cls"
-    params, plan = build_model(cfg, args.policy, seed=args.seed,
-                               head=(head_kind, max(task.n_classes, 1)),
-                               plan_file=args.plan, strategy=args.strategy,
-                               max_latency=args.max_latency)
+    params, plan, _ = build_model(cfg, args.policy, seed=args.seed,
+                                  head=(head_kind, max(task.n_classes, 1)),
+                                  plan_file=args.plan,
+                                  strategy=args.strategy,
+                                  max_latency=args.max_latency)
     mesh = make_serving_mesh(args.mesh)
     server = EncoderServeEngine(cfg, params, plan, target=spec,
                                 max_batch=args.slots, max_len=args.max_len,

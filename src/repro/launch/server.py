@@ -51,20 +51,18 @@ def build_frontend(args, *, log=print) -> HTTPFrontend:
     mesh = make_serving_mesh(args.mesh)
     encoder = decode = None
     if task_name == "lm":
-        params, plan = build_model(cfg, args.policy, seed=args.seed,
-                                   plan_file=args.plan,
-                                   strategy=args.strategy,
-                                   max_latency=args.max_latency, log=log)
+        params, plan, precision = build_model(
+            cfg, args.policy, seed=args.seed, plan_file=args.plan,
+            strategy=args.strategy, max_latency=args.max_latency, log=log)
     else:
         task = make_task(task_name, vocab_size=cfg.vocab_size,
                          seq_len=args.max_len)
         spec = get_target(TARGET_FOR_TASK_KIND[task.kind])
         head_kind = "ner" if spec.token_level else "cls"
-        params, plan = build_model(cfg, args.policy, seed=args.seed,
-                                   head=(head_kind, max(task.n_classes, 1)),
-                                   plan_file=args.plan,
-                                   strategy=args.strategy,
-                                   max_latency=args.max_latency, log=log)
+        params, plan, precision = build_model(
+            cfg, args.policy, seed=args.seed,
+            head=(head_kind, max(task.n_classes, 1)), plan_file=args.plan,
+            strategy=args.strategy, max_latency=args.max_latency, log=log)
         encoder = EncoderServeEngine(cfg, params, plan, target=spec,
                                      max_batch=args.slots,
                                      max_wait=args.max_wait,
@@ -74,7 +72,9 @@ def build_frontend(args, *, log=print) -> HTTPFrontend:
         decode = ServeEngine(cfg, params, plan, batch_slots=args.slots,
                              max_len=args.max_len, seed=args.seed,
                              cache_dtype=jnp.float32,
-                             backend=args.backend, mesh=mesh)
+                             backend=args.backend, mesh=mesh,
+                             page_size=args.page_size,
+                             kv_cache=args.kv_dtype, precision=precision)
     return HTTPFrontend(encoder=encoder, decode=decode, host=args.host,
                         port=args.port, max_pending=args.max_pending,
                         default_deadline_s=args.deadline_s, log=log)

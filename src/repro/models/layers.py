@@ -54,6 +54,13 @@ def observe_values(obs: Optional[dict], site: str, x) -> None:
         obs.setdefault("__raw__", {})[site] = x
 
 
+def observe_per_head(obs: Optional[dict], site: str, x) -> None:
+    """Record per-head max|x| over (B, S, H, d) — the KV-cache calibration
+    sites (``k_cache``/``v_cache``), whose static scales are per-head."""
+    if obs is not None and not isinstance(x, QuantActivation):
+        obs[site] = jnp.max(jnp.abs(x), axis=(0, 1, 3)).astype(jnp.float32)
+
+
 # ---------------------------------------------------------------------------
 # quant-aware GEMMs
 # ---------------------------------------------------------------------------
@@ -454,6 +461,140 @@ def _cache_write(kv_cache: dict, new: dict, positions: jax.Array,
     return out
 
 
+# ---------------------------------------------------------------------------
+# paged KV cache (decode serving)
+# ---------------------------------------------------------------------------
+#
+# Layout: the per-slot (B, W, ...) ring of `_cache_write` becomes a pooled
+# set of fixed-size token pages shared by every slot:
+#
+#   pages_k / pages_v : (NP, ps, Hkv, hd)   int8 or cache dtype
+#   pages_ks/pages_vs : (NP, ps, Hkv) f32   per-token scales (dynamic only)
+#   pages_pos         : (NP, ps) int32      absolute position, -1 = invalid
+#   pos               : (B,) int32          per-slot next position
+#
+# plus a page-table *operand* (B, pages_per_slot) int32 owned by the
+# serving scheduler's PagePool (-1 = unallocated). Token t of slot b lives
+# at flat index pages[b, t // ps] * ps + t % ps. Slots stop paying
+# max-length memory: pages are allocated as generation grows and returned
+# to the pool on completion/cancel. MLA caches page the latent instead
+# (pages_ckv / pages_krope).
+
+
+def _page_flat_index(pages: jax.Array, positions: jax.Array,
+                     active: Optional[jax.Array],
+                     page_size: int) -> jax.Array:
+    """(B, S) flat token indices into a (NP*ps, ...) page pool; -1 where the
+    write must be dropped (inactive row, unallocated page, out of range)."""
+    pidx = positions // page_size                       # (B, S)
+    within = positions % page_size
+    pps = pages.shape[1]
+    safe = jnp.clip(pidx, 0, pps - 1)
+    pt = jnp.take_along_axis(pages.astype(jnp.int32), safe, axis=1)
+    ok = (pt >= 0) & (pidx >= 0) & (pidx < pps)
+    if active is not None:
+        ok = ok & active[:, None]
+    return jnp.where(ok, pt * page_size + within, -1)
+
+
+def _paged_cache_write(kv_cache: dict, new: dict, positions: jax.Array,
+                       active: Optional[jax.Array], pages: jax.Array,
+                       static_scales: Optional[dict] = None) -> dict:
+    """Scatter new K/V(-like) tokens into their slots' pages.
+
+    ``new`` maps short key ("k"/"v"/"ckv"/...) -> (B, S, ...) tensor; the
+    cache holds it under ``pages_<key>``. Per-key quantization is
+    structural: an int8 page array with a ``pages_<key>s`` sibling gets
+    per-token dynamic scales computed here; int8 without the sibling uses
+    the calibrated per-head scale from ``static_scales``; float pages store
+    the cast value. Out-of-range / inactive / unallocated writes are
+    dropped (`mode='drop'` keeps -1 indices from wrapping)."""
+    ps = kv_cache["pages_pos"].shape[1]
+    npages = kv_cache["pages_pos"].shape[0]
+    B = kv_cache["pos"].shape[0]
+    if positions.ndim == 1:                              # uniform prefill
+        pos2 = jnp.broadcast_to(positions[None, :].astype(jnp.int32),
+                                (B, positions.shape[0]))
+    else:
+        pos2 = positions.astype(jnp.int32)               # (B, S) per-row
+    S = pos2.shape[1]
+    flat = _page_flat_index(pages, pos2, active, ps).reshape(-1)  # (B*S,)
+    # ``mode='drop'`` only drops indices >= size; a -1 would WRAP to the
+    # pool's last row (NumPy negative indexing) and corrupt whichever slot
+    # owns it — map the sentinel to a genuinely out-of-bounds index.
+    flat = jnp.where(flat < 0, npages * ps, flat)
+    out = dict(kv_cache)
+    for key, val in new.items():
+        leaf = kv_cache["pages_" + key]
+        skey = "pages_" + key + "s"
+        if leaf.dtype == jnp.int8:
+            if skey in kv_cache:                         # per-token dynamic
+                amax = jnp.max(jnp.abs(val.astype(jnp.float32)), axis=-1)
+                scl = compute_scale_symmetric(amax)      # (B, S, H)
+                rows = quantize(val, scl[..., None])
+                spages = kv_cache[skey]
+                out[skey] = spages.reshape((npages * ps,) + spages.shape[2:]) \
+                    .at[flat].set(scl.reshape((-1,) + spages.shape[2:]),
+                                  mode="drop").reshape(spages.shape)
+            else:                                        # per-head static
+                s = (static_scales or {}).get(key)
+                if s is None:
+                    raise ValueError(
+                        f"int8_per_head KV cache for {key!r} needs a "
+                        f"calibrated static scale ({key}c_scale); "
+                        f"re-calibrate with kv_cache='int8_per_head' or "
+                        f"serve with kv_cache='int8_per_token'")
+                rows = quantize(val, s.reshape((1, 1, -1, 1)))
+        else:
+            rows = val.astype(leaf.dtype)
+        out["pages_" + key] = leaf.reshape((npages * ps,) + leaf.shape[2:]) \
+            .at[flat].set(rows.reshape((-1,) + leaf.shape[2:]),
+                          mode="drop").reshape(leaf.shape)
+    out["pages_pos"] = kv_cache["pages_pos"].reshape(-1) \
+        .at[flat].set(pos2.reshape(-1), mode="drop") \
+        .reshape(kv_cache["pages_pos"].shape)
+    if positions.ndim == 1:
+        out["pos"] = kv_cache["pos"] + S
+    else:
+        act = active if active is not None else jnp.ones((B,), bool)
+        out["pos"] = kv_cache["pos"] + act.astype(kv_cache["pos"].dtype)
+    return out
+
+
+def _paged_cache_read(kv_cache: dict, pages: jax.Array, keys, dtype,
+                      static_scales: Optional[dict] = None):
+    """Gather + dequantize a slot-major view of the paged cache: each
+    requested key comes back (B, pages_per_slot * ps, ...), with k_pos
+    (B, pages_per_slot * ps) carrying -1 for unallocated pages / unwritten
+    entries (the reference XLA decode path; the fused backend's Pallas
+    kernel consumes the pages + scales directly instead)."""
+    pt = pages.astype(jnp.int32)
+    safe = jnp.maximum(pt, 0)                            # gatherable
+    B, pps = pt.shape
+    ps = kv_cache["pages_pos"].shape[1]
+    kpos = jnp.take(kv_cache["pages_pos"], safe, axis=0)  # (B, pps, ps)
+    kpos = jnp.where(pt[:, :, None] >= 0, kpos, -1)
+    outs = []
+    for key in keys:
+        leaf = kv_cache["pages_" + key]
+        g = jnp.take(leaf, safe, axis=0)                 # (B, pps, ps, ...)
+        if leaf.dtype == jnp.int8:
+            skey = "pages_" + key + "s"
+            if skey in kv_cache:
+                scl = jnp.take(kv_cache[skey], safe, axis=0)
+                g = g.astype(jnp.float32) * scl[..., None]
+            else:
+                s = (static_scales or {})[key]
+                g = g.astype(jnp.float32) * s.reshape((1, 1, 1, -1, 1))
+        g = g.astype(dtype)
+        outs.append(g.reshape((B, pps * ps) + leaf.shape[2:]))
+    return outs, kpos.reshape(B, pps * ps)
+
+
+def is_paged(kv_cache: Optional[dict]) -> bool:
+    return kv_cache is not None and "pages_pos" in kv_cache
+
+
 def select_state(new: dict, old: dict, active: Optional[jax.Array]):
     """Recurrent-state update gate: rows with active=False keep their old
     state (continuous batching over SSM/hybrid archs)."""
@@ -473,6 +614,7 @@ def attention_block(x: jax.Array, p: dict, cfg, *, positions: jax.Array,
                     active: Optional[jax.Array] = None,
                     constrain=lambda t, _tag: t,
                     chunk: Optional[int] = None,
+                    pages: Optional[jax.Array] = None,
                     backend=None):
     """Full GQA attention block. Returns (out, new_kv_cache|None).
 
@@ -482,6 +624,15 @@ def attention_block(x: jax.Array, p: dict, cfg, *, positions: jax.Array,
     at slot ``pos % W``; ``k_pos`` carries each slot's absolute position so
     :func:`band_mask` handles validity and window eviction. ``positions``
     may be per-row (B, 1) for continuous-batching decode.
+
+    Paged caches (``pages_k``/... keys, see the paged-KV section above)
+    take ``pages`` — the scheduler-owned (B, pages_per_slot) page table —
+    and store K/V as int8 when the plan's ``kv_cache`` scheme asks for it.
+    The fused backend may claim the whole decode-attention step
+    (``backend.decode_attention``): a Pallas kernel that gathers pages by
+    scalar-prefetched table indices and fuses dequant into the QK^T / PV
+    epilogues; the reference path below gathers + dequantizes in XLA and
+    reuses :func:`attention_core`, so numerics are backend-independent.
     """
     B, S, _ = x.shape
     observe(obs, "attn_in", x)
@@ -500,9 +651,31 @@ def attention_block(x: jax.Array, p: dict, cfg, *, positions: jax.Array,
     if cfg.position == "rope":
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
+    observe_per_head(obs, "k_cache", k)
+    observe_per_head(obs, "v_cache", v)
     new_cache = None
     k_pos = positions
-    if kv_cache is not None:
+    o = None
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    static_sc = {key: p[f"{key}c_scale"] for key in ("k", "v")
+                 if f"{key}c_scale" in p}
+    if is_paged(kv_cache):
+        if pages is None:
+            raise ValueError("paged kv_cache requires the page-table "
+                             "operand (pages=)")
+        new_cache = _paged_cache_write(kv_cache, {"k": k, "v": v},
+                                       positions, active, pages, static_sc)
+        if S == 1:
+            if backend is not None and not quant.enabled:
+                o = backend.decode_attention(
+                    q, new_cache, pages, positions=positions, active=active,
+                    scale=scale, softcap=cfg.attn_softcap,
+                    static_scales=static_sc)
+            if o is None:
+                (k, v), k_pos = _paged_cache_read(
+                    new_cache, pages, ("k", "v"), x.dtype, static_sc)
+        # prefill (S > 1): attend over in-sequence K/V, as in the dense path
+    elif kv_cache is not None:
         new_cache = _cache_write(kv_cache, {"k": k, "v": v}, positions,
                                  active)
         if S == 1:
@@ -512,12 +685,13 @@ def attention_block(x: jax.Array, p: dict, cfg, *, positions: jax.Array,
             k_pos = new_cache["k_pos"]
         # prefill (S > 1): attend over in-sequence K/V (the cache may be a
         # ring buffer narrower than S — it only feeds later decode steps)
-    scale = 1.0 / math.sqrt(cfg.head_dim)
-    sc = {s: p[f"{s}_scale"] for s in ("q", "k", "p", "v")
-          if f"{s}_scale" in p} or None
-    o = attention_core(q, k, v, positions, k_pos, spec, scale=scale,
-                       attn_softcap=cfg.attn_softcap, quant=quant,
-                       scales=sc, obs=obs, constrain=constrain, chunk=chunk)
+    if o is None:
+        sc = {s: p[f"{s}_scale"] for s in ("q", "k", "p", "v")
+              if f"{s}_scale" in p} or None
+        o = attention_core(q, k, v, positions, k_pos, spec, scale=scale,
+                           attn_softcap=cfg.attn_softcap, quant=quant,
+                           scales=sc, obs=obs, constrain=constrain,
+                           chunk=chunk)
     o = o.reshape(B, S, cfg.q_dim)
     observe(obs, "attn_out", o)
     observe_values(obs, "attn_out", o)
@@ -560,14 +734,17 @@ def mla_block(x: jax.Array, p: dict, cfg, *, positions: jax.Array,
               obs: Optional[dict] = None,
               kv_cache: Optional[dict] = None,
               active: Optional[jax.Array] = None,
-              chunk: Optional[int] = None):
+              chunk: Optional[int] = None,
+              pages: Optional[jax.Array] = None):
     """Deepseek-v2 MLA. Prefill materializes per-head K/V from the latent;
     decode uses the *absorbed* formulation: attention runs directly in the
     (kv_lora + rope) latent space against a 576-wide cache, and ``wkv_b`` is
     folded into the query/output projections — the cache stays
     ``kv_lora_rank + qk_rope_dim`` per token (the paper-era MLA memory win).
     Returns (out, new_cache|None); cache = {"ckv": (B,S,r), "krope": (B,S,rd),
-    "pos": ()}.
+    "pos": ()}. Paged caches page the latent (``pages_ckv``/``pages_krope``,
+    float — the latent is already the compressed representation) through the
+    same page table as the standard attention layers.
     """
     m = cfg.mla
     B, S, _ = x.shape
@@ -601,14 +778,27 @@ def mla_block(x: jax.Array, p: dict, cfg, *, positions: jax.Array,
     wv = wkv_b_f.reshape(m.kv_lora_rank, H, nope + vd)[..., nope:]  # (r,H,vd)
 
     new_cache = None
-    if kv_cache is not None:
+    paged = is_paged(kv_cache)
+    if paged:
+        if pages is None:
+            raise ValueError("paged kv_cache requires the page-table "
+                             "operand (pages=)")
+        new_cache = _paged_cache_write(kv_cache,
+                                       {"ckv": ckv, "krope": k_rope},
+                                       positions, active, pages)
+    elif kv_cache is not None:
         new_cache = _cache_write(kv_cache, {"ckv": ckv, "krope": k_rope},
                                  positions, active)
     if new_cache is not None and S == 1:
-        ckv_all = new_cache["ckv"].astype(x.dtype)
-        krope_all = new_cache["krope"].astype(x.dtype)
+        if paged:
+            (ckv_all, krope_all), cache_kpos = _paged_cache_read(
+                new_cache, pages, ("ckv", "krope"), x.dtype)
+        else:
+            ckv_all = new_cache["ckv"].astype(x.dtype)
+            krope_all = new_cache["krope"].astype(x.dtype)
+            cache_kpos = new_cache["k_pos"]
         q_pos = positions if positions.ndim == 2 else positions[None]
-        mask = band_mask(q_pos, new_cache["k_pos"], spec)       # (B|1, S, T)
+        mask = band_mask(q_pos, cache_kpos, spec)               # (B|1, S, T)
         # Absorbed decode: q_nope' = q_nope @ wk  → latent space (r).
         q_abs = jnp.einsum("bshn,rhn->bshr", q_nope, wk)
         s = (jnp.einsum("bshr,btr->bhst", q_abs, ckv_all)

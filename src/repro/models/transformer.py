@@ -234,7 +234,7 @@ def repack(params: dict, old_plan: tuple[Group, ...],
 def layer_forward(x, lp, cfg: ArchConfig, kind: BlockKind, mode: LayerMode,
                   scheme: QuantScheme, *, positions, obs, cache, chunk,
                   constrain: Constrain, active=None, quant_bmm=None,
-                  backend=None):
+                  pages=None, backend=None):
     quant = L.AttnQuant(enabled=(mode.quant_mha if quant_bmm is None
                                  else quant_bmm),
                         softmax_mode=scheme.softmax_mode)
@@ -249,12 +249,13 @@ def layer_forward(x, lp, cfg: ArchConfig, kind: BlockKind, mode: LayerMode,
             a, new_cache = L.mla_block(
                 h, lp["attn"], cfg, positions=positions, spec=spec,
                 quant=quant, obs=obs, kv_cache=cache, active=active,
-                chunk=chunk)
+                chunk=chunk, pages=pages)
         else:
             a, new_cache = L.attention_block(
                 h, lp["attn"], cfg, positions=positions, spec=spec,
                 quant=quant, obs=obs, kv_cache=cache, active=active,
-                constrain=constrain, chunk=chunk, backend=backend)
+                constrain=constrain, chunk=chunk, pages=pages,
+                backend=backend)
         if kind.moe:
             x = constrain(x + a, "residual")
             h2 = L.norm(x, lp["norm2"], cfg.norm_kind)
@@ -288,7 +289,7 @@ def layer_forward(x, lp, cfg: ArchConfig, kind: BlockKind, mode: LayerMode,
 def run_groups(x, params, cfg: ArchConfig, plan: tuple[Group, ...],
                scheme: QuantScheme, *, positions, obs=None, caches=None,
                chunk=DEFAULT_CHUNK, constrain: Constrain = _IDENTITY,
-               remat: bool = False, active=None, backend=None):
+               remat: bool = False, active=None, pages=None, backend=None):
     """Execute all layer groups. Returns (x, new_caches|None).
 
     ``remat``: rematerialize each layer in the backward pass (activation
@@ -311,7 +312,8 @@ def run_groups(x, params, cfg: ArchConfig, plan: tuple[Group, ...],
                 return layer_forward(
                     xc, lp, cfg, kind, mode, scheme, positions=positions,
                     obs=lobs, cache=lcache, chunk=chunk, constrain=constrain,
-                    active=active, quant_bmm=g.quant_bmm, backend=backend)
+                    active=active, quant_bmm=g.quant_bmm, pages=pages,
+                    backend=backend)
             return (jax.checkpoint(lf) if remat and lobs is None else lf)
 
         if unrolled:
@@ -408,7 +410,7 @@ def forward(params, batch: dict, cfg: ArchConfig, plan: tuple[Group, ...],
             chunk: Optional[int] = DEFAULT_CHUNK,
             constrain: Constrain = _IDENTITY, remat: bool = False,
             compute_dtype=jnp.bfloat16, return_hidden: bool = False,
-            backend=None):
+            pages=None, backend=None):
     """Full-sequence (train/prefill) or incremental (decode) forward.
 
     decode: pass ``caches`` + ``pos``: an int scalar (synchronized batch) or
@@ -436,7 +438,7 @@ def forward(params, batch: dict, cfg: ArchConfig, plan: tuple[Group, ...],
     x, new_caches = run_groups(x, params, cfg, plan, scheme,
                                positions=positions, obs=obs, caches=caches,
                                chunk=chunk, constrain=constrain, remat=remat,
-                               active=active, backend=backend)
+                               active=active, pages=pages, backend=backend)
     x = L.norm(x, params["final_norm"], cfg.norm_kind)
     if return_hidden or "head" in params:
         return x, new_caches
@@ -504,9 +506,37 @@ def lm_loss(params, batch: dict, cfg: ArchConfig, plan, scheme=QuantScheme(),
 
 
 def _layer_cache(cfg: ArchConfig, kind: BlockKind, batch: int, max_len: int,
-                 dtype):
+                 dtype, *, page_size: Optional[int] = None,
+                 num_pages: int = 0, kv_scheme: str = "float"):
     if kind.body == "attn":
         W = min(cfg.sliding_window, max_len) if kind.local else max_len
+        paged = page_size is not None and not kind.local
+        if paged:
+            # pooled token pages + per-slot pos; the (B, pages_per_slot)
+            # page table is a separate operand (PagePool), not a cache leaf.
+            # Local layers keep the dense ring: it is already W-bounded.
+            ps, NP = page_size, num_pages
+            if cfg.mla is not None:
+                m = cfg.mla
+                return {"pages_ckv": jnp.zeros((NP, ps, m.kv_lora_rank),
+                                               dtype),
+                        "pages_krope": jnp.zeros((NP, ps, m.qk_rope_dim),
+                                                 dtype),
+                        "pages_pos": jnp.full((NP, ps), -1, jnp.int32),
+                        "pos": jnp.zeros((batch,), jnp.int32)}
+            kv_dtype = jnp.int8 if kv_scheme.startswith("int8") else dtype
+            d = {"pages_k": jnp.zeros(
+                     (NP, ps, cfg.num_kv_heads, cfg.head_dim), kv_dtype),
+                 "pages_v": jnp.zeros(
+                     (NP, ps, cfg.num_kv_heads, cfg.head_dim), kv_dtype),
+                 "pages_pos": jnp.full((NP, ps), -1, jnp.int32),
+                 "pos": jnp.zeros((batch,), jnp.int32)}
+            if kv_scheme == "int8_per_token":
+                d["pages_ks"] = jnp.zeros((NP, ps, cfg.num_kv_heads),
+                                          jnp.float32)
+                d["pages_vs"] = jnp.zeros((NP, ps, cfg.num_kv_heads),
+                                          jnp.float32)
+            return d
         if cfg.mla is not None:
             m = cfg.mla
             return {"ckv": jnp.zeros((batch, W, m.kv_lora_rank), dtype),
@@ -526,30 +556,86 @@ def _layer_cache(cfg: ArchConfig, kind: BlockKind, batch: int, max_len: int,
     return X.slstm_state(cfg, batch, dtype)
 
 
+def pages_per_slot(max_len: int, page_size: int) -> int:
+    return -(-max_len // page_size)
+
+
 def init_caches(cfg: ArchConfig, plan: tuple[Group, ...],
-                batch: int, max_len: int, dtype=jnp.bfloat16):
+                batch: int, max_len: int, dtype=jnp.bfloat16, *,
+                page_size: Optional[int] = None,
+                num_pages: Optional[int] = None,
+                kv_schemes: Optional[Sequence[str]] = None):
     """Decode-cache pytree mirroring the plan's group structure. Cache
-    geometry is fully determined by (cfg, plan, batch, max_len) — no
-    parameters needed."""
+    geometry is fully determined by (cfg, plan, batch, max_len) plus the
+    paged-KV knobs — no parameters needed.
+
+    ``page_size`` switches full-attention layers to the paged layout (see
+    repro.models.layers, paged-KV section); ``num_pages`` sizes the shared
+    page pool (default ``batch * pages_per_slot`` — no oversubscription);
+    ``kv_schemes`` gives each layer's KV-cache scheme from the
+    PrecisionPlan (``plan_obj.kv_schemes``), default all-float. Scan groups
+    are homogeneous by construction (group_boundaries splits on full
+    LayerPlan equality, which includes ``kv_cache``)."""
+    if page_size is not None and num_pages is None:
+        num_pages = batch * pages_per_slot(max_len, page_size)
     caches = []
     for g in plan:
+        for li in range(g.start, g.stop):
+            if kv_schemes is not None and \
+                    kv_schemes[li] != kv_schemes[g.start]:
+                raise ValueError(
+                    f"kv_cache scheme changes inside scan group "
+                    f"[{g.start}, {g.stop}) at layer {li}; rebuild the "
+                    f"execution plan from the PrecisionPlan")
+        scheme = kv_schemes[g.start] if kv_schemes is not None else "float"
         period = []
         for kind in g.kinds:
-            one = _layer_cache(cfg, kind, batch, max_len, dtype)
+            one = _layer_cache(cfg, kind, batch, max_len, dtype,
+                               page_size=page_size, num_pages=num_pages or 0,
+                               kv_scheme=scheme)
             period.append(jax.tree_util.tree_map(
                 lambda a: jnp.broadcast_to(a, (g.steps,) + a.shape), one))
         caches.append(tuple(period))
     return caches
 
 
+def cache_bytes(caches) -> int:
+    """Total KV/state cache footprint in bytes (the serving-side
+    ``samp_kv_cache_bytes`` gauge and BENCH_serve's ``kv_cache_bytes``)."""
+    return int(sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree_util.tree_leaves(caches)))
+
+
+def kv_geometry(caches) -> tuple:
+    """Structural (scheme, page_size, num_pages) summary of a cache tree —
+    part of the runtime's executable-cache key, so float/int8 and different
+    page geometries never share a compiled decode step."""
+    ps, np_ = None, None
+    has_scales, has_int8 = False, False
+    for path, leaf in jax.tree_util.tree_leaves_with_path(caches):
+        name = str(path[-1])
+        if "pages_pos" in name:
+            np_, ps = (int(s) for s in leaf.shape[-2:])
+        elif ("pages_ks" in name) or ("pages_vs" in name):
+            has_scales = True
+        elif ("pages_k" in name or "pages_v" in name) \
+                and leaf.dtype == jnp.int8:
+            has_int8 = True
+    scheme = ("int8_per_token" if has_scales
+              else "int8_per_head" if has_int8 else "float")
+    return (scheme, ps, np_)
+
+
 def decode_step(params, tokens, caches, pos, cfg: ArchConfig, plan,
                 scheme: QuantScheme = QuantScheme(), *, active=None,
                 constrain: Constrain = _IDENTITY,
-                compute_dtype=jnp.bfloat16, backend=None):
+                compute_dtype=jnp.bfloat16, pages=None, backend=None):
     """One serving step: tokens (B, 1) at absolute position(s) ``pos``
     (scalar = synchronized batch; (B,) vector = continuous batching, with
-    ``active`` gating idle slots). Returns (logits (B, 1, V), new_caches)."""
+    ``active`` gating idle slots). ``pages`` is the scheduler's
+    (B, pages_per_slot) page table when the caches are paged.
+    Returns (logits (B, 1, V), new_caches)."""
     return forward(params, {"tokens": tokens}, cfg, plan, scheme,
                    caches=caches, pos=pos, active=active, chunk=None,
                    constrain=constrain, compute_dtype=compute_dtype,
-                   backend=backend)
+                   pages=pages, backend=backend)

@@ -176,7 +176,8 @@ def quantize_layer(lp: dict, cfg: ArchConfig, kind: BlockKind,
     for THIS layer."""
     if isinstance(layer, LayerMode):
         layer = LayerPlan.for_mode(layer, dynamic_acts=scheme.dynamic_acts)
-    if not (layer.quant_mha or layer.quant_ffn):
+    if not (layer.quant_mha or layer.quant_ffn
+            or layer.kv_cache != "float"):
         return lp
     lp = _copy_dicts(lp)                     # containers copied, leaves shared
     for group, path, site, block in _kind_entries(cfg, kind):
@@ -202,6 +203,18 @@ def quantize_layer(lp: dict, cfg: ArchConfig, kind: BlockKind,
             else:
                 sc = compute_scale_symmetric(jnp.float32(amax[s]))
             attn[f"{s}_scale"] = jnp.asarray(sc)
+    if kind.body == "attn" and layer.kv_cache == "int8_per_head":
+        # static KV-cache scales: the per-head amax vectors recorded by
+        # observe_per_head at the k_cache/v_cache sites (post-rope)
+        attn = lp["attn"]
+        for key, site in (("k", "k_cache"), ("v", "v_cache")):
+            if site not in amax:
+                raise ValueError(
+                    f"kv_cache='int8_per_head' needs calibrated {site} "
+                    f"stats for this layer; re-run capture_stats on this "
+                    f"plan (or use kv_cache='int8_per_token')")
+            attn[f"{key}c_scale"] = jnp.asarray(compute_scale_symmetric(
+                jnp.asarray(amax[site], jnp.float32)))
     return lp
 
 
@@ -283,7 +296,7 @@ def capture_stats(params: dict, batches: Sequence[dict], cfg: ArchConfig,
         return {k: v for k, v in calib_kw.items() if k in accepted}
 
     cals: dict[str, Calibrator] = {}
-    scalar_amax: dict[str, float] = {}
+    scalar_amax: dict = {}          # float per scalar site, (H,) per-head
 
     for batch in batches:
         obs: dict = {}
@@ -297,7 +310,14 @@ def capture_stats(params: dict, batches: Sequence[dict], cfg: ArchConfig,
         obs.pop("__values__", None)
         for key, v in obs.items():
             if key.startswith("layer"):
-                scalar_amax[key] = max(scalar_amax.get(key, 0.0), float(v))
+                v = np.asarray(v, np.float32)
+                if v.ndim:          # per-head sites (k_cache/v_cache): (H,)
+                    prev = scalar_amax.get(key)
+                    scalar_amax[key] = (v if prev is None
+                                        else np.maximum(np.asarray(prev), v))
+                else:
+                    scalar_amax[key] = max(scalar_amax.get(key, 0.0),
+                                           float(v))
         for key, v in raw.items():
             layer, site = key.split("/", 1)
             if site not in hist_sites:
@@ -311,7 +331,11 @@ def capture_stats(params: dict, batches: Sequence[dict], cfg: ArchConfig,
     out: dict[str, dict[str, float]] = {}
     for key, amax in scalar_amax.items():
         layer, site = key.split("/", 1)
-        out.setdefault(layer, {})[site] = amax
+        # vector (per-head) stats are emitted as plain lists so the stats
+        # dict stays JSON-round-trippable through toolkit.artifact
+        out.setdefault(layer, {})[site] = (
+            [float(x) for x in amax] if isinstance(amax, np.ndarray)
+            else amax)
     for key, cal in cals.items():
         layer, site = key.split("/", 1)
         out.setdefault(layer, {})[site] = float(cal.compute_amax())

@@ -30,7 +30,10 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models import transformer as T
 from repro.serve.runtime import Runtime
-from repro.serve.scheduler import SlotScheduler
+from repro.serve.scheduler import PagePool, SlotScheduler
+
+# page geometry when a plan implies paging but the caller picked no size
+DEFAULT_PAGE_SIZE = 16
 
 
 @dataclasses.dataclass
@@ -55,11 +58,24 @@ class ServeEngine:
                  batch_slots: int = 4, max_len: int = 256,
                  cache_dtype=jnp.float32, compute_dtype=jnp.float32,
                  seed: int = 0, runtime: Optional[Runtime] = None,
-                 backend="reference", mesh=None):
+                 backend="reference", mesh=None,
+                 page_size: Optional[int] = None,
+                 kv_cache: Optional[str] = None,
+                 pool_pages: Optional[int] = None,
+                 precision=None):
         # ``backend`` names the compute backend (repro.kernels.backend) the
         # engine's Runtime executes on, ``mesh`` the serving mesh it places
         # executables over; both are ignored when a runtime is passed in
         # (the shared runtime's backend/mesh govern).
+        #
+        # ``page_size`` switches the KV caches to the paged layout (pages
+        # allocated on demand, freed on retirement/cancel — see
+        # repro.models.layers). ``kv_cache`` picks the page scheme for every
+        # full-attention layer ("float" / "int8_per_head" /
+        # "int8_per_token"); None takes per-layer schemes from ``precision``
+        # (a PrecisionPlan) when given, else float. ``pool_pages`` sizes the
+        # shared page pool (default: no oversubscription —
+        # slots * pages_per_slot).
         if not cfg.supports_decode:
             raise ValueError(f"{cfg.name} is encoder-only; no decode — "
                              f"serve it through EncoderServeEngine")
@@ -71,17 +87,50 @@ class ServeEngine:
         self.max_len = max_len
         self.compute_dtype = compute_dtype
         self.cache_dtype = cache_dtype
-        self.sched = SlotScheduler(batch_slots)
+        if page_size is None and kv_cache is None and precision is not None \
+                and getattr(precision, "num_quant_kv", 0):
+            # the plan itself asks for quantized KV: paging is implied
+            page_size = DEFAULT_PAGE_SIZE
+        self.page_size = page_size
+        self.pool: Optional[PagePool] = None
+        cache_kw = {}
+        if page_size is not None:
+            if kv_cache is not None:
+                schemes = (kv_cache,) * cfg.num_layers
+            elif precision is not None:
+                schemes = precision.kv_schemes
+            else:
+                schemes = ("float",) * cfg.num_layers
+            pps = T.pages_per_slot(max_len, page_size)
+            num_pages = (pool_pages if pool_pages is not None
+                         else batch_slots * pps)
+            self.pool = PagePool(num_pages, page_size, batch_slots, pps)
+            cache_kw = dict(page_size=page_size, num_pages=num_pages,
+                            kv_schemes=schemes)
+        elif kv_cache not in (None, "float"):
+            raise ValueError("kv_cache quantization needs the paged layout; "
+                             "pass page_size= as well")
+        self.sched = SlotScheduler(batch_slots, pool=self.pool)
         self.runtime = runtime or Runtime(cfg, plan, scheme=scheme,
+                                          precision=precision,
                                           compute_dtype=compute_dtype,
                                           backend=backend, mesh=mesh)
         self.caches = T.init_caches(cfg, plan, batch_slots, max_len,
-                                    cache_dtype)
-        self._fresh1 = T.init_caches(cfg, plan, 1, max_len, cache_dtype)
+                                    cache_dtype, **cache_kw)
+        self._fresh1 = T.init_caches(cfg, plan, 1, max_len, cache_dtype,
+                                     **{**cache_kw, "num_pages": 1}
+                                     if cache_kw else {})
         # resolve the executable once; ticks pay no key-hashing cost
         self._decode = self.runtime.decode_fn(params, self.caches)
         self.rng = np.random.default_rng(seed)
-        self._stats = {"ticks": 0, "tokens": 0, "retired": 0}
+        self._stats = {"ticks": 0, "tokens": 0, "retired": 0, "stalls": 0,
+                       "preemptions": 0}
+        # set when a deadlock preemption proves the pool cannot hold the
+        # current working set: admission pauses until pages are freed, so
+        # preempted requests don't thrash straight back into a slot
+        self._admission_hold = False
+        self._reset_fn = None               # built lazily on first admit
+        self._inval_fn = None               # built lazily on first drain
 
     # back-compat views onto the extracted scheduler
     @property
@@ -103,32 +152,111 @@ class ServeEngine:
 
     def _reset_slot(self, s: int) -> None:
         """Zero slot s's cache rows (leaves carry batch on axis 1, after the
-        layer-stack axis)."""
-        self.caches = jax.tree_util.tree_map(
-            lambda old, fresh: old.at[:, s:s + 1].set(
-                fresh.astype(old.dtype)),
-            self.caches, self._fresh1)
+        layer-stack axis). Paged pool leaves have no batch axis — their
+        per-slot state is the page table, owned by the scheduler; stale
+        page contents are invalidated via :meth:`_drain_freed`. One jitted
+        update for the whole tree, slot index as an operand: admits cost a
+        single dispatch, not a scatter per cache leaf."""
+        if self._reset_fn is None:
+            def reset_tree(caches, fresh, at):
+                def reset(path, old, fr):
+                    if "pages_" in str(path[-1]):
+                        return old
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        old, fr.astype(old.dtype), at, axis=1)
+                return jax.tree_util.tree_map_with_path(reset, caches, fresh)
+            # donation: the old cache buffers are dead after the update,
+            # so XLA updates in place instead of copying the whole tree
+            self._reset_fn = jax.jit(reset_tree, donate_argnums=(0,))
+        self.caches = self._reset_fn(self.caches, self._fresh1,
+                                     jnp.int32(s))
+
+    def _drain_freed(self) -> None:
+        """Invalidate the position rows of pages the scheduler freed since
+        the last tick, BEFORE their ids can be reallocated — a reused page
+        must never expose another request's positions to band_mask."""
+        freed = self.sched.freed_pages
+        if not freed:
+            return
+        self.sched.freed_pages = []
+        self._admission_hold = False        # headroom again: admit freely
+        # fixed-shape index vector (padded with an out-of-range id that
+        # mode="drop" discards): a varying-length idx would recompile the
+        # scatter once per distinct freed-page count and dominate the tick
+        npages = self.pool.num_pages
+        uniq = sorted(set(freed))
+        pad = np.full((npages,), npages, np.int32)
+        pad[:len(uniq)] = uniq
+        if self._inval_fn is None:
+            def inval_tree(caches, idx):
+                def inval(path, leaf):
+                    if "pages_pos" in str(path[-1]):
+                        return leaf.at[:, idx].set(-1, mode="drop")
+                    return leaf
+                return jax.tree_util.tree_map_with_path(inval, caches)
+            self._inval_fn = jax.jit(inval_tree, donate_argnums=(0,))
+        self.caches = self._inval_fn(self.caches, jnp.asarray(pad))
 
     # -- the serving loop ---------------------------------------------------------
     def step(self) -> list[Request]:
         """One engine tick = one compiled decode step for the whole batch."""
-        for s in self.sched.admit():
-            self._reset_slot(s)
+        if not self._admission_hold:
+            for s in self.sched.admit():
+                self._reset_slot(s)
+        self._drain_freed()
         live = self.sched.live()
         if not live:
             return []
+        if self.pool is not None:
+            # grow each live slot's page allocation to cover this tick's
+            # token; slots the pool cannot serve stall (masked inactive,
+            # cursor not advanced) until a retirement frees pages
+            need = lambda s: int(self.sched.cursor[s]) + 1
+            stalled = [s for s in live if not self.pool.ensure(s, need(s))]
+            if stalled:
+                self._stats["stalls"] += len(stalled)
+                if len(stalled) == len(live):
+                    # deadlock: every live slot needs a page and none can
+                    # retire to free one. Preempt the youngest slot (least
+                    # progress lost): its request goes back to the queue
+                    # head — replayed from its prompt on re-admission —
+                    # and its freed pages unblock the others.
+                    if len(live) == 1:
+                        raise RuntimeError(
+                            "page pool exhausted: a single request needs "
+                            "more pages than the pool holds; raise "
+                            "pool_pages")
+                    victim = min(stalled,
+                                 key=lambda s: int(self.sched.cursor[s]))
+                    req = self.sched.active[victim]
+                    self.sched.release(victim)
+                    self.sched.queue.appendleft(req)
+                    self._drain_freed()
+                    self._admission_hold = True
+                    self._stats["preemptions"] += 1
+                    live.remove(victim)
+                    stalled = [s for s in live
+                               if not self.pool.ensure(s, need(s))]
+                live = [s for s in live if s not in stalled]
+                if not live:
+                    return []
         tokens = np.zeros((self.slots, 1), np.int32)
         pos = np.zeros(self.slots, np.int32)
         active = np.zeros(self.slots, bool)
         for s in live:
             req = self.sched.active[s]
             c = int(self.sched.cursor[s])
+            # prompt, then generated tokens: at steady state this is
+            # output[-1]; after a page-pool preemption it replays the
+            # already-generated prefix before sampling resumes
             tokens[s, 0] = (req.prompt[c] if c < len(req.prompt)
-                            else req.output[-1])
+                            else req.output[c - len(req.prompt)])
             pos[s] = c
             active[s] = True
+        pages = (jnp.asarray(self.pool.table) if self.pool is not None
+                 else None)
         logits, self.caches = self._decode(
-            self.params, self.caches, tokens, pos, active)
+            self.params, self.caches, tokens, pos, active, pages)
         logits = np.asarray(jax.device_get(logits), np.float32)
         self._stats["ticks"] += 1
         self._stats["tokens"] += len(live)
@@ -137,8 +265,9 @@ class ServeEngine:
         for s in live:
             req = self.sched.active[s]
             self.sched.cursor[s] += 1
-            # still consuming the prompt (and not at its last token yet)?
-            if self.sched.cursor[s] < len(req.prompt):
+            # still consuming the prompt (or replaying generated tokens
+            # after a preemption)? sampling resumes at the text frontier
+            if self.sched.cursor[s] < req.text_len:
                 continue
             # this tick's logits predict the next token
             row = logits[s]
@@ -166,6 +295,18 @@ class ServeEngine:
             done.extend(self.step())
             ticks += 1
         return done
+
+    @property
+    def kv_cache_bytes(self) -> int:
+        """Total decode-cache footprint (all leaves, paged or dense) — the
+        ``samp_kv_cache_bytes`` gauge."""
+        return T.cache_bytes(self.caches)
+
+    @property
+    def kv_pages_in_use(self) -> int:
+        """Allocated pages in the pool (0 for dense caches) — the
+        ``samp_kv_pages_in_use`` gauge."""
+        return self.pool.pages_in_use() if self.pool is not None else 0
 
     @property
     def stats(self) -> dict:

@@ -97,6 +97,18 @@ class HTTPFrontend:
         reg.gauge("samp_requests_inflight",
                   "admitted requests not yet finished",
                   fn=lambda: drv.inflight)
+        # decode KV-cache occupancy — always exported (0 when no decode
+        # engine is mounted) so dashboards keyed on CORE_METRICS never
+        # miss the family
+        dec = self.decode
+        reg.gauge("samp_kv_cache_bytes",
+                  "decode cache footprint in bytes, every leaf (paged "
+                  "pools or dense rings, data + scales + bookkeeping)",
+                  fn=lambda: float(dec.kv_cache_bytes) if dec else 0.0)
+        reg.gauge("samp_kv_pages_in_use",
+                  "KV pages currently allocated out of the decode page "
+                  "pool (0 for dense caches)",
+                  fn=lambda: float(dec.kv_pages_in_use) if dec else 0.0)
 
         for name, engine in (("encoder", self.encoder),
                              ("decode", self.decode)):

@@ -46,6 +46,8 @@ CORE_METRICS = (
     "samp_requests_rejected_total",
     "samp_requests_inflight",
     "samp_request_latency_seconds",
+    "samp_kv_cache_bytes",
+    "samp_kv_pages_in_use",
 )
 
 
@@ -64,7 +66,9 @@ def engine_counters(engine) -> dict:
                 "occupancy": len(sched.live()),
                 "capacity": sched.slots,
                 "completed": engine._stats["retired"],
-                "evicted": sched.evicted, **base}
+                "evicted": sched.evicted,
+                "kv_cache_bytes": engine.kv_cache_bytes,
+                "kv_pages_in_use": engine.kv_pages_in_use, **base}
     batcher = engine.batcher                            # encoder engine
     return {"queue_depth": len(batcher),
             "occupancy": (engine._stats["batched_rows"]

@@ -330,45 +330,49 @@ class Runtime:
         constrain_kw = {} if self.rules is None else \
             {"constrain": self.rules}
 
-        def fn(params, caches, tokens, pos, active):
+        def fn(params, caches, tokens, pos, active, pages):
             self._stats["traces"] += 1          # trace-time side effect
             logits, caches = T.decode_step(
                 params, tokens, caches, pos, cfg, plan, scheme,
-                active=active, compute_dtype=compute_dtype, backend=backend,
-                **constrain_kw)
+                active=active, compute_dtype=compute_dtype, pages=pages,
+                backend=backend, **constrain_kw)
             return logits[:, -1, :], caches
         return fn
 
     def _decode_shardings(self, params, caches) -> tuple:
         """(in_shardings, out_shardings) for one decode executable: params
         from the rule table, caches batch/head-sharded per the cache rules,
-        per-tick operands (tokens/pos/active) replicated — they are tiny —
-        and the caches come back under the same shardings they went in."""
+        per-tick operands (tokens/pos/active/page table) replicated — they
+        are tiny — and the caches come back under the same shardings they
+        went in."""
         from jax.sharding import PartitionSpec
         r = self.rules
         caches_sh = jax.tree_util.tree_map(
             self._sharding, r.cache_spec(caches),
             is_leaf=lambda x: isinstance(x, PartitionSpec))
-        in_s = (r.params_sharding(params), caches_sh, None, None, None)
+        in_s = (r.params_sharding(params), caches_sh, None, None, None, None)
         return in_s, (None, caches_sh)
 
     def decode_fn(self, params, caches):
         """Resolve the decode executable for this (slot count, cache
         geometry, params structure) once — cached per batch-slot count +
-        cache geometry + params signature, so engines with different
-        max_len/cache_dtype can share one runtime without colliding. The
-        returned callable is the per-tick hot path: no signature hashing
-        per token."""
+        KV scheme/page geometry + cache/params signature, so engines with
+        different max_len/cache_dtype — or float vs paged-int8 caches —
+        can share one runtime without colliding. The returned callable is
+        the per-tick hot path: no signature hashing per token; its
+        ``pages`` operand is the scheduler's page table (None for dense
+        caches)."""
         key = ("decode", self._plan_key, self._decode_batch(caches),
-               _tree_sig(caches), _tree_sig(params))
+               T.kv_geometry(caches), _tree_sig(caches), _tree_sig(params))
         fn = self._get(key, self._build_decode,
                        shardings=None if self.rules is None else
                        (lambda: self._decode_shardings(params, caches)))
 
-        def step(params, caches, tokens, pos, active):
+        def step(params, caches, tokens, pos, active, pages=None):
             self._stats["calls"] += 1
             return fn(params, caches, jnp.asarray(tokens),
-                      jnp.asarray(pos), jnp.asarray(active))
+                      jnp.asarray(pos), jnp.asarray(active),
+                      None if pages is None else jnp.asarray(pages))
         return step
 
     @staticmethod
@@ -376,8 +380,8 @@ class Runtime:
         """Slot count from the cache geometry (leaves are (steps, B, ...))."""
         return int(jax.tree_util.tree_leaves(caches)[0].shape[1])
 
-    def decode(self, params, caches, tokens, pos, active):
+    def decode(self, params, caches, tokens, pos, active, pages=None):
         """One decode step via a per-call key resolution — convenience for
         one-off callers; engines bind :meth:`decode_fn` instead."""
         return self.decode_fn(params, caches)(params, caches, tokens, pos,
-                                              active)
+                                              active, pages)

@@ -44,6 +44,66 @@ class EncoderRequest:
     done: bool = False
 
 
+class PagePool:
+    """Fixed pool of KV-cache pages with a per-slot page table.
+
+    The table is the dense ``(slots, pages_per_slot)`` int32 array the
+    decode executable takes as an operand: row ``s`` lists the page ids
+    slot ``s`` owns in token order, ``-1`` beyond its allocation. Pages
+    are handed out on demand (:meth:`ensure`) as a slot's sequence grows
+    past a page boundary and returned wholesale on :meth:`release` —
+    the paging analogue of vLLM's block allocator, sized so the pool can
+    oversubscribe max-length worst cases when typical sequences are short.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, slots: int,
+                 pages_per_slot: int):
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.pages_per_slot = pages_per_slot
+        self.table = -np.ones((slots, pages_per_slot), np.int32)
+        self.free: deque = deque(range(num_pages))
+        self.alloc_failures = 0
+
+    def ensure(self, s: int, tokens: int) -> bool:
+        """Grow slot ``s`` to cover ``tokens`` total tokens. Returns False
+        (table untouched) when the pool cannot supply enough pages — the
+        caller must stall the slot until a release frees some."""
+        need = -(-tokens // self.page_size) if tokens > 0 else 0
+        if need > self.pages_per_slot:
+            raise ValueError(f"slot {s} needs {need} pages > "
+                             f"pages_per_slot={self.pages_per_slot}")
+        have = int((self.table[s] >= 0).sum())
+        if need - have > len(self.free):
+            self.alloc_failures += 1
+            return False
+        for j in range(have, need):
+            self.table[s, j] = self.free.popleft()
+        return True
+
+    def release(self, s: int) -> list[int]:
+        """Free every page slot ``s`` owns; returns the freed ids (the
+        engine invalidates their ``pages_pos`` rows so a reallocated page
+        never leaks another request's positions)."""
+        freed = [int(p) for p in self.table[s] if p >= 0]
+        self.free.extend(freed)
+        self.table[s] = -1
+        return freed
+
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self.free)
+
+    def bytes_per_page(self, caches) -> int:
+        """Sum of one page's bytes across every paged leaf of ``caches``."""
+        import jax
+        total = 0
+        for path, leaf in jax.tree_util.tree_leaves_with_path(caches):
+            name = str(path[-1])
+            if "pages_" in name:
+                total += (leaf.size // leaf.shape[0]) * leaf.dtype.itemsize
+        return total
+
+
 class SlotScheduler:
     """Slot/admission/queue bookkeeping for token-level continuous batching.
 
@@ -51,14 +111,21 @@ class SlotScheduler:
     ``cursor[s]`` counts the tokens that request has consumed (prompt then
     generated). The engine resets model state for slots returned by
     :meth:`admit` and calls :meth:`release` when a request retires.
+
+    With a :class:`PagePool` attached the scheduler also owns the page
+    lifecycle: release/cancel return the slot's pages to the pool and stash
+    the freed ids in ``freed_pages`` for the engine to drain (it must reset
+    those pages' position rows before the ids can be reused).
     """
 
-    def __init__(self, slots: int):
+    def __init__(self, slots: int, pool: Optional[PagePool] = None):
         self.slots = slots
         self.queue: deque = deque()
         self.active: list = [None] * slots
         self.cursor = np.zeros(slots, np.int64)
         self.evicted = 0        # cancellations + deadline evictions
+        self.pool = pool
+        self.freed_pages: list[int] = []
 
     def submit(self, req) -> None:
         self.queue.append(req)
@@ -79,6 +146,8 @@ class SlotScheduler:
 
     def release(self, s: int) -> None:
         self.active[s] = None
+        if self.pool is not None:
+            self.freed_pages.extend(self.pool.release(s))
 
     def cancel(self, req) -> Optional[str]:
         """Abandon ``req`` wherever it is: drop it from the admission queue

@@ -170,7 +170,9 @@ def load_artifact(directory: str) -> Artifact:
     cfg = _cfg_from_dict(meta["arch"])
     precision = _precision_from_meta(meta)
     scheme = T.QuantScheme(**meta["scheme"])
-    stats = {layer: {site: float(v) for site, v in sites.items()}
+    # per-head KV-cache stats round-trip as lists; everything else is scalar
+    stats = {layer: {site: (v if isinstance(v, list) else float(v))
+                     for site, v in sites.items()}
              for layer, sites in meta["stats"].items()}
     task = TaskSpec(**meta["task"]) if meta["task"] is not None else None
     target_name = meta["target"]["name"]

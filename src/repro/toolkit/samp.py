@@ -361,7 +361,11 @@ class SAMP:
         ``batch_slots`` sets the compiled slot count (decode) / the
         micro-batch flush size (encoder). ``backend=`` / ``mesh=``
         override the pipeline's compute backend / serving mesh for this
-        server (both engine types)."""
+        server (both engine types). Decode engines additionally take
+        ``page_size=`` (paged KV caches) and ``kv_cache=`` ("float" /
+        "int8_per_head" / "int8_per_token") — when the pipeline's
+        PrecisionPlan carries per-layer ``kv_cache`` schemes (schema v2),
+        they apply automatically, no kwargs needed."""
         from repro.distributed.sharding import mesh_fingerprint
         pipe = self.current
         if pipe.params is None:
@@ -369,6 +373,7 @@ class SAMP:
         backend = kw.pop("backend", None)
         mesh = kw.pop("mesh", pipe.mesh)
         if pipe.cfg.supports_decode and pipe.target.spec.name == "lm":
+            kw.setdefault("precision", pipe.precision)
             return ServeEngine(pipe.cfg, pipe.params, pipe.plan,
                                scheme=pipe.scheme, batch_slots=batch_slots,
                                max_len=max_len,

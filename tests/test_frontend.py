@@ -282,7 +282,7 @@ def test_engine_stats_and_metrics_share_one_surface(bert_golden):
 @pytest.fixture(scope="module")
 def qwen_golden():
     cfg = get_config("qwen2-0.5b").reduced()
-    params, plan = build_model(cfg, plan_file=GOLDEN, log=SILENT)
+    params, plan, _ = build_model(cfg, plan_file=GOLDEN, log=SILENT)
     return cfg, params, plan
 
 

@@ -31,7 +31,9 @@ def test_capture_stats_covers_all_layers():
     for lk, sites in stats.items():
         assert {"attn_in", "attn_out", "ffn_in", "ffn_hidden",
                 "q", "k", "p", "v"} <= set(sites)
-        assert all(v > 0 for v in sites.values())
+        # k_cache/v_cache are per-head vectors (lists); the rest scalar
+        assert all(min(v) > 0 if isinstance(v, list) else v > 0
+                   for v in sites.values())
 
 
 def test_minmax_monotone_in_batches():
@@ -40,7 +42,11 @@ def test_minmax_monotone_in_batches():
     s3 = eng.calibrate(params, batches)
     for lk in s1:
         for site in s1[lk]:
-            assert s3[lk][site] >= s1[lk][site] - 1e-9
+            a, b = s1[lk][site], s3[lk][site]
+            if isinstance(a, list):
+                assert all(y >= x - 1e-9 for x, y in zip(a, b))
+            else:
+                assert b >= a - 1e-9
 
 
 @pytest.mark.parametrize("mode", [LayerMode.QUANT_FFN_ONLY,

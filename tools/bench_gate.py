@@ -1,0 +1,143 @@
+#!/usr/bin/env python
+"""Benchmark regression gate for ``BENCH_serve.json``.
+
+    python tools/bench_gate.py BENCH_serve.json \
+        [--baseline benchmarks/BENCH_serve_baseline.json] \
+        [--tps-tolerance 0.20] [--skip-throughput]
+
+Compares a freshly generated serving benchmark artifact against the
+committed baseline and fails (exit 1) when the serving stack regresses:
+
+* **retraces** — steady-state recompile counts must not grow, per
+  section (``decode``, ``encoder``, ``encoder_fused``) and per
+  ``decode_sweep`` point. A retrace increase means the bucketed
+  executable cache or the benchmark warmup no longer covers the load;
+  it is machine-independent and always enforced.
+* **tokens_per_s** — decode throughput on the golden plan must stay
+  within ``--tps-tolerance`` (default 20%) of the baseline, per decode
+  section and per matching sweep point. Wall-clock numbers only compare
+  on similar hardware, so ``--skip-throughput`` disables this class
+  (CI runs on shared runners and keeps only the machine-independent
+  checks; the full gate runs wherever the baseline was recorded).
+* **kv_cache_bytes** — at every sweep concurrency, the paged-int8 cache
+  must stay at or under 60% of the float cache (the ISSUE's >=40%
+  reduction acceptance, with headroom). Enforced within the new
+  artifact, so it holds on any machine.
+* **int8 throughput sanity** — at the highest common sweep concurrency,
+  paged-int8 tokens/s must be no worse than float tokens/s minus the
+  tolerance ("no worse at equal concurrency"). Also intra-artifact.
+
+Both artifacts must record the same ``plan_fingerprint`` — a tokens/s
+delta measured under different precision plans is noise, not signal.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+BYTES_RATIO_MAX = 0.60
+
+_fails: list[str] = []
+
+
+def _check(ok: bool, label: str, detail: str) -> None:
+    if ok:
+        print(f"[bench_gate] ok   {label}: {detail}")
+    else:
+        print(f"[bench_gate] FAIL {label}: {detail}")
+        _fails.append(label)
+
+
+def _sweep_index(artifact: dict) -> dict:
+    """(slots, kv_cache) -> sweep point."""
+    return {(p["slots"], p["kv_cache"]): p
+            for p in artifact.get("decode_sweep", [])}
+
+
+def gate(new: dict, base: dict, *, tps_tolerance: float,
+         skip_throughput: bool) -> int:
+    if new.get("plan_fingerprint") != base.get("plan_fingerprint"):
+        _check(False, "plan_fingerprint",
+               f"new={new.get('plan_fingerprint')} vs "
+               f"base={base.get('plan_fingerprint')} — artifacts were "
+               "built from different precision plans")
+
+    # -- retraces: never grow ------------------------------------------------
+    for side in ("decode", "encoder", "encoder_fused"):
+        if side not in new or side not in base:
+            continue
+        n, b = new[side]["retraces"], base[side]["retraces"]
+        _check(n <= b, f"{side}.retraces", f"{n} (baseline {b})")
+    nsweep, bsweep = _sweep_index(new), _sweep_index(base)
+    for key in sorted(set(nsweep) & set(bsweep)):
+        n, b = nsweep[key]["retraces"], bsweep[key]["retraces"]
+        _check(n <= b, f"sweep{key}.retraces", f"{n} (baseline {b})")
+
+    # -- tokens/s vs baseline (same-machine trend) ---------------------------
+    if not skip_throughput:
+        floor = 1.0 - tps_tolerance
+        for side in ("decode",):
+            n = new[side]["tokens_per_s"]
+            b = base[side]["tokens_per_s"]
+            _check(n >= floor * b, f"{side}.tokens_per_s",
+                   f"{n:.1f} vs baseline {b:.1f} "
+                   f"(floor {floor * b:.1f})")
+        for key in sorted(set(nsweep) & set(bsweep)):
+            n = nsweep[key]["tokens_per_s"]
+            b = bsweep[key]["tokens_per_s"]
+            _check(n >= floor * b, f"sweep{key}.tokens_per_s",
+                   f"{n:.1f} vs baseline {b:.1f} "
+                   f"(floor {floor * b:.1f})")
+
+    # -- paged-int8 claims, intra-artifact (machine-independent) -------------
+    slots_seen = sorted({s for s, _ in nsweep})
+    for s in slots_seen:
+        f = nsweep.get((s, "float"))
+        q = nsweep.get((s, "int8_per_token"))
+        if f is None or q is None:
+            continue
+        ratio = q["kv_cache_bytes"] / f["kv_cache_bytes"]
+        _check(ratio <= BYTES_RATIO_MAX, f"sweep[{s}].kv_cache_bytes",
+               f"int8/float = {ratio:.2f} (max {BYTES_RATIO_MAX})")
+    if slots_seen:
+        top = slots_seen[-1]
+        f = nsweep.get((top, "float"))
+        q = nsweep.get((top, "int8_per_token"))
+        if f is not None and q is not None:
+            floor = (1.0 - tps_tolerance) * f["tokens_per_s"]
+            _check(q["tokens_per_s"] >= floor,
+                   f"sweep[{top}].int8_tokens_per_s",
+                   f"{q['tokens_per_s']:.1f} vs float "
+                   f"{f['tokens_per_s']:.1f} (floor {floor:.1f})")
+
+    if _fails:
+        print(f"[bench_gate] {len(_fails)} check(s) failed: "
+              + ", ".join(_fails))
+        return 1
+    print("[bench_gate] all checks passed")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("artifact", help="freshly generated BENCH_serve.json")
+    ap.add_argument("--baseline",
+                    default="benchmarks/BENCH_serve_baseline.json")
+    ap.add_argument("--tps-tolerance", type=float, default=0.20,
+                    help="allowed fractional tokens/s regression")
+    ap.add_argument("--skip-throughput", action="store_true",
+                    help="skip cross-run tokens/s comparisons (different "
+                         "hardware than the baseline); machine-independent "
+                         "checks still run")
+    args = ap.parse_args(argv)
+    with open(args.artifact) as f:
+        new = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    return gate(new, base, tps_tolerance=args.tps_tolerance,
+                skip_throughput=args.skip_throughput)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -124,6 +124,25 @@ def main() -> None:
         print(f"[http_smoke] metrics ok: all {len(CORE_METRICS)} core "
               f"names present ({len(text.splitlines())} lines)")
 
+        # KV-cache gauges: a decode engine is mounted, so the cache
+        # footprint must be a real (positive) byte count, and the page
+        # gauge must expose a numeric sample (0 once requests retire)
+        def gauge_value(name):
+            m = re.search(rf"^{name} ([0-9.e+-]+)$", text, re.M)
+            if not m:
+                fail(f"/metrics has no plain sample for {name}")
+            return float(m.group(1))
+
+        kv_bytes = gauge_value("samp_kv_cache_bytes")
+        kv_pages = gauge_value("samp_kv_pages_in_use")
+        if kv_bytes <= 0:
+            fail(f"samp_kv_cache_bytes = {kv_bytes}, want > 0 with a "
+                 f"decode engine mounted")
+        if kv_pages < 0:
+            fail(f"samp_kv_pages_in_use = {kv_pages}, want >= 0")
+        print(f"[http_smoke] kv gauges ok: samp_kv_cache_bytes={kv_bytes:g} "
+              f"samp_kv_pages_in_use={kv_pages:g}")
+
         status, _, _ = request(port, "GET", "/healthz")
         if status != 200:
             fail(f"/healthz -> {status}")
