@@ -1,0 +1,27 @@
+"""Input-adaptive precision: cluster-conditional calibration + routing.
+
+The SAMP paper picks ONE mixed-precision plan per deployment. This package
+makes precision *input-conditional*: requests are assigned to one of K
+clusters (by length, traffic class, or embedding geometry), calibration
+aggregates amax statistics per cluster, autotune searches a plan per
+cluster, and the serving stack routes every request to its cluster's
+quantized tree + compiled executable. See ``docs/adaptive-precision.md``.
+"""
+from repro.adaptive.calibrate import (autotune_planset, batch_clusters,
+                                      clustered_synthetic_batches,
+                                      fit_cluster_model)
+from repro.adaptive.clusters import (CLUSTER_MODELS, ClusterModel,
+                                     EmbeddingKMeans, LengthBuckets,
+                                     TaskLabel, cluster_model_from_dict,
+                                     pooled_embeddings)
+from repro.adaptive.router import (ClusterEntry, PlanRouter, bind_embedder,
+                                   build_router)
+from repro.core.plan import PlanSet, load_plan_or_planset
+
+__all__ = [
+    "CLUSTER_MODELS", "ClusterEntry", "ClusterModel", "EmbeddingKMeans",
+    "LengthBuckets", "PlanRouter", "PlanSet", "TaskLabel",
+    "autotune_planset", "batch_clusters", "bind_embedder", "build_router",
+    "cluster_model_from_dict", "clustered_synthetic_batches",
+    "fit_cluster_model", "load_plan_or_planset", "pooled_embeddings",
+]

@@ -1,0 +1,150 @@
+"""Cluster-conditional calibration + per-cluster autotune.
+
+Glue between the cluster models and the existing PTQ/search machinery:
+
+* :func:`fit_cluster_model` — runs the calibration-time fitting a model
+  needs (k-means over pooled embeddings for :class:`EmbeddingKMeans`;
+  identity for the parameter-free models) and binds host-side embedders;
+* :func:`batch_clusters` — per-batch per-row cluster-id vectors, the
+  ``clusters=`` argument of :func:`repro.quant.ptq.capture_stats`;
+* :func:`clustered_synthetic_batches` — a synthetic calibration stream
+  that *covers* every cluster (varying lengths for LengthBuckets, tagged
+  streams for TaskLabel), so smoke paths and launchers can calibrate a
+  K-cluster deployment with no task data;
+* :func:`autotune_planset` — one search per cluster over that cluster's
+  stats via the registered ``SEARCH_STRATEGIES``; each cluster may land a
+  different plan (int8 prefix depth, kv_cache choice) and the winners
+  assemble into a :class:`~repro.core.plan.PlanSet`.
+"""
+from __future__ import annotations
+
+from typing import Callable, Mapping, Optional, Sequence
+
+import numpy as np
+
+from repro.adaptive.clusters import (ClusterModel, EmbeddingKMeans,
+                                     TaskLabel, pooled_embeddings)
+from repro.core.plan import PlanSet
+
+
+def fit_cluster_model(model: ClusterModel, params: dict,
+                      batches: Sequence[dict], cfg) -> ClusterModel:
+    """Calibration-time fitting: EmbeddingKMeans learns its centroids from
+    the pooled embeddings of the calibration stream and gets a host-side
+    embedder bound; parameter-free models pass through unchanged."""
+    if isinstance(model, EmbeddingKMeans):
+        if not model.fitted:
+            pools = np.concatenate(
+                [pooled_embeddings(params, b, cfg) for b in batches])
+            model.fit(pools)
+        if model._embed is None:
+            def embed(tokens):
+                batch = {"tokens": np.asarray([list(tokens)], np.int32)}
+                if cfg.num_segments:
+                    batch["segments"] = np.zeros_like(batch["tokens"])
+                return pooled_embeddings(params, batch, cfg)[0]
+            model.bind(embed)
+    return model
+
+
+def batch_clusters(model: ClusterModel, batches: Sequence[dict], *,
+                   batch_classes: Optional[Sequence] = None) -> list:
+    """Per-row cluster ids for every batch — the ``clusters=`` argument of
+    ``capture_stats``. ``batch_classes`` optionally carries one traffic
+    class (or a per-row list) per batch for TaskLabel models."""
+    out = []
+    for i, b in enumerate(batches):
+        tc = batch_classes[i] if batch_classes is not None else None
+        if isinstance(tc, str):
+            tc = [tc] * np.asarray(b["tokens"]).shape[0]
+        out.append(model.assign_rows(b, traffic_classes=tc))
+    return out
+
+
+def clustered_synthetic_batches(cfg, model: ClusterModel, *,
+                                batches_per_cluster: int = 2,
+                                batch_size: int = 2, seed: int = 0,
+                                max_len: int = 64):
+    """Synthetic calibration batches covering every cluster of ``model``.
+
+    Returns ``(batches, batch_classes)`` — feed both to
+    :func:`batch_clusters`. LengthBuckets gets one stream per length bin
+    (at a representative in-bin length); every other model gets per-cluster
+    streams at the default length, tagged per cluster for TaskLabel.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    def make(seq_len: int, s: int) -> dict:
+        b = {"tokens": jax.random.randint(jax.random.PRNGKey(s),
+                                          (batch_size, seq_len), 0,
+                                          cfg.vocab_size)}
+        if cfg.num_segments:
+            b["segments"] = jnp.zeros((batch_size, seq_len), jnp.int32)
+        return b
+
+    lengths = None
+    if hasattr(model, "edges") and model.edges:    # LengthBuckets, K >= 2
+        edges = list(model.edges)
+        lengths = []
+        for i in range(model.num_clusters):
+            if i == 0:
+                lengths.append(min(edges[0], max_len))
+            elif i < len(edges):
+                lengths.append(min(edges[i], max_len))
+            else:
+                lengths.append(min(max(edges[-1] + 8, edges[-1] * 2),
+                                   max_len))
+        if len(set(lengths)) != len(lengths):
+            raise ValueError(f"max_len={max_len} cannot cover every length "
+                             f"bucket of edges={edges}")
+    batches, classes = [], []
+    for c in range(model.num_clusters):
+        seq = lengths[c] if lengths is not None else min(32, max_len)
+        for j in range(batches_per_cluster):
+            batches.append(make(seq, seed + c * 1000 + j))
+            classes.append(model.label_for(c)
+                           if isinstance(model, TaskLabel) else None)
+    return batches, classes
+
+
+def autotune_planset(engine, params: dict, cluster_stats: Mapping, *,
+                     eval_fn: Callable, latency_fn: Callable,
+                     strategy: str = "prefix_grid",
+                     max_latency: Optional[float] = None,
+                     min_accuracy: Optional[float] = None,
+                     prefer: Optional[str] = None,
+                     **strategy_kw):
+    """One search per cluster -> PlanSet of the per-cluster winners.
+
+    ``engine`` is a :class:`~repro.core.samp.SAMPEngine`; ``cluster_stats``
+    the cluster-keyed dict from ``capture_stats(clusters=...)``. Every
+    cluster runs the same registered strategy over its OWN stats — the
+    candidates' accuracy/latency are measured under that cluster's scales,
+    so different clusters can land different int8 prefixes or kv_cache
+    choices. Returns ``(planset, details)`` with ``details[cid] =
+    (points, recommendations, chosen)``.
+    """
+    members, details = [], {}
+    for cid in sorted(cluster_stats):
+        stats = cluster_stats[cid]
+        points = engine.search(strategy, params, stats, eval_fn, latency_fn,
+                               **strategy_kw)
+        recs = engine.recommend(points, max_latency=max_latency,
+                                min_accuracy=min_accuracy)
+        if not recs:
+            raise ValueError(f"cluster {cid}: search produced no quantized "
+                             f"candidates to recommend from")
+        if prefer is None:
+            chosen = next((r for r in recs
+                           if r.mode_name == "quant_ffn_only"), recs[0])
+        else:
+            chosen = next((r for r in recs if r.mode_name == prefer), None)
+            if chosen is None:
+                raise KeyError(f"cluster {cid}: prefer={prefer!r} matches "
+                               f"no recommended mode; have "
+                               f"{[r.mode_name for r in recs]}")
+        members.append((cid, chosen.point.plan))
+        details[cid] = (points, recs, chosen)
+    planset = PlanSet(tuple(members), default=min(details))
+    return planset, details

@@ -1,0 +1,286 @@
+"""Cluster models — the input side of input-adaptive precision.
+
+A :class:`ClusterModel` partitions traffic into K clusters; each cluster
+gets its own calibration statistics and (optionally) its own member plan in
+a :class:`~repro.core.plan.PlanSet`. Three implementations cover the three
+signals a deployment actually has at admission time:
+
+* :class:`LengthBuckets` — sequence-length bins. Quantization error grows
+  with activation range, and activation ranges shift with sequence length;
+  binning by length is the zero-cost router (the length is known before
+  any compute).
+* :class:`TaskLabel` — an explicit traffic-class tag (the
+  ``X-SAMP-Traffic-Class`` header / ``traffic_class`` JSON field). The
+  multi-tenant case: the *caller* knows the distribution.
+* :class:`EmbeddingKMeans` — k-means over mean-pooled input embeddings,
+  fit during calibration; assignment at serve time is a pure-JAX argmin
+  over centroid distances (jit-safe, deterministic).
+
+Every model serializes via ``to_dict``/``from_dict`` into artifact bundles
+(v3) and exposes a stable ``fingerprint()`` — the routing function is part
+of the deployed identity, exactly like the plans it routes to.
+"""
+from __future__ import annotations
+
+import bisect
+import hashlib
+import json
+from typing import Mapping, Optional, Sequence
+
+import numpy as np
+
+
+class ClusterModel:
+    """Protocol base: ``assign`` one request, ``assign_rows`` a batch."""
+
+    kind = "base"
+
+    @property
+    def num_clusters(self) -> int:
+        raise NotImplementedError
+
+    def assign(self, tokens: Sequence[int], *,
+               traffic_class: Optional[str] = None) -> int:
+        """Cluster id for one request at admission time."""
+        raise NotImplementedError
+
+    def assign_rows(self, batch: Mapping, *,
+                    traffic_classes: Optional[Sequence[str]] = None
+                    ) -> np.ndarray:
+        """Per-row cluster ids (B,) for one calibration batch."""
+        tokens = np.asarray(batch["tokens"])
+        classes = traffic_classes or [None] * tokens.shape[0]
+        return np.asarray([self.assign(list(row), traffic_class=tc)
+                           for row, tc in zip(tokens, classes)], np.int64)
+
+    def fit(self, embeddings: np.ndarray) -> "ClusterModel":
+        """Calibration-time fitting hook; identity for parameter-free
+        models."""
+        return self
+
+    def to_dict(self) -> dict:
+        raise NotImplementedError
+
+    def fingerprint(self) -> str:
+        """sha256 over the canonical JSON form — stable across save/load,
+        persisted in artifact bundles v3 next to the PlanSet fingerprint."""
+        canon = json.dumps(self.to_dict(), sort_keys=True,
+                           separators=(",", ":"))
+        return hashlib.sha256(canon.encode("utf-8")).hexdigest()
+
+    def describe(self) -> str:
+        return f"{self.kind} K={self.num_clusters} #{self.fingerprint()[:12]}"
+
+
+class LengthBuckets(ClusterModel):
+    """Cluster by request length: ``edges=(8, 32)`` makes three clusters —
+    len <= 8, 8 < len <= 32, len > 32. Cluster ids are bin indices. Empty
+    ``edges`` is the trivial K=1 model — the routed form of an unrouted
+    deployment (used to measure pure routing overhead)."""
+
+    kind = "length"
+
+    def __init__(self, edges: Sequence[int] = ()):
+        edges = tuple(int(e) for e in edges)
+        if any(e <= 0 for e in edges) or list(edges) != sorted(set(edges)):
+            raise ValueError(f"edges must be strictly increasing positive "
+                             f"ints, got {edges}")
+        self.edges = edges
+
+    @property
+    def num_clusters(self) -> int:
+        return len(self.edges) + 1
+
+    def assign(self, tokens, *, traffic_class=None) -> int:
+        return bisect.bisect_left(self.edges, len(tokens))
+
+    def assign_rows(self, batch, *, traffic_classes=None) -> np.ndarray:
+        tokens = np.asarray(batch["tokens"])
+        # dense calibration rows are full-width; a per-row "lengths" vector
+        # (padded batches) overrides the row width when present
+        if "lengths" in batch:
+            lengths = np.asarray(batch["lengths"]).reshape(-1)
+        else:
+            lengths = np.full((tokens.shape[0],), tokens.shape[1])
+        return np.asarray([bisect.bisect_left(self.edges, int(n))
+                           for n in lengths], np.int64)
+
+    def to_dict(self) -> dict:
+        return {"kind": self.kind, "edges": list(self.edges)}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "LengthBuckets":
+        return cls(d["edges"])
+
+
+class TaskLabel(ClusterModel):
+    """Cluster by explicit traffic-class tag: ``labels`` maps position ->
+    class name, so cluster id i serves label ``labels[i]``. Unknown or
+    missing tags route to ``default``."""
+
+    kind = "task"
+
+    def __init__(self, labels: Sequence[str], default: int = 0):
+        labels = tuple(str(x) for x in labels)
+        if not labels:
+            raise ValueError("TaskLabel needs at least one label")
+        if len(set(labels)) != len(labels):
+            raise ValueError(f"duplicate labels in {labels}")
+        if not 0 <= int(default) < len(labels):
+            raise ValueError(f"default {default} out of range for "
+                             f"{len(labels)} labels")
+        self.labels = labels
+        self.default = int(default)
+        self._index = {name: i for i, name in enumerate(labels)}
+
+    @property
+    def num_clusters(self) -> int:
+        return len(self.labels)
+
+    def assign(self, tokens, *, traffic_class=None) -> int:
+        return self._index.get(traffic_class, self.default)
+
+    def label_for(self, cluster: int) -> str:
+        return self.labels[cluster]
+
+    def to_dict(self) -> dict:
+        return {"kind": self.kind, "labels": list(self.labels),
+                "default": self.default}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "TaskLabel":
+        return cls(d["labels"], d.get("default", 0))
+
+
+class EmbeddingKMeans(ClusterModel):
+    """Cluster by content: k-means over mean-pooled input embeddings.
+
+    ``fit`` runs during calibration on the pooled embeddings of the
+    calibration stream (Lloyd's algorithm, deterministic seeded init, fixed
+    iteration count — calibration must be reproducible). At serve time
+    :meth:`assign_embedded` is a pure-JAX nearest-centroid argmin, safe to
+    trace inside jitted code; the host-side :meth:`assign` needs an
+    embedding function bound via :meth:`bind` (the router binds the
+    deployment's own embedding table — see :mod:`repro.adaptive.router`).
+    """
+
+    kind = "kmeans"
+
+    def __init__(self, k: int, centroids=None, *, seed: int = 0,
+                 iters: int = 10):
+        if k < 1:
+            raise ValueError(f"k={k} must be >= 1")
+        self.k = int(k)
+        self.seed = int(seed)
+        self.iters = int(iters)
+        self.centroids = (None if centroids is None
+                          else np.asarray(centroids, np.float32))
+        if self.centroids is not None and self.centroids.shape[0] != self.k:
+            raise ValueError(f"{self.centroids.shape[0]} centroids for k="
+                             f"{self.k}")
+        self._embed = None
+
+    @property
+    def num_clusters(self) -> int:
+        return self.k
+
+    @property
+    def fitted(self) -> bool:
+        return self.centroids is not None
+
+    def fit(self, embeddings: np.ndarray) -> "EmbeddingKMeans":
+        x = np.asarray(embeddings, np.float32)
+        if x.ndim != 2 or x.shape[0] < self.k:
+            raise ValueError(f"need >= k={self.k} pooled embeddings to fit, "
+                             f"got shape {x.shape}")
+        rng = np.random.default_rng(self.seed)
+        c = x[rng.choice(x.shape[0], self.k, replace=False)].copy()
+        for _ in range(self.iters):
+            d2 = ((x[:, None, :] - c[None]) ** 2).sum(-1)
+            ids = d2.argmin(1)
+            for j in range(self.k):
+                rows = x[ids == j]
+                if len(rows):           # empty clusters keep their centroid
+                    c[j] = rows.mean(0)
+        self.centroids = c
+        return self
+
+    def _require_fit(self):
+        if self.centroids is None:
+            raise ValueError("EmbeddingKMeans is unfitted: call fit() on "
+                             "pooled calibration embeddings first")
+
+    def assign_embedded(self, x):
+        """Nearest-centroid ids for pooled embeddings ``x`` (..., D) —
+        pure JAX, deterministic under jit."""
+        import jax.numpy as jnp
+        self._require_fit()
+        c = jnp.asarray(self.centroids)
+        d2 = jnp.sum((x[..., None, :] - c) ** 2, axis=-1)
+        return jnp.argmin(d2, axis=-1)
+
+    def bind(self, embed_fn) -> "EmbeddingKMeans":
+        """Attach ``embed_fn(tokens) -> (D,) pooled embedding`` for
+        host-side admission assignment."""
+        self._embed = embed_fn
+        return self
+
+    def assign(self, tokens, *, traffic_class=None) -> int:
+        self._require_fit()
+        if self._embed is None:
+            raise ValueError("EmbeddingKMeans has no bound embedder; call "
+                             "bind(embed_fn) (the router does this from "
+                             "the deployment params)")
+        x = np.asarray(self._embed(tokens), np.float32)
+        d2 = ((self.centroids - x[None]) ** 2).sum(-1)
+        return int(d2.argmin())
+
+    def assign_rows(self, batch, *, traffic_classes=None) -> np.ndarray:
+        self._require_fit()
+        if self._embed is None:
+            raise ValueError("EmbeddingKMeans has no bound embedder")
+        tokens = np.asarray(batch["tokens"])
+        return np.asarray([self.assign(list(row)) for row in tokens],
+                          np.int64)
+
+    def to_dict(self) -> dict:
+        d = {"kind": self.kind, "k": self.k, "seed": self.seed,
+             "iters": self.iters}
+        if self.centroids is not None:
+            # float32 -> repr round-trips exactly through JSON
+            d["centroids"] = [[float(v) for v in row]
+                              for row in self.centroids]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "EmbeddingKMeans":
+        return cls(d["k"], d.get("centroids"), seed=d.get("seed", 0),
+                   iters=d.get("iters", 10))
+
+
+CLUSTER_MODELS = {m.kind: m for m in
+                  (LengthBuckets, TaskLabel, EmbeddingKMeans)}
+
+
+def cluster_model_from_dict(d: Mapping) -> ClusterModel:
+    """Inverse of ``to_dict`` for any registered model (artifact loading)."""
+    kind = d.get("kind")
+    if kind not in CLUSTER_MODELS:
+        raise ValueError(f"unknown cluster model kind {kind!r}; have "
+                         f"{sorted(CLUSTER_MODELS)}")
+    return CLUSTER_MODELS[kind].from_dict(d)
+
+
+def pooled_embeddings(params, batch: Mapping, cfg, *,
+                      compute_dtype=None) -> np.ndarray:
+    """Mean-pooled input embeddings (B, D) — the feature space
+    :class:`EmbeddingKMeans` fits and assigns in. Uses only the embedding
+    table (no transformer layers): cheap enough to run per request at
+    admission."""
+    import jax.numpy as jnp
+    from repro.models import transformer as T
+    tokens = np.asarray(batch["tokens"])
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    x = T.embed_inputs(params, dict(batch), cfg, positions=positions,
+                       compute_dtype=compute_dtype or jnp.float32)
+    return np.asarray(jnp.mean(x, axis=1), np.float32)

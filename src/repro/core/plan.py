@@ -382,6 +382,164 @@ class PrecisionPlan:
         return hashlib.sha256(canon.encode("utf-8")).hexdigest()
 
 
+PLANSET_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanSet:
+    """K fingerprinted :class:`PrecisionPlan` members keyed by cluster id.
+
+    The input-adaptive precision identity: one deployment carries one weight
+    tree and K precision plans, one per traffic cluster (see
+    :mod:`repro.adaptive`). Each member keeps its own ``fingerprint()`` — the
+    serving runtime keys executables on (backend · member fingerprint · mesh
+    · cluster), so two clusters that landed the same plan content still get
+    distinct cache entries and per-cluster activation scales.
+
+    ``members`` maps cluster id -> plan; ``default`` names the cluster that
+    serves requests the router cannot classify. All members must describe
+    the same layer count (they share one model), and cluster ids must be
+    unique non-negative ints — both enforced at construction, so
+    ``plan_lint`` surfaces them as load-time errors.
+    """
+
+    members: tuple         # ((cluster_id, PrecisionPlan), ...) sorted by id
+    default: int = 0
+
+    def __post_init__(self):
+        pairs = tuple(sorted((int(c), p) for c, p in self.members))
+        if not pairs:
+            raise ValueError("PlanSet needs at least one member plan")
+        seen: set = set()
+        for cid, plan in pairs:
+            if cid < 0:
+                raise ValueError(f"cluster id {cid} is negative")
+            if cid in seen:
+                raise ValueError(f"duplicate cluster id {cid} in PlanSet")
+            seen.add(cid)
+            if not isinstance(plan, PrecisionPlan):
+                raise TypeError(f"member for cluster {cid} is "
+                                f"{type(plan).__name__}, not PrecisionPlan")
+        counts = {cid: p.num_layers for cid, p in pairs}
+        if len(set(counts.values())) > 1:
+            raise ValueError(f"member plans disagree on layer count: "
+                             f"{counts} — a PlanSet spans one model")
+        if int(self.default) not in seen:
+            raise ValueError(f"default cluster {self.default} has no "
+                             f"member plan (have {sorted(seen)})")
+        object.__setattr__(self, "members", pairs)
+        object.__setattr__(self, "default", int(self.default))
+
+    # -- mapping surface ----------------------------------------------------
+    @property
+    def plans(self) -> dict:
+        return dict(self.members)
+
+    @property
+    def cluster_ids(self) -> tuple:
+        return tuple(c for c, _ in self.members)
+
+    def __len__(self) -> int:
+        return len(self.members)
+
+    def __iter__(self):
+        return iter(self.members)
+
+    def plan_for(self, cluster: int) -> PrecisionPlan:
+        """Member plan for ``cluster``, falling back to ``default`` for ids
+        the set does not cover (the router's unknown-traffic contract)."""
+        d = self.plans
+        return d.get(int(cluster), d[self.default])
+
+    @property
+    def num_layers(self) -> int:
+        return self.members[0][1].num_layers
+
+    def describe(self) -> str:
+        body = "; ".join(f"c{cid}:{p.describe()}" for cid, p in self.members)
+        return (f"planset K={len(self)} default=c{self.default} "
+                f"#{self.fingerprint()[:12]} [{body}]")
+
+    # -- constructors -------------------------------------------------------
+    @staticmethod
+    def single(plan: PrecisionPlan, cluster: int = 0) -> "PlanSet":
+        """K=1 set — the routed form of an unrouted deployment."""
+        return PlanSet(((cluster, plan),), default=cluster)
+
+    @staticmethod
+    def uniform(plan: PrecisionPlan, clusters: Sequence[int]) -> "PlanSet":
+        """Same plan for every cluster (per-cluster *scales* still differ —
+        calibration is cluster-conditional even when the plan is not)."""
+        cids = tuple(clusters)
+        return PlanSet(tuple((c, plan) for c in cids), default=cids[0])
+
+    # -- serialization ------------------------------------------------------
+    def to_dict(self) -> dict:
+        return {"planset_version": PLANSET_VERSION,
+                "default": self.default,
+                "members": [{"cluster": cid, "plan": p.to_dict()}
+                            for cid, p in self.members]}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "PlanSet":
+        version = d.get("planset_version")
+        if version != PLANSET_VERSION:
+            raise ValueError(f"planset_version {version!r} != "
+                             f"{PLANSET_VERSION}")
+        extra = set(d) - {"planset_version", "default", "members"}
+        if extra:
+            raise ValueError(f"unknown planset fields {sorted(extra)}")
+        members = d.get("members")
+        if not isinstance(members, (list, tuple)) or not members:
+            raise ValueError("planset needs a non-empty 'members' list")
+        pairs = []
+        for m in members:
+            if not isinstance(m, Mapping) or set(m) != {"cluster", "plan"}:
+                raise ValueError(f"planset member must be "
+                                 f"{{'cluster', 'plan'}}, got {m!r}")
+            # PrecisionPlan.from_dict enforces the per-member schema rules
+            # (kv_cache is v2-only, unknown fields rejected)
+            pairs.append((int(m["cluster"]),
+                          PrecisionPlan.from_dict(m["plan"])))
+        return cls(tuple(pairs), d.get("default", pairs[0][0]))
+
+    def to_json(self, indent: Optional[int] = 1) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "PlanSet":
+        return cls.from_dict(json.loads(text))
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "PlanSet":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    def fingerprint(self) -> str:
+        """Content hash of the whole set (member order is canonical: sorted
+        by cluster id). Artifact bundles v3 persist this alongside each
+        member's own fingerprint."""
+        canon = json.dumps(self.to_dict(), sort_keys=True,
+                           separators=(",", ":"))
+        return hashlib.sha256(canon.encode("utf-8")).hexdigest()
+
+
+def load_plan_or_planset(path: str) -> Union[PrecisionPlan, "PlanSet"]:
+    """Load either a single-plan JSON or a PlanSet JSON, sniffing the
+    ``planset_version`` key. Single-plan files load exactly as before —
+    the PlanSet format is additive."""
+    with open(path) as f:
+        d = json.load(f)
+    if isinstance(d, Mapping) and "planset_version" in d:
+        return PlanSet.from_dict(d)
+    return PrecisionPlan.from_dict(d)
+
+
 def plan_from_policy(policy: EncoderPolicy, *, dynamic_acts: bool = False,
                      calibrator: str = "minmax") -> PrecisionPlan:
     """Lossless EncoderPolicy -> PrecisionPlan conversion (no warning —

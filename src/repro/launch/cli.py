@@ -4,8 +4,10 @@
 ``launch/server.py`` (the HTTP/SSE front-end) serve the same deployments,
 so they must parse the same deployment flags the same way. This module is
 the single definition of that surface — ``--arch / --task / --policy /
---plan / --strategy / --max-latency / --backend / --mesh / --slots /
---max-len / --seed`` — so the two entrypoints cannot drift.
+--plan / --clusters / --strategy / --max-latency / --backend / --mesh /
+--slots / --max-len / --seed`` — so the two entrypoints cannot drift.
+:func:`parse_cluster_model` turns the ``--clusters`` spec string into a
+:class:`~repro.adaptive.clusters.ClusterModel`.
 """
 from __future__ import annotations
 
@@ -22,8 +24,17 @@ def add_serving_flags(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
     ap.add_argument("--policy", default="float",
                     help="float | ffn[K] | full[K]")
     ap.add_argument("--plan", default=None,
-                    help="path to a saved PrecisionPlan JSON (overrides "
-                         "--policy/--strategy)")
+                    help="path to a saved PrecisionPlan or PlanSet JSON "
+                         "(overrides --policy/--strategy; a PlanSet needs "
+                         "--clusters with a matching cluster count)")
+    ap.add_argument("--clusters", default=None,
+                    help="input-adaptive precision: route requests to "
+                         "per-cluster plans. 'length:8,16' (length bins), "
+                         "'task:chat,search' (X-SAMP-Traffic-Class "
+                         "labels), 'kmeans:3' (embedding k-means). "
+                         "Calibration turns cluster-conditional; --policy "
+                         "deploys the same plan per cluster (per-cluster "
+                         "scales), --plan may name a PlanSet")
     ap.add_argument("--strategy", default=None,
                     choices=("prefix_grid", "greedy", "latency_budget"),
                     help="pick the plan with a search strategy instead of "
@@ -58,6 +69,29 @@ def add_serving_flags(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
                          "dynamically at decode time. Default: the plan's "
                          "per-layer kv_cache schemes")
     return ap
+
+
+def parse_cluster_model(spec):
+    """Parse a ``--clusters`` spec into a ClusterModel (None -> None).
+
+    ``length:8,16`` -> LengthBuckets((8, 16)); ``task:chat,search`` ->
+    TaskLabel(("chat", "search")); ``kmeans:3`` -> EmbeddingKMeans(3).
+    """
+    if spec is None:
+        return None
+    from repro.adaptive import EmbeddingKMeans, LengthBuckets, TaskLabel
+    kind, _, rest = spec.partition(":")
+    try:
+        if kind == "length":
+            return LengthBuckets(tuple(int(x) for x in rest.split(",") if x))
+        if kind == "task":
+            return TaskLabel(tuple(x for x in rest.split(",") if x))
+        if kind == "kmeans":
+            return EmbeddingKMeans(int(rest))
+    except (ValueError, TypeError) as e:
+        raise SystemExit(f"--clusters {spec!r}: {e}")
+    raise SystemExit(f"--clusters {spec!r}: unknown model {kind!r}; use "
+                     f"length:<edges> | task:<labels> | kmeans:<K>")
 
 
 def resolve_task(cfg, task):

@@ -15,6 +15,10 @@
     # compute backend for the quantized blocks (docs/architecture.md)
     ... --backend fused              # reference | fused | auto
 
+    # input-adaptive precision (docs/adaptive-precision.md): per-cluster
+    # calibration scales + request routing
+    ... --clusters length:8,16      # length:<edges> | task:<labels> | kmeans:K
+
     # mesh-sharded serving: dp-way data parallel x tp-way tensor parallel
     # (docs/serving.md; needs dp*tp visible devices)
     ... --mesh 2,1
@@ -39,12 +43,14 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.calibration import synthetic_calibration_batches
-from repro.core.plan import PrecisionPlan, plan_from_policy
+from repro.core.plan import (PlanSet, PrecisionPlan, load_plan_or_planset,
+                             plan_from_policy)
 from repro.core.precision import make_policy
 from repro.core.samp import SAMPEngine
 from repro.data.pipeline import make_task
 from repro.distributed.sharding import mesh_fingerprint
-from repro.launch.cli import add_serving_flags, resolve_task
+from repro.launch.cli import (add_serving_flags, parse_cluster_model,
+                              resolve_task)
 from repro.launch.mesh import make_serving_mesh
 from repro.models import transformer as T
 from repro.serve import (EncoderRequest, EncoderServeEngine, Request,
@@ -128,23 +134,83 @@ def build_model(cfg, policy_name: str = "float", *, seed: int = 0,
     return params, plan, precision
 
 
+def build_routed_model(cfg, policy_name: str, cluster_model, *,
+                       seed: int = 0, head=None, plan_file=None,
+                       max_len: int = 64, log=print):
+    """Input-adaptive build: fit the cluster model, calibrate
+    cluster-conditional scales on a synthetic stream that covers every
+    cluster, and assemble a :class:`~repro.adaptive.PlanRouter`.
+
+    The PlanSet comes from ``--plan`` (a PlanSet file routes as-is; a
+    single-plan file deploys uniformly) or from the named policy deployed
+    uniformly — per-cluster *scales* still differ, which is the paper's
+    self-adaptive point. Returns ``(router, default_entry)``; the default
+    entry seeds the engine's constructor arguments.
+    """
+    from repro import adaptive
+
+    eng = SAMPEngine(cfg, float_dtype="float32")
+    params = T.init_params(jax.random.PRNGKey(seed), cfg,
+                           eng.float_policy, head=head)
+    batches, classes = adaptive.clustered_synthetic_batches(
+        cfg, cluster_model, seed=seed, max_len=max_len)
+    adaptive.fit_cluster_model(cluster_model, params, batches, cfg)
+    stats = eng.calibrate(
+        params, batches,
+        clusters=adaptive.batch_clusters(cluster_model, batches,
+                                         batch_classes=classes))
+    cids = range(cluster_model.num_clusters)
+    if plan_file is not None:
+        loaded = load_plan_or_planset(plan_file)
+        planset = (loaded if isinstance(loaded, PlanSet)
+                   else PlanSet.uniform(loaded, cids))
+        log(f"[serve] loaded {plan_file}: {planset.describe()}")
+    else:
+        planset = PlanSet.uniform(
+            plan_from_policy(make_policy(cfg, policy_name)), cids)
+    router = adaptive.build_router(cfg, params, planset, stats,
+                                   cluster_model=cluster_model,
+                                   scheme=eng.scheme,
+                                   float_plan=eng.float_plan)
+    log(f"[serve] {router.describe()}")
+    return router, router.entry(planset.default)
+
+
+def _traffic_class_for(router, i: int):
+    """Synthetic traffic-class tag for request ``i``: TaskLabel routing is
+    caller-declared, so the demo loop cycles the labels; content-routed
+    models (length, kmeans) need no tag."""
+    if router is None or not hasattr(router.model, "label_for"):
+        return None
+    return router.model.label_for(i % router.num_clusters)
+
+
 def serve_decode(cfg, args) -> None:
-    params, plan, precision = build_model(
-        cfg, args.policy, seed=args.seed, plan_file=args.plan,
-        strategy=args.strategy, max_latency=args.max_latency)
+    router = None
+    if args.clusters is not None:
+        model = parse_cluster_model(args.clusters)
+        router, entry = build_routed_model(
+            cfg, args.policy, model, seed=args.seed, plan_file=args.plan,
+            max_len=args.max_len)
+        params, plan, precision = entry.params, entry.plan, entry.precision
+    else:
+        params, plan, precision = build_model(
+            cfg, args.policy, seed=args.seed, plan_file=args.plan,
+            strategy=args.strategy, max_latency=args.max_latency)
     mesh = make_serving_mesh(args.mesh)
     server = ServeEngine(cfg, params, plan, batch_slots=args.slots,
                          max_len=args.max_len, seed=args.seed,
                          backend=args.backend, mesh=mesh,
                          page_size=args.page_size, kv_cache=args.kv_dtype,
-                         precision=precision)
+                         precision=precision, router=router)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         plen = int(rng.integers(2, 9))
         prompt = rng.integers(1, cfg.vocab_size, size=plen).tolist()
         server.submit(Request(uid=i, prompt=prompt,
                               max_tokens=args.max_tokens,
-                              temperature=args.temperature))
+                              temperature=args.temperature,
+                              traffic_class=_traffic_class_for(router, i)))
     t0 = time.perf_counter()
     done = server.run()
     dt = time.perf_counter() - t0
@@ -158,6 +224,9 @@ def serve_decode(cfg, args) -> None:
           f"({s['tokens'] / max(dt, 1e-9):.1f} tok/s CPU); "
           f"{s['runtime_traces']} compile(s) / "
           f"{s['runtime_executables']} executable(s)")
+    if router is not None:
+        print(f"[serve] clusters: {dict(router.requests_by_cluster)} "
+              f"({router.active_plans} active plan(s))")
 
 
 def serve_encoder(cfg, args) -> None:
@@ -165,20 +234,30 @@ def serve_encoder(cfg, args) -> None:
                      seq_len=args.max_len)
     spec = get_target(TARGET_FOR_TASK_KIND[task.kind])
     head_kind = "ner" if spec.token_level else "cls"
-    params, plan, _ = build_model(cfg, args.policy, seed=args.seed,
-                                  head=(head_kind, max(task.n_classes, 1)),
-                                  plan_file=args.plan,
-                                  strategy=args.strategy,
-                                  max_latency=args.max_latency)
+    head = (head_kind, max(task.n_classes, 1))
+    router = None
+    if args.clusters is not None:
+        model = parse_cluster_model(args.clusters)
+        router, entry = build_routed_model(
+            cfg, args.policy, model, seed=args.seed, head=head,
+            plan_file=args.plan, max_len=args.max_len)
+        params, plan = entry.params, entry.plan
+    else:
+        params, plan, _ = build_model(cfg, args.policy, seed=args.seed,
+                                      head=head, plan_file=args.plan,
+                                      strategy=args.strategy,
+                                      max_latency=args.max_latency)
     mesh = make_serving_mesh(args.mesh)
     server = EncoderServeEngine(cfg, params, plan, target=spec,
                                 max_batch=args.slots, max_len=args.max_len,
-                                backend=args.backend, mesh=mesh)
+                                backend=args.backend, mesh=mesh,
+                                router=router)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         n = int(rng.integers(4, args.max_len // 2))
         server.submit(EncoderRequest(
-            uid=i, tokens=rng.integers(1, cfg.vocab_size, size=n).tolist()))
+            uid=i, tokens=rng.integers(1, cfg.vocab_size, size=n).tolist(),
+            traffic_class=_traffic_class_for(router, i)))
     t0 = time.perf_counter()
     server.run()                      # flush full + partial micro-batches
     dt = time.perf_counter() - t0
@@ -190,6 +269,9 @@ def serve_encoder(cfg, args) -> None:
           f"({s['retired'] / max(dt, 1e-9):.1f} req/s CPU); "
           f"{s['runtime_traces']} compile(s) / "
           f"{s['runtime_executables']} executable(s)")
+    if router is not None:
+        print(f"[serve] clusters: {dict(router.requests_by_cluster)} "
+              f"({router.active_plans} active plan(s))")
 
 
 def main():

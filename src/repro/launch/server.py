@@ -9,6 +9,11 @@
     PYTHONPATH=src python -m repro.launch.server --arch qwen2-0.5b \
         --task tnews --policy ffn --port 8080
 
+    # input-adaptive precision: per-cluster plans, routed per request
+    # (docs/adaptive-precision.md; tag requests with X-SAMP-Traffic-Class
+    # or the 'traffic_class' JSON field for task: routing)
+    ... --clusters length:8,16
+
     curl -s localhost:8080/v1/encode -d '{"tokens": [2, 17, 9, 41]}'
     curl -sN localhost:8080/v1/generate -d '{"prompt": [2, 17], "max_tokens": 8}'
     curl -s localhost:8080/metrics
@@ -29,9 +34,10 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.data.pipeline import make_task
-from repro.launch.cli import add_serving_flags, resolve_task
+from repro.launch.cli import (add_serving_flags, parse_cluster_model,
+                              resolve_task)
 from repro.launch.mesh import make_serving_mesh
-from repro.launch.serve import build_model
+from repro.launch.serve import build_model, build_routed_model
 from repro.serve import EncoderServeEngine, ServeEngine
 from repro.serve.frontend import HTTPFrontend
 from repro.toolkit.registry import get_target
@@ -49,32 +55,56 @@ def build_frontend(args, *, log=print) -> HTTPFrontend:
     cfg = get_config(args.arch).reduced()
     task_name = resolve_task(cfg, args.task)
     mesh = make_serving_mesh(args.mesh)
+    cluster_model = parse_cluster_model(args.clusters)
     encoder = decode = None
+    decode_router = None
     if task_name == "lm":
-        params, plan, precision = build_model(
-            cfg, args.policy, seed=args.seed, plan_file=args.plan,
-            strategy=args.strategy, max_latency=args.max_latency, log=log)
+        if cluster_model is not None:
+            decode_router, entry = build_routed_model(
+                cfg, args.policy, cluster_model, seed=args.seed,
+                plan_file=args.plan, max_len=args.max_len, log=log)
+            params, plan, precision = (entry.params, entry.plan,
+                                       entry.precision)
+        else:
+            params, plan, precision = build_model(
+                cfg, args.policy, seed=args.seed, plan_file=args.plan,
+                strategy=args.strategy, max_latency=args.max_latency,
+                log=log)
     else:
         task = make_task(task_name, vocab_size=cfg.vocab_size,
                          seq_len=args.max_len)
         spec = get_target(TARGET_FOR_TASK_KIND[task.kind])
         head_kind = "ner" if spec.token_level else "cls"
-        params, plan, precision = build_model(
-            cfg, args.policy, seed=args.seed,
-            head=(head_kind, max(task.n_classes, 1)), plan_file=args.plan,
-            strategy=args.strategy, max_latency=args.max_latency, log=log)
+        head = (head_kind, max(task.n_classes, 1))
+        router = None
+        if cluster_model is not None:
+            # a PlanRouter binds to ONE runtime: route the encoder (the
+            # served task); a co-mounted decode engine serves the default
+            # member unrouted
+            router, entry = build_routed_model(
+                cfg, args.policy, cluster_model, seed=args.seed, head=head,
+                plan_file=args.plan, max_len=args.max_len, log=log)
+            params, plan, precision = (entry.params, entry.plan,
+                                       entry.precision)
+        else:
+            params, plan, precision = build_model(
+                cfg, args.policy, seed=args.seed, head=head,
+                plan_file=args.plan, strategy=args.strategy,
+                max_latency=args.max_latency, log=log)
         encoder = EncoderServeEngine(cfg, params, plan, target=spec,
                                      max_batch=args.slots,
                                      max_wait=args.max_wait,
                                      max_len=args.max_len,
-                                     backend=args.backend, mesh=mesh)
+                                     backend=args.backend, mesh=mesh,
+                                     router=router)
     if cfg.supports_decode:
         decode = ServeEngine(cfg, params, plan, batch_slots=args.slots,
                              max_len=args.max_len, seed=args.seed,
                              cache_dtype=jnp.float32,
                              backend=args.backend, mesh=mesh,
                              page_size=args.page_size,
-                             kv_cache=args.kv_dtype, precision=precision)
+                             kv_cache=args.kv_dtype, precision=precision,
+                             router=decode_router)
     return HTTPFrontend(encoder=encoder, decode=decode, host=args.host,
                         port=args.port, max_pending=args.max_pending,
                         default_deadline_s=args.deadline_s, log=log)

@@ -241,6 +241,7 @@ def capture_stats(params: dict, batches: Sequence[dict], cfg: ArchConfig,
                   precision: Optional[PrecisionPlan] = None,
                   hist_sites: tuple[str, ...] = HIST_SITES,
                   compute_dtype=jnp.float32,
+                  clusters: Optional[Sequence] = None,
                   **calib_kw) -> dict[str, dict[str, float]]:
     """Run calibration batches through the float model with observers on and
     reduce per-(layer, site) statistics to amax values.
@@ -268,7 +269,25 @@ def capture_stats(params: dict, batches: Sequence[dict], cfg: ArchConfig,
     ``tests/test_mesh_serving.py`` pins sharded == unsharded stats.
 
     Returns {"layer{i}": {site: amax}}.
+
+    Cluster-conditional capture (the input-adaptive path, see
+    :mod:`repro.adaptive`): ``clusters=`` is a sequence aligned with
+    ``batches`` of per-row cluster-id vectors (shape (B,), ints). Rows are
+    partitioned into cluster-pure sub-batches and the observers aggregate
+    per (cluster, layer, site) — including the per-head ``k_cache`` /
+    ``v_cache`` vector sites. Because every observation is a max-reduction,
+    partitioning rows is *exact*: each cluster's amax is the amax over
+    precisely its own rows. The return shape becomes
+    ``{cluster_id: {"layer{i}": {site: amax}}}``. When ``precision`` is a
+    :class:`~repro.core.plan.PlanSet`, each cluster's member plan governs
+    its calibrator selection.
     """
+    if clusters is not None:
+        return _capture_stats_clustered(
+            params, batches, cfg, plan, scheme, clusters,
+            calibrator=calibrator, precision=precision,
+            hist_sites=hist_sites, compute_dtype=compute_dtype, **calib_kw)
+
     def site_calibrator(layer_idx: int, site: str) -> str:
         if calibrator is not None:
             return calibrator
@@ -339,6 +358,37 @@ def capture_stats(params: dict, batches: Sequence[dict], cfg: ArchConfig,
     for key, cal in cals.items():
         layer, site = key.split("/", 1)
         out.setdefault(layer, {})[site] = float(cal.compute_amax())
+    return out
+
+
+def _capture_stats_clustered(params, batches, cfg, plan, scheme, clusters,
+                             *, precision=None, **kw):
+    """Partition calibration rows by cluster id and capture per-cluster
+    stats (see :func:`capture_stats`). ``precision`` may be a PlanSet —
+    each cluster then calibrates under its own member plan."""
+    from repro.core.plan import PlanSet
+    ids = [np.asarray(c).reshape(-1).astype(np.int64) for c in clusters]
+    if len(ids) != len(batches):
+        raise ValueError(f"clusters has {len(ids)} entries for "
+                         f"{len(batches)} batches")
+    groups: dict[int, list] = {}
+    for batch, cid in zip(batches, ids):
+        sizes = {np.asarray(v).shape[0] for v in jax.tree_util.tree_leaves(
+            batch)}
+        if sizes != {len(cid)}:
+            raise ValueError(f"cluster-id vector of length {len(cid)} does "
+                             f"not match batch row counts {sorted(sizes)}")
+        for c in sorted({int(x) for x in cid}):
+            rows = np.nonzero(cid == c)[0]
+            sub = jax.tree_util.tree_map(lambda a: np.asarray(a)[rows],
+                                         batch)
+            groups.setdefault(c, []).append(sub)
+    out = {}
+    for c, bs in sorted(groups.items()):
+        member = (precision.plan_for(c)
+                  if isinstance(precision, PlanSet) else precision)
+        out[c] = capture_stats(params, bs, cfg, plan, scheme,
+                               precision=member, **kw)
     return out
 
 

@@ -39,10 +39,14 @@ class EncoderServeEngine:
                  max_batch: int = 8, max_wait: float = 0.0,
                  max_len: int = 256, compute_dtype=jnp.float32,
                  runtime: Optional[Runtime] = None,
-                 backend="reference", mesh=None):
+                 backend="reference", mesh=None, router=None):
         # ``backend`` names the compute backend (repro.kernels.backend) for
         # the engine's Runtime, ``mesh`` the serving mesh its executables
         # are placed over; both ignored when a runtime is shared in.
+        # ``router`` (a repro.adaptive.PlanRouter) makes serving
+        # input-adaptive: requests are clustered at admission and each
+        # cluster-pure micro-batch runs its cluster's (params, plan)
+        # through a per-cluster Runtime sibling.
         if isinstance(target, str):
             # lazy: repro.toolkit imports repro.serve for the facade
             from repro.toolkit.registry import get_target
@@ -63,6 +67,9 @@ class EncoderServeEngine:
             backend=backend, mesh=mesh)
         self.batcher = MicroBatcher(max_batch=max_batch, max_wait=max_wait,
                                     max_len=max_len)
+        self.router = router
+        if router is not None and not router.bound:
+            router.bind(self.runtime)
         self._stats = {"requests": 0, "batches": 0, "retired": 0,
                        "batched_rows": 0}
 
@@ -76,6 +83,8 @@ class EncoderServeEngine:
                              f"max_len {self.max_len}")
         if req.segments is not None and len(req.segments) != len(req.tokens):
             raise ValueError("segments length must match tokens")
+        if self.router is not None:
+            self.router.admit(req)      # stamps req.cluster before queueing
         self.batcher.submit(req, now)
         self._stats["requests"] += 1
 
@@ -98,7 +107,13 @@ class EncoderServeEngine:
             inputs = {"tokens": tokens}
             if self.cfg.num_segments:
                 inputs["segments"] = segments
-            logits = self.runtime.encode(self.params, inputs, lengths)
+            if self.router is not None:
+                # batches are cluster-pure by construction (the MicroBatcher
+                # keys queues on (bucket, cluster)), so one entry serves all
+                entry = self.router.entry(reqs[0].cluster)
+                logits = entry.runtime.encode(entry.params, inputs, lengths)
+            else:
+                logits = self.runtime.encode(self.params, inputs, lengths)
             for i, req in enumerate(reqs):
                 row = logits[i]
                 if self.target.token_level:

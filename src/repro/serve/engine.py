@@ -43,6 +43,10 @@ class Request:
     max_tokens: int = 32
     temperature: float = 0.0
     eos_id: Optional[int] = None
+    # adaptive routing (see repro.adaptive): tag from the client, cluster
+    # id assigned at admission — decode batches stay cluster-pure
+    traffic_class: Optional[str] = None
+    cluster: int = 0
     # engine-filled:
     output: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
@@ -62,7 +66,7 @@ class ServeEngine:
                  page_size: Optional[int] = None,
                  kv_cache: Optional[str] = None,
                  pool_pages: Optional[int] = None,
-                 precision=None):
+                 precision=None, router=None):
         # ``backend`` names the compute backend (repro.kernels.backend) the
         # engine's Runtime executes on, ``mesh`` the serving mesh it places
         # executables over; both are ignored when a runtime is passed in
@@ -76,9 +80,24 @@ class ServeEngine:
         # (a PrecisionPlan) when given, else float. ``pool_pages`` sizes the
         # shared page pool (default: no oversubscription —
         # slots * pages_per_slot).
+        # ``router`` (a repro.adaptive.PlanRouter) makes decode serving
+        # input-adaptive: admission stamps each request's cluster, the slot
+        # scheduler keeps the live batch cluster-pure, and every tick runs
+        # the active cluster's (params, plan) executable. The KV-cache tree
+        # is SHARED across clusters (slots outlive cluster switches), so a
+        # routed decode deployment requires uniform kv_schemes across the
+        # PlanSet members.
         if not cfg.supports_decode:
             raise ValueError(f"{cfg.name} is encoder-only; no decode — "
                              f"serve it through EncoderServeEngine")
+        if router is not None:
+            if not router.uniform_kv():
+                raise ValueError(
+                    "routed decode shares one KV-cache tree across "
+                    "clusters: every PlanSet member must name the same "
+                    "per-layer kv_cache schemes")
+            if precision is None:
+                precision = router.planset.plan_for(router.planset.default)
         self.cfg = cfg
         self.params = params
         self.plan = plan
@@ -110,21 +129,29 @@ class ServeEngine:
         elif kv_cache not in (None, "float"):
             raise ValueError("kv_cache quantization needs the paged layout; "
                              "pass page_size= as well")
-        self.sched = SlotScheduler(batch_slots, pool=self.pool)
+        self.sched = SlotScheduler(batch_slots, pool=self.pool,
+                                   cluster_pure=router is not None)
         self.runtime = runtime or Runtime(cfg, plan, scheme=scheme,
                                           precision=precision,
                                           compute_dtype=compute_dtype,
                                           backend=backend, mesh=mesh)
+        self.router = router
+        if router is not None and not router.bound:
+            router.bind(self.runtime)
         self.caches = T.init_caches(cfg, plan, batch_slots, max_len,
                                     cache_dtype, **cache_kw)
         self._fresh1 = T.init_caches(cfg, plan, 1, max_len, cache_dtype,
                                      **{**cache_kw, "num_pages": 1}
                                      if cache_kw else {})
-        # resolve the executable once; ticks pay no key-hashing cost
-        self._decode = self.runtime.decode_fn(params, self.caches)
+        # resolve executables once; ticks pay no key-hashing cost. Routed
+        # engines resolve lazily per cluster (each sibling caches its own
+        # executable under its (fingerprint, cluster) key).
+        self._decode = (None if router is not None
+                        else self.runtime.decode_fn(params, self.caches))
+        self._decode_by_cluster: dict[int, object] = {}
         self.rng = np.random.default_rng(seed)
         self._stats = {"ticks": 0, "tokens": 0, "retired": 0, "stalls": 0,
-                       "preemptions": 0}
+                       "preemptions": 0, "requests": 0}
         # set when a deadlock preemption proves the pool cannot hold the
         # current working set: admission pauses until pages are freed, so
         # preempted requests don't thrash straight back into a slot
@@ -148,7 +175,10 @@ class ServeEngine:
         if len(req.prompt) + req.max_tokens > self.max_len:
             raise ValueError(f"prompt+max_tokens exceeds max_len "
                              f"{self.max_len}")
+        if self.router is not None:
+            self.router.admit(req)      # stamps req.cluster before queueing
         self.sched.submit(req)
+        self._stats["requests"] += 1
 
     def _reset_slot(self, s: int) -> None:
         """Zero slot s's cache rows (leaves carry batch on axis 1, after the
@@ -255,8 +285,19 @@ class ServeEngine:
             active[s] = True
         pages = (jnp.asarray(self.pool.table) if self.pool is not None
                  else None)
-        logits, self.caches = self._decode(
-            self.params, self.caches, tokens, pos, active, pages)
+        if self.router is not None:
+            # cluster-pure batch: the scheduler guarantees every live slot
+            # shares one cluster — run that cluster's executable + params
+            entry = self.router.entry(self.sched.active_cluster)
+            decode = self._decode_by_cluster.get(entry.cluster)
+            if decode is None:
+                decode = entry.runtime.decode_fn(entry.params, self.caches)
+                self._decode_by_cluster[entry.cluster] = decode
+            step_params = entry.params
+        else:
+            decode, step_params = self._decode, self.params
+        logits, self.caches = decode(
+            step_params, self.caches, tokens, pos, active, pages)
         logits = np.asarray(jax.device_get(logits), np.float32)
         self._stats["ticks"] += 1
         self._stats["tokens"] += len(live)

@@ -142,6 +142,31 @@ class HTTPFrontend:
             reg.gauge("samp_runtime_executables",
                       "distinct compiled executables in the runtime cache",
                       labels, fn=sample("executables"))
+            # adaptive-routing families — always exported (CORE_METRICS):
+            # an unrouted engine books every request under cluster "0" and
+            # reports one active plan
+            router = getattr(engine, "router", None)
+            if router is not None:
+                for c in sorted(router.requests_by_cluster):
+                    reg.counter(
+                        "samp_cluster_requests_total",
+                        "requests assigned to each traffic cluster at "
+                        "admission", labels={**labels, "cluster": str(c)},
+                        fn=(lambda r=router, c=c:
+                            float(r.requests_by_cluster[c])))
+                reg.gauge("samp_active_plans",
+                          "distinct precision-plan fingerprints live in "
+                          "the deployment", labels,
+                          fn=lambda r=router: float(r.active_plans))
+            else:
+                reg.counter("samp_cluster_requests_total",
+                            "requests assigned to each traffic cluster at "
+                            "admission", labels={**labels, "cluster": "0"},
+                            fn=(lambda e=engine:
+                                float(e._stats.get("requests", 0))))
+                reg.gauge("samp_active_plans",
+                          "distinct precision-plan fingerprints live in "
+                          "the deployment", labels, fn=lambda: 1.0)
 
     # -- lifecycle -----------------------------------------------------------
     async def start(self) -> "HTTPFrontend":
@@ -287,6 +312,20 @@ class HTTPFrontend:
                 400, f"{key!r} length {len(v)} exceeds max_len {max_len}")
         return v
 
+    @staticmethod
+    def _traffic_class(req, payload: dict) -> Optional[str]:
+        """The request's traffic-class tag: the ``traffic_class`` JSON
+        field when present, else the ``X-SAMP-Traffic-Class`` header
+        (headers arrive lowercased). None when neither is given — the
+        router then clusters on content alone."""
+        tc = payload.get("traffic_class")
+        if tc is None:
+            tc = req.headers.get("x-samp-traffic-class")
+        if tc is not None and (not isinstance(tc, str) or not tc):
+            raise P.ProtocolError(400, "'traffic_class' must be a "
+                                       "non-empty string")
+        return tc
+
     def _deadline(self, payload: dict) -> Optional[float]:
         ms = payload.get("deadline_ms")
         if ms is None:
@@ -317,9 +356,10 @@ class HTTPFrontend:
         loop = asyncio.get_running_loop()
         uid = next(self._uids)
         fr = FrontendRequest(uid=uid, kind="encode",
-                             engine_req=EncoderRequest(uid=uid,
-                                                       tokens=tokens,
-                                                       segments=segments),
+                             engine_req=EncoderRequest(
+                                 uid=uid, tokens=tokens, segments=segments,
+                                 traffic_class=self._traffic_class(req,
+                                                                   payload)),
                              loop=loop, future=loop.create_future(),
                              deadline=deadline)
         reason = self.driver.submit(fr)
@@ -379,7 +419,9 @@ class HTTPFrontend:
                                                 max_tokens=max_tokens,
                                                 temperature=float(
                                                     temperature),
-                                                eos_id=eos_id),
+                                                eos_id=eos_id,
+                                                traffic_class=self.
+                                                _traffic_class(req, payload)),
                              loop=loop, tokens=asyncio.Queue(),
                              deadline=deadline)
         reason = self.driver.submit(fr)

@@ -48,6 +48,8 @@ CORE_METRICS = (
     "samp_request_latency_seconds",
     "samp_kv_cache_bytes",
     "samp_kv_pages_in_use",
+    "samp_cluster_requests_total",
+    "samp_active_plans",
 )
 
 

@@ -111,7 +111,8 @@ class Runtime:
                  min_batch: int = 1, min_len: int = 8,
                  max_len: Optional[int] = None,
                  chunk: Optional[int] = T.DEFAULT_CHUNK,
-                 backend="reference", mesh=None):
+                 backend="reference", mesh=None,
+                 cluster: Optional[int] = None):
         from repro.distributed.sharding import Rules, mesh_fingerprint
         from repro.kernels.backend import get_backend
         self.cfg = cfg
@@ -143,17 +144,24 @@ class Runtime:
         # Each component exists because the same plan compiles to
         # *different* executables per backend (reference XLA vs fused
         # Pallas) AND per mesh topology (different shardings, different
-        # collectives), so neither switch may collide.
+        # collectives), so neither switch may collide. ``cluster`` (the
+        # adaptive-routing dimension, None for unrouted deployments) keeps
+        # two clusters distinct even when per-cluster autotune landed
+        # byte-identical plans — their calibrated scales still differ, so
+        # a routed deployment always holds exactly K entries per bucket.
+        self.cluster = cluster
         self._plan_key = (self.backend.name,
                           precision.fingerprint() if precision is not None
                           else hash((plan, scheme)),
-                          mesh_fingerprint(mesh))
+                          mesh_fingerprint(mesh),
+                          cluster)
         self._exe: dict[tuple, Callable] = {}
         self._stats = {"calls": 0, "traces": 0,
                        "real_tokens": 0, "padded_tokens": 0}
 
     def share(self, plan, *, scheme: Optional[T.QuantScheme] = None,
-              precision=None, backend=None, mesh="inherit") -> "Runtime":
+              precision=None, backend=None, mesh="inherit",
+              cluster: Optional[int] = None) -> "Runtime":
         """A sibling Runtime bound to a different (plan, scheme, precision,
         backend, mesh) that SHARES this runtime's executable cache and
         counters. Cache keys lead with (backend name, precision
@@ -162,14 +170,18 @@ class Runtime:
         topologies — share one runtime without key collisions, and still
         compile at most once per (backend, plan, mesh, kind, bucket).
         ``mesh`` defaults to this runtime's mesh; pass ``None`` to get an
-        explicitly unmeshed sibling."""
+        explicitly unmeshed sibling. ``cluster`` tags the sibling with a
+        traffic-cluster id (adaptive routing): the cache key grows that
+        dimension, so each cluster's member plan owns its own executables
+        even when plan content coincides."""
         rt = Runtime(self.cfg, plan, scheme=scheme or self.scheme,
                      precision=precision, compute_dtype=self.compute_dtype,
                      head=self.head, token_level=self.token_level,
                      min_batch=self.min_batch, min_len=self.min_len,
                      max_len=self.max_len, chunk=self.chunk,
                      backend=backend or self.backend,
-                     mesh=self.mesh if mesh == "inherit" else mesh)
+                     mesh=self.mesh if mesh == "inherit" else mesh,
+                     cluster=cluster)
         rt._exe = self._exe
         rt._stats = self._stats
         return rt
@@ -205,10 +217,13 @@ class Runtime:
         ``samp_build_info`` labels."""
         from repro.distributed.sharding import mesh_fingerprint
         fp = self._plan_key[1]
-        return {"backend": self.backend.name,
-                "plan": fp if isinstance(fp, str)
-                else f"structural:{fp & 0xFFFFFFFFFFFFFFFF:016x}",
-                "mesh": mesh_fingerprint(self.mesh)}
+        out = {"backend": self.backend.name,
+               "plan": fp if isinstance(fp, str)
+               else f"structural:{fp & 0xFFFFFFFFFFFFFFFF:016x}",
+               "mesh": mesh_fingerprint(self.mesh)}
+        if self.cluster is not None:
+            out["cluster"] = str(self.cluster)
+        return out
 
     @property
     def stats(self) -> dict:

@@ -37,6 +37,11 @@ class EncoderRequest:
     uid: int
     tokens: list[int]
     segments: Optional[list[int]] = None
+    # adaptive routing: the traffic-class tag the client sent (if any) and
+    # the cluster id the router assigned at admission — requests only batch
+    # with their own cluster, and the engine picks the cluster's plan
+    traffic_class: Optional[str] = None
+    cluster: int = 0
     # engine-filled:
     arrival: Optional[float] = None
     logits: Optional[np.ndarray] = None
@@ -118,7 +123,8 @@ class SlotScheduler:
     those pages' position rows before the ids can be reused).
     """
 
-    def __init__(self, slots: int, pool: Optional[PagePool] = None):
+    def __init__(self, slots: int, pool: Optional[PagePool] = None, *,
+                 cluster_pure: bool = False):
         self.slots = slots
         self.queue: deque = deque()
         self.active: list = [None] * slots
@@ -126,19 +132,55 @@ class SlotScheduler:
         self.evicted = 0        # cancellations + deadline evictions
         self.pool = pool
         self.freed_pages: list[int] = []
+        # adaptive routing: when True, admission keeps the live batch
+        # cluster-pure — every tick runs ONE executable, so all active
+        # slots must share one precision plan. Requests of other clusters
+        # wait (FIFO among themselves) until the batch drains.
+        self.cluster_pure = cluster_pure
 
     def submit(self, req) -> None:
         self.queue.append(req)
 
+    @property
+    def active_cluster(self) -> Optional[int]:
+        """Cluster id of the live batch (None when no slot is occupied)."""
+        for a in self.active:
+            if a is not None:
+                return getattr(a, "cluster", 0)
+        return None
+
     def admit(self) -> list[int]:
         """Fill free slots FIFO; returns the newly-occupied slot ids (their
-        per-slot state must be reset by the caller)."""
+        per-slot state must be reset by the caller). In ``cluster_pure``
+        mode only requests matching the live batch's cluster (or, on an
+        empty batch, the queue head's cluster) are admitted; skipped
+        requests keep their queue order."""
         newly = []
-        for s in range(self.slots):
-            if self.active[s] is None and self.queue:
-                self.active[s] = self.queue.popleft()
+        if not self.cluster_pure:
+            for s in range(self.slots):
+                if self.active[s] is None and self.queue:
+                    self.active[s] = self.queue.popleft()
+                    self.cursor[s] = 0
+                    newly.append(s)
+            return newly
+        free = [s for s in range(self.slots) if self.active[s] is None]
+        if not free or not self.queue:
+            return newly
+        current = self.active_cluster
+        if current is None:
+            current = getattr(self.queue[0], "cluster", 0)
+        skipped: deque = deque()
+        while free and self.queue:
+            req = self.queue.popleft()
+            if getattr(req, "cluster", 0) == current:
+                s = free.pop(0)
+                self.active[s] = req
                 self.cursor[s] = 0
                 newly.append(s)
+            else:
+                skipped.append(req)
+        skipped.extend(self.queue)
+        self.queue = skipped
         return newly
 
     def live(self) -> list[int]:
@@ -174,13 +216,21 @@ class SlotScheduler:
 
 
 class MicroBatcher:
-    """Per-bucket queues with size- and age-triggered flushing.
+    """Per-(bucket, cluster) queues with size- and age-triggered flushing.
 
-    ``submit`` files a request under ``bucket_size(len(tokens))``;
-    ``ready`` pops every batch that is due: a bucket with >= ``max_batch``
-    requests flushes a full batch, a bucket whose head has waited
+    ``submit`` files a request under ``(bucket_size(len(tokens)),
+    req.cluster)`` — requests only batch with their own length bucket AND
+    their own traffic cluster, so every micro-batch runs under exactly one
+    precision plan (cluster-pure batches, see :mod:`repro.adaptive`).
+    ``ready`` pops every batch that is due: a queue with >= ``max_batch``
+    requests flushes a full batch, a queue whose head has waited
     >= ``max_wait`` flushes whatever is there, and ``force=True`` drains
     everything (shutdown / synchronous callers).
+
+    The max-wait drain pass visits *every* queue on every call and flushes
+    each overdue one — a quiet cluster's partial batch can never be
+    stranded behind a busy sibling queue that keeps hitting the
+    ``max_batch`` trigger (``tests/test_adaptive.py`` pins this).
     """
 
     def __init__(self, *, max_batch: int = 8, max_wait: float = 0.0,
@@ -189,7 +239,7 @@ class MicroBatcher:
         self.max_wait = max_wait
         self.min_len = min_len
         self.max_len = max_len
-        self._queues: dict[int, deque] = {}
+        self._queues: dict[tuple[int, int], deque] = {}
         self.evicted = 0        # cancellations + deadline evictions
 
     def bucket(self, length: int) -> int:
@@ -199,21 +249,33 @@ class MicroBatcher:
         """File ``req``; returns the length bucket it landed in."""
         b = self.bucket(len(req.tokens))
         req.arrival = time.monotonic() if now is None else now
-        self._queues.setdefault(b, deque()).append(req)
+        key = (b, getattr(req, "cluster", 0))
+        self._queues.setdefault(key, deque()).append(req)
         return b
 
     def ready(self, now: Optional[float] = None,
               force: bool = False) -> list[tuple[int, list[EncoderRequest]]]:
-        """Pop and return every due batch as (length_bucket, requests)."""
+        """Pop and return every due batch as (length_bucket, requests);
+        each returned batch is cluster-pure (read ``reqs[0].cluster``)."""
         now = time.monotonic() if now is None else now
         out = []
-        for blen in sorted(self._queues):
-            q = self._queues[blen]
+        # every queue gets its own independent due-check: iterating a
+        # snapshot of ALL keys (not stopping at the first due one) is what
+        # guarantees overdue partial buckets all flush in this one tick
+        for key in sorted(self._queues):
+            q = self._queues[key]
             while q and (force or len(q) >= self.max_batch
                          or now - q[0].arrival >= self.max_wait):
-                out.append((blen, [q.popleft()
-                                   for _ in range(min(self.max_batch,
-                                                      len(q)))]))
+                out.append((key[0], [q.popleft()
+                                     for _ in range(min(self.max_batch,
+                                                        len(q)))]))
+        return out
+
+    def depth_by_cluster(self) -> dict[int, int]:
+        """Queued request count per cluster id (metrics surface)."""
+        out: dict[int, int] = {}
+        for (_b, c), q in self._queues.items():
+            out[c] = out.get(c, 0) + len(q)
         return out
 
     def evict(self, predicate) -> list[EncoderRequest]:

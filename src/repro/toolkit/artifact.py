@@ -20,7 +20,14 @@ the reloaded plan's ``fingerprint()`` is byte-identical to the recorded
 one, and no calibration batches are needed at deployment time.
 
 Version history: v1 bundles stored an ``EncoderPolicy`` (``policy`` key);
-they still load, through the lossless policy -> plan shim.
+they still load, through the lossless policy -> plan shim. v3 bundles are
+*adaptive*: they persist the FLOAT parameters plus a
+:class:`~repro.core.plan.PlanSet`, a serialized cluster model, and
+per-cluster calibration stats — loading rebuilds the K quantized trees
+deterministically via ``ptq.apply_plan`` (bit-identical to what was
+served, still no calibration batches) and can hand back a
+:class:`~repro.adaptive.PlanRouter`. Single-plan bundles keep writing v2,
+so existing deployments and fingerprints are untouched.
 """
 from __future__ import annotations
 
@@ -42,7 +49,8 @@ from repro.quant import ptq
 from repro.toolkit.registry import get_target
 
 METADATA = "artifact.json"
-VERSION = 2
+VERSION = 3                 # current max readable version
+SINGLE_PLAN_VERSION = 2     # what save_artifact writes (unchanged by v3)
 
 
 @dataclasses.dataclass
@@ -60,6 +68,29 @@ class Artifact:
     path: str
     compute_dtype: str = "float32"
     tokenizer: Optional[object] = None       # WordPieceTokenizer
+    # v3 adaptive bundles only:
+    planset: Optional[object] = None         # PlanSet
+    cluster_model: Optional[object] = None   # repro.adaptive ClusterModel
+    cluster_stats: Optional[dict] = None     # {cluster: {layer: {site: v}}}
+    float_params: Optional[dict] = None      # the shared float weight tree
+
+    @property
+    def adaptive(self) -> bool:
+        return self.planset is not None
+
+    def router(self, backend=None):
+        """Rebuild the :class:`~repro.adaptive.PlanRouter` a v3 bundle was
+        deployed with: each member plan re-quantizes the shared float tree
+        under its own cluster's stats (deterministic — bit-identical to the
+        trees that were served)."""
+        if not self.adaptive:
+            raise ValueError(f"{self.path}: not an adaptive (v3) bundle — "
+                             f"no PlanSet to route over")
+        from repro.adaptive import build_router
+        return build_router(self.cfg, self.float_params, self.planset,
+                            self.cluster_stats,
+                            cluster_model=self.cluster_model,
+                            scheme=self.scheme, backend=backend)
 
     @property
     def policy(self) -> PrecisionPlan:
@@ -119,7 +150,7 @@ def save_artifact(directory: str, *, cfg: ArchConfig,
     precision = as_plan(policy, dynamic_acts=scheme.dynamic_acts)
     os.makedirs(directory, exist_ok=True)
     meta = {
-        "version": VERSION,
+        "version": SINGLE_PLAN_VERSION,
         "arch": _cfg_to_dict(cfg),
         "plan": precision.to_dict(),
         "plan_fingerprint": precision.fingerprint(),
@@ -139,6 +170,56 @@ def save_artifact(directory: str, *, cfg: ArchConfig,
     os.rename(tmp, os.path.join(directory, METADATA))
     store.save(directory, 0, params, keep_last=1)
     return directory
+
+
+def save_adaptive_artifact(directory: str, *, cfg: ArchConfig, planset,
+                           cluster_model, cluster_stats: dict,
+                           float_params: dict,
+                           scheme: T.QuantScheme = T.QuantScheme(),
+                           task: Optional[TaskSpec] = None,
+                           target: str = "lm", n_out: int = 0,
+                           compute_dtype: str = "float32",
+                           tokenizer=None) -> str:
+    """Write an adaptive (v3) bundle: the FLOAT parameter tree plus the
+    PlanSet, the cluster model, and the per-cluster calibration stats.
+    The K quantized trees are NOT stored — ``load_artifact`` rebuilds them
+    deterministically with ``ptq.apply_plan`` (bit-identical, since the
+    inputs are identical)."""
+    if set(cluster_stats) - set(planset.cluster_ids):
+        raise ValueError(f"cluster_stats covers {sorted(cluster_stats)} but "
+                         f"the planset only {list(planset.cluster_ids)}")
+    os.makedirs(directory, exist_ok=True)
+    meta = {
+        "version": 3,
+        "arch": _cfg_to_dict(cfg),
+        "planset": planset.to_dict(),
+        "planset_fingerprint": planset.fingerprint(),
+        "cluster_model": cluster_model.to_dict(),
+        "cluster_model_fingerprint": cluster_model.fingerprint(),
+        "scheme": dataclasses.asdict(scheme),
+        # JSON objects key on strings; load restores the int cluster ids
+        "cluster_stats": {str(c): s for c, s in cluster_stats.items()},
+        "task": dataclasses.asdict(task) if task is not None else None,
+        "target": {"name": target, "n_out": n_out},
+        "param_dtype": _param_dtype(float_params),
+        "compute_dtype": str(jnp.dtype(compute_dtype)),
+        "tokenizer": ({"vocab": tokenizer.vocab,
+                       "granularity": tokenizer.granularity}
+                      if tokenizer is not None else None),
+    }
+    tmp = os.path.join(directory, METADATA + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump(meta, f, indent=1)
+    os.rename(tmp, os.path.join(directory, METADATA))
+    store.save(directory, 0, float_params, keep_last=1)
+    return directory
+
+
+def _coerce_stats(sites_by_layer: dict) -> dict:
+    # per-head KV-cache stats round-trip as lists; everything else is scalar
+    return {layer: {site: (v if isinstance(v, list) else float(v))
+                    for site, v in sites.items()}
+            for layer, sites in sites_by_layer.items()}
 
 
 def _precision_from_meta(meta: dict) -> PrecisionPlan:
@@ -168,12 +249,27 @@ def load_artifact(directory: str) -> Artifact:
         raise ValueError(f"artifact version {meta['version']} not in "
                          f"[1, {VERSION}]")
     cfg = _cfg_from_dict(meta["arch"])
-    precision = _precision_from_meta(meta)
+    adaptive = meta["version"] >= 3
+    planset = cluster_model = cluster_stats = None
+    if adaptive:
+        from repro.adaptive import PlanSet, cluster_model_from_dict
+        planset = PlanSet.from_dict(meta["planset"])
+        want = meta.get("planset_fingerprint")
+        if want is not None and planset.fingerprint() != want:
+            raise ValueError(
+                f"planset fingerprint mismatch: metadata says {want}, "
+                f"reloaded set hashes to {planset.fingerprint()} — the "
+                f"bundle's artifact.json was edited or corrupted")
+        cluster_model = cluster_model_from_dict(meta["cluster_model"])
+        cluster_stats = {int(c): _coerce_stats(s)
+                         for c, s in meta["cluster_stats"].items()}
+        precision = planset.plan_for(planset.default)
+        stats = cluster_stats.get(planset.default,
+                                  cluster_stats[sorted(cluster_stats)[0]])
+    else:
+        precision = _precision_from_meta(meta)
+        stats = _coerce_stats(meta["stats"])
     scheme = T.QuantScheme(**meta["scheme"])
-    # per-head KV-cache stats round-trip as lists; everything else is scalar
-    stats = {layer: {site: (v if isinstance(v, list) else float(v))
-                     for site, v in sites.items()}
-             for layer, sites in meta["stats"].items()}
     task = TaskSpec(**meta["task"]) if meta["task"] is not None else None
     target_name = meta["target"]["name"]
     n_out = int(meta["target"]["n_out"])
@@ -196,15 +292,30 @@ def load_artifact(directory: str) -> Artifact:
         head = get_target(target_name).init(khead, cfg, n_out, dtype)
         if head is not None:
             template["head"] = head
+        if adaptive:
+            # v3 stores the float tree itself; quantization happens below
+            return template
         qtemplate, _ = ptq.apply_plan(template, cfg, precision, stats,
                                       scheme=scheme)
         return qtemplate
 
     qtemplate = jax.eval_shape(build_template)
-    plan = T.build_plan(cfg, precision)
-    params = store.restore(directory, 0, qtemplate)
+    restored = store.restore(directory, 0, qtemplate)
+    float_params = None
+    if adaptive:
+        # rebuild the default member's quantized tree; the same call per
+        # member happens in Artifact.router() — identical inputs, so the
+        # trees are bit-identical to the ones that were saved/served
+        float_params = restored
+        params, plan = ptq.apply_plan(float_params, cfg, precision, stats,
+                                      scheme=scheme)
+    else:
+        params = restored
+        plan = T.build_plan(cfg, precision)
     return Artifact(cfg=cfg, precision=precision, scheme=scheme, stats=stats,
                     params=params, plan=plan, task=task,
                     target_name=target_name, n_out=n_out, path=directory,
                     compute_dtype=meta.get("compute_dtype", "float32"),
-                    tokenizer=tokenizer)
+                    tokenizer=tokenizer, planset=planset,
+                    cluster_model=cluster_model, cluster_stats=cluster_stats,
+                    float_params=float_params)

@@ -1,21 +1,25 @@
-"""Plan linter CLI: validate a PrecisionPlan JSON before deploying it.
+"""Plan linter CLI: validate a PrecisionPlan or PlanSet JSON before deploy.
 
     PYTHONPATH=src python -m repro.toolkit.plan_lint plan.json
     PYTHONPATH=src python -m repro.toolkit.plan_lint plan.json --arch bert-base
-    PYTHONPATH=src python -m repro.toolkit.plan_lint plan.json --layers 12
+    PYTHONPATH=src python -m repro.toolkit.plan_lint planset.json --layers 12
 
-Checks, in order:
+The file kind is sniffed from the ``planset_version`` key — single-plan
+files lint exactly as before. Checks, in order:
 
 * the file parses as JSON and round-trips through
-  :meth:`PrecisionPlan.from_dict` (schema version, block names, weight /
-  activation scheme enums, calibrator names, float dtype — every
-  constraint the dataclass validators enforce);
+  :meth:`PrecisionPlan.from_dict` / :meth:`PlanSet.from_dict` (schema
+  version, block names, weight / activation scheme enums, calibrator
+  names, float dtype; for plansets additionally: unique non-negative
+  cluster ids, a member for the default cluster, uniform layer counts,
+  and each member's own schema — kv_cache schemes are v2-only, unknown
+  fields rejected per member);
 * re-serialization is content-identical (``fingerprint()`` of the loaded
-  plan equals the fingerprint of its canonical re-emission — catches
+  object equals the fingerprint of its canonical re-emission — catches
   silently-dropped unknown keys);
 * with ``--arch`` (registry name; ``--reduced`` for the CPU-container
-  shape) or ``--layers N``: the plan's layer count matches the target
-  architecture.
+  shape) or ``--layers N``: the layer count (every member's, for a
+  planset) matches the target architecture.
 
 Exit status 0 = clean (fingerprint printed), 1 = invalid. CI lints the
 golden plan under ``tests/data/`` with this tool.
@@ -25,25 +29,30 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+from typing import Union
 
-from repro.core.plan import PrecisionPlan
+from repro.core.plan import PlanSet, PrecisionPlan
 
 
 def lint(path: str, *, num_layers: int | None = None,
-         log=print) -> PrecisionPlan:
-    """Validate the plan file; raises ValueError on any violation."""
+         log=print) -> Union[PrecisionPlan, PlanSet]:
+    """Validate the plan/planset file; raises ValueError on any
+    violation."""
     try:
         with open(path) as f:
             raw = json.load(f)
     except json.JSONDecodeError as e:
         raise ValueError(f"{path}: not valid JSON: {e}") from e
+    kind = PlanSet if (isinstance(raw, dict)
+                       and "planset_version" in raw) else PrecisionPlan
     try:
-        plan = PrecisionPlan.from_dict(raw)
+        plan = kind.from_dict(raw)
     except (ValueError, KeyError, TypeError) as e:
         raise ValueError(f"{path}: schema violation: {e}") from e
-    reloaded = PrecisionPlan.from_json(plan.to_json())
+    reloaded = kind.from_json(plan.to_json())
     if reloaded.fingerprint() != plan.fingerprint():
-        raise ValueError(f"{path}: plan does not round-trip canonically")
+        raise ValueError(f"{path}: {kind.__name__} does not round-trip "
+                         f"canonically")
     if num_layers is not None and plan.num_layers != num_layers:
         raise ValueError(f"{path}: plan has {plan.num_layers} layers, "
                          f"target architecture has {num_layers}")

@@ -44,6 +44,11 @@ class AutotuneReport:
     accuracy: float                      # deployed dev accuracy, re-measured
     artifact_path: Optional[str] = None
     strategy: str = "prefix_grid"
+    # adaptive (clusters=) autotune only: the deployed PlanSet and the full
+    # per-cluster search record {cid: (points, recommendations, chosen)};
+    # the flat fields above then describe the DEFAULT cluster's search
+    planset: Optional[object] = None
+    per_cluster: Optional[dict] = None
 
     @property
     def plan(self) -> PrecisionPlan:
@@ -88,6 +93,11 @@ class SAMP:
         self.stats: Optional[dict] = None
         self.points: Optional[list[SweepPoint]] = None
         self.quantized: Optional[Pipeline] = None
+        # input-adaptive precision (repro.adaptive): set by
+        # calibrate(clusters=...) / apply_planset / autotune(clusters=...)
+        self.cluster_model = None
+        self.planset = None
+        self.router = None
         # True for facades rebuilt from an artifact: the bundle holds only
         # the quantized params, so the tuning workflow has no float model
         # to operate on — predict/eval/serve only.
@@ -132,6 +142,13 @@ class SAMP:
         samp.stats = art.stats
         samp.quantized = qpipe
         samp.deploy_only = True
+        if art.adaptive:
+            # v3 bundle: rebuild the router (K quantized trees, derived
+            # deterministically from the stored float tree) so serve()
+            # comes back input-adaptive; predict() runs the default member
+            samp.planset = art.planset
+            samp.cluster_model = art.cluster_model
+            samp.router = art.router(backend=qpipe.backend)
         return samp
 
     # -- convenience state ---------------------------------------------------
@@ -202,26 +219,68 @@ class SAMP:
     def calibrate(self, batches: Optional[Sequence[dict]] = None, *,
                   num_batches: int = 4, batch_size: int = 16,
                   calibrator: Optional[str] = None,
-                  precision: Optional[PrecisionPlan] = None, **kw) -> dict:
+                  precision: Optional[PrecisionPlan] = None,
+                  clusters=None, batch_classes=None, **kw) -> dict:
         """Observe activation ranges. Default batches come from the task's
         training stream (disjoint indices from fine-tuning).
 
         ``calibrator`` names one of the four PTQ calibrators
         (minmax/percentile/mse/entropy) for every site; ``precision``
         instead honors a plan's per-block calibrator choices. Default:
-        min-max everywhere (paper §4.1)."""
+        min-max everywhere (paper §4.1).
+
+        ``clusters`` (a :class:`repro.adaptive.ClusterModel`) switches to
+        cluster-conditional calibration: the model is fitted if it needs
+        fitting (EmbeddingKMeans), every batch row is assigned a cluster,
+        and the returned stats are keyed ``{cluster: {layer: {site:
+        amax}}}``. When no explicit batches are given, a synthetic stream
+        covering every cluster is generated (task batches are fixed-width,
+        so e.g. LengthBuckets would otherwise only ever observe one bin).
+        ``batch_classes`` optionally tags each provided batch with a
+        traffic class (for :class:`~repro.adaptive.TaskLabel`)."""
         params = self._require_params()
         if batches is None:
-            batches = [self.pipeline._model_inputs(
-                get_batch(self.task, 999 + i, batch_size))
-                for i in range(num_batches)]
+            if clusters is not None:
+                from repro.adaptive import clustered_synthetic_batches
+                batches, batch_classes = clustered_synthetic_batches(
+                    self.cfg, clusters,
+                    batches_per_cluster=max(
+                        1, num_batches // clusters.num_clusters),
+                    batch_size=batch_size, max_len=self.task.seq_len)
+            else:
+                batches = [self.pipeline._model_inputs(
+                    get_batch(self.task, 999 + i, batch_size))
+                    for i in range(num_batches)]
+        if clusters is not None:
+            from repro.adaptive import batch_clusters, fit_cluster_model
+            fit_cluster_model(clusters, params, batches, self.cfg)
+            kw["clusters"] = batch_clusters(clusters, batches,
+                                            batch_classes=batch_classes)
+            self.cluster_model = clusters
         self.stats = self.engine.calibrate(params, batches,
                                            calibrator=calibrator,
                                            precision=precision, **kw)
         # sweep results and applied quantization depended on the old stats
         self.points = None
         self.quantized = None
+        self.planset = None
+        self.router = None
         return self.stats
+
+    @property
+    def _clustered(self) -> bool:
+        """True when the current stats are cluster-keyed."""
+        return bool(self.stats) and all(isinstance(k, int)
+                                        for k in self.stats)
+
+    def _default_stats(self) -> dict:
+        """The flat {layer: {site: amax}} view single-plan paths consume:
+        the default cluster's slice when stats are cluster-keyed."""
+        if not self._clustered:
+            return self.stats
+        d = (self.planset.default if self.planset is not None
+             else sorted(self.stats)[0])
+        return self.stats.get(d, self.stats[sorted(self.stats)[0]])
 
     # -- step 2: search --------------------------------------------------------
     def sweep(self, *, strategy: str = "prefix_grid", stride: int = 1,
@@ -232,6 +291,19 @@ class SAMP:
         params = self._require_params()
         if self.stats is None:
             self.calibrate()
+        eval_fn, latency_fn = self._search_fns(eval_batches, eval_batch_size)
+        kw = dict(strategy_kw)
+        if strategy in ("prefix_grid", "latency_budget"):
+            kw["stride"] = stride
+            if modes is not None:
+                kw["modes"] = modes
+        self.points = self.engine.search(strategy, params,
+                                         self._default_stats(),
+                                         eval_fn, latency_fn, **kw)
+        return self.points
+
+    def _search_fns(self, eval_batches: int, eval_batch_size: int):
+        """(eval_fn, latency_fn) pair every search strategy consumes."""
 
         def eval_fn(qp, plan, pol):
             return self.pipeline.with_policy(qp, plan, pol).eval(
@@ -241,14 +313,7 @@ class SAMP:
             self.cfg, batch=self.latency_batch, seq=self.task.seq_len,
             scheme=self.pipeline.scheme,
             compute_dtype=self.pipeline.compute_dtype)
-        kw = dict(strategy_kw)
-        if strategy in ("prefix_grid", "latency_budget"):
-            kw["stride"] = stride
-            if modes is not None:
-                kw["modes"] = modes
-        self.points = self.engine.search(strategy, params, self.stats,
-                                         eval_fn, latency_fn, **kw)
-        return self.points
+        return eval_fn, latency_fn
 
     # -- step 3: recommend -----------------------------------------------------
     def recommend(self, *, max_latency: Optional[float] = None,
@@ -271,13 +336,51 @@ class SAMP:
         # fail now, not at serve time, if the deployment's compute backend
         # cannot execute a scheme the plan names
         self.pipeline.backend.validate_plan(precision)
-        qparams, qplan = self.engine.apply(params, self.stats, precision)
+        qparams, qplan = self.engine.apply(params, self._default_stats(),
+                                           precision)
         self.quantized = self.pipeline.with_policy(qparams, qplan, precision)
         return self.quantized
 
+    def apply_planset(self, planset):
+        """Deploy a :class:`~repro.core.plan.PlanSet`: quantize the float
+        tree once per member under that cluster's calibration stats and
+        build the :class:`~repro.adaptive.PlanRouter` serving will route
+        through. The default member also binds as ``self.quantized`` so
+        ``predict()``/``eval()`` keep working unrouted. Requires
+        ``calibrate(clusters=...)`` first (the router needs both the
+        cluster model and per-cluster stats)."""
+        params = self._require_params()
+        if self.cluster_model is None or not self._clustered:
+            raise ValueError(
+                "apply_planset needs cluster-conditional calibration: call "
+                "calibrate(clusters=<ClusterModel>) first")
+        if self.cluster_model.num_clusters != len(planset):
+            raise ValueError(
+                f"cluster model yields {self.cluster_model.num_clusters} "
+                f"clusters but the planset has {len(planset)} members")
+        from repro.adaptive import build_router
+        for _cid, member in planset:
+            self.pipeline.backend.validate_plan(member)
+        self.router = build_router(self.cfg, params, planset, self.stats,
+                                   cluster_model=self.cluster_model,
+                                   scheme=self.pipeline.scheme,
+                                   float_plan=self.engine.float_plan)
+        self.planset = planset
+        d = self.router.entry(planset.default)
+        self.quantized = self.pipeline.with_policy(d.params, d.plan,
+                                                   d.precision)
+        return self.router
+
     def apply_plan_file(self, path: str) -> Pipeline:
-        """Load a saved ``plan.json`` and deploy it (the CLI's ``--plan``)."""
-        return self.apply(PrecisionPlan.load(path))
+        """Load a saved ``plan.json`` or ``planset.json`` and deploy it
+        (the CLI's ``--plan``): plansets route, single plans bind
+        directly."""
+        from repro.core.plan import load_plan_or_planset
+        loaded = load_plan_or_planset(path)
+        if isinstance(loaded, PrecisionPlan):
+            return self.apply(loaded)
+        self.apply_planset(loaded)
+        return self.quantized
 
     # -- the one call ----------------------------------------------------------
     def autotune(self, *, strategy: str = "prefix_grid",
@@ -285,7 +388,7 @@ class SAMP:
                  min_accuracy: Optional[float] = None,
                  prefer: Optional[str] = None, stride: int = 1,
                  eval_batches: int = 3, eval_batch_size: int = 64,
-                 save_to: Optional[str] = None,
+                 save_to: Optional[str] = None, clusters=None,
                  **strategy_kw) -> AutotuneReport:
         """calibrate -> search -> allocator recommend -> apply, one call.
 
@@ -300,10 +403,26 @@ class SAMP:
         bundle (the chosen plan itself is ``report.plan``). Sweep points
         cached by an earlier sweep()/autotune() on the same weights+stats
         are reused (so ``strategy``/``stride``/``eval_*`` only apply to a
-        fresh search); finetune() and calibrate() invalidate the cache."""
+        fresh search); finetune() and calibrate() invalidate the cache.
+
+        ``clusters`` (a :class:`repro.adaptive.ClusterModel`) — or a prior
+        ``calibrate(clusters=...)`` — switches to input-adaptive autotune:
+        one search per cluster over that cluster's stats, the winners
+        assembled into a PlanSet and deployed through a PlanRouter (see
+        docs/adaptive-precision.md). The report's flat fields then
+        describe the default cluster; ``report.planset`` /
+        ``report.per_cluster`` carry the full picture."""
         self._require_params()
-        if self.stats is None:
+        if clusters is not None:
+            self.calibrate(clusters=clusters)
+        elif self.stats is None:
             self.calibrate()
+        if self._clustered:
+            return self._autotune_adaptive(
+                strategy=strategy, max_latency=max_latency,
+                min_accuracy=min_accuracy, prefer=prefer, stride=stride,
+                eval_batches=eval_batches, eval_batch_size=eval_batch_size,
+                save_to=save_to, **strategy_kw)
         if self.points is None:
             if strategy == "latency_budget" and max_latency is not None:
                 strategy_kw.setdefault("max_latency", max_latency)
@@ -331,15 +450,68 @@ class SAMP:
                               chosen=chosen, accuracy=acc,
                               artifact_path=path, strategy=strategy)
 
+    def _autotune_adaptive(self, *, strategy: str, max_latency, min_accuracy,
+                           prefer, stride: int, eval_batches: int,
+                           eval_batch_size: int, save_to,
+                           **strategy_kw) -> AutotuneReport:
+        """The clusters= branch of autotune: one search per cluster ->
+        PlanSet -> router deployment."""
+        from repro.adaptive import autotune_planset
+        from repro.core.plan import PlanSet
+        params = self._require_params()
+        eval_fn, latency_fn = self._search_fns(eval_batches, eval_batch_size)
+        kw = dict(strategy_kw)
+        if strategy in ("prefix_grid", "latency_budget"):
+            kw["stride"] = stride
+            if strategy == "latency_budget" and max_latency is not None:
+                kw.setdefault("max_latency", max_latency)
+        planset, details = autotune_planset(
+            self.engine, params, self.stats, eval_fn=eval_fn,
+            latency_fn=latency_fn, strategy=strategy,
+            max_latency=max_latency, min_accuracy=min_accuracy,
+            prefer=prefer, **kw)
+        # clusters the calibration stream never observed borrow the default
+        # member (the router would fall back to it anyway; the planset must
+        # still cover every cluster the model can emit)
+        missing = (set(range(self.cluster_model.num_clusters))
+                   - set(planset.cluster_ids))
+        if missing:
+            fallback = planset.plan_for(planset.default)
+            planset = PlanSet(planset.members
+                              + tuple((c, fallback) for c in sorted(missing)),
+                              default=planset.default)
+        self.apply_planset(planset)
+        acc = self.quantized.eval(batches=eval_batches,
+                                  batch_size=eval_batch_size)
+        path = self.save(save_to) if save_to else None
+        d_points, d_recs, d_chosen = details[min(details)]
+        self.points = d_points
+        return AutotuneReport(points=d_points, recommendations=d_recs,
+                              chosen=d_chosen, accuracy=acc,
+                              artifact_path=path, strategy=strategy,
+                              planset=planset, per_cluster=details)
+
     # -- persistence / serving ---------------------------------------------------
     def save(self, directory: str) -> str:
-        """Write the deployed pipeline (policy + stats + quantized params)
-        as an artifact bundle."""
+        """Write the deployed pipeline as an artifact bundle: a v2 bundle
+        (quantized params + plan + stats) for single-plan deployments, a
+        v3 adaptive bundle (float params + PlanSet + cluster model +
+        per-cluster stats) when a planset is deployed."""
         if self.quantized is None:
             raise ValueError("nothing to save: call autotune() or apply() "
                              "first")
         if self.stats is None:
             raise ValueError("missing calibration stats")
+        if self.planset is not None:
+            return A.save_adaptive_artifact(
+                directory, cfg=self.cfg, planset=self.planset,
+                cluster_model=self.cluster_model, cluster_stats=self.stats,
+                float_params=self.pipeline.params,
+                scheme=self.pipeline.scheme, task=self.task,
+                target=self.pipeline.target.spec.name,
+                n_out=self.pipeline.target.n_out,
+                compute_dtype=str(jnp.dtype(self.quantized.compute_dtype)),
+                tokenizer=self.pipeline.tokenizer.tokenizer)
         return A.save_artifact(
             directory, cfg=self.cfg, policy=self.quantized.precision,
             stats=self.stats, params=self.quantized.params,
@@ -372,6 +544,8 @@ class SAMP:
             raise ValueError("pipeline has no params to serve")
         backend = kw.pop("backend", None)
         mesh = kw.pop("mesh", pipe.mesh)
+        # a deployed PlanSet serves routed by default; router=None opts out
+        router = kw.pop("router", self.router)
         if pipe.cfg.supports_decode and pipe.target.spec.name == "lm":
             kw.setdefault("precision", pipe.precision)
             return ServeEngine(pipe.cfg, pipe.params, pipe.plan,
@@ -379,10 +553,12 @@ class SAMP:
                                max_len=max_len,
                                compute_dtype=pipe.compute_dtype,
                                backend=(pipe.backend if backend is None
-                                        else backend), mesh=mesh, **kw)
+                                        else backend), mesh=mesh,
+                               router=router, **kw)
         enc_kw = dict(target=pipe.target.spec, scheme=pipe.scheme,
                       max_batch=kw.pop("max_batch", batch_slots),
-                      max_len=max_len, compute_dtype=pipe.compute_dtype)
+                      max_len=max_len, compute_dtype=pipe.compute_dtype,
+                      router=router)
         if (backend is not None
                 and get_backend(backend).name != pipe.backend.name) \
                 or mesh_fingerprint(mesh) != mesh_fingerprint(pipe.mesh):

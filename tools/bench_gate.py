@@ -25,7 +25,16 @@ committed baseline and fails (exit 1) when the serving stack regresses:
   artifact, so it holds on any machine.
 * **int8 throughput sanity** — at the highest common sweep concurrency,
   paged-int8 tokens/s must be no worse than float tokens/s minus the
-  tolerance ("no worse at equal concurrency"). Also intra-artifact.
+  tolerance ("no worse at equal concurrency"). Intra-artifact, but still
+  a wall-clock ratio, so ``--skip-throughput`` disables it too — quick
+  mode's ms-scale walls can't hold it on shared runners.
+* **adaptive routing** — steady-state retraces in the routed sections
+  (``adaptive.k1`` / ``adaptive.k3``) must not grow (baselines predating
+  the section are tolerated), and — unless ``--skip-throughput`` — the
+  K=1 routed encoder must hold >= 95% of the unrouted throughput from
+  the same artifact (``ADAPTIVE_OVERHEAD_MAX``): routing a single
+  cluster is pure overhead, and more than 5% of it is a regression in
+  the admission/queueing path.
 
 Both artifacts must record the same ``plan_fingerprint`` — a tokens/s
 delta measured under different precision plans is noise, not signal.
@@ -37,6 +46,7 @@ import json
 import sys
 
 BYTES_RATIO_MAX = 0.60
+ADAPTIVE_OVERHEAD_MAX = 0.05
 
 _fails: list[str] = []
 
@@ -100,7 +110,11 @@ def gate(new: dict, base: dict, *, tps_tolerance: float,
         ratio = q["kv_cache_bytes"] / f["kv_cache_bytes"]
         _check(ratio <= BYTES_RATIO_MAX, f"sweep[{s}].kv_cache_bytes",
                f"int8/float = {ratio:.2f} (max {BYTES_RATIO_MAX})")
-    if slots_seen:
+    if slots_seen and not skip_throughput:
+        # intra-artifact, but still a ratio of wall-clock numbers — on a
+        # shared runner's ms-scale quick-mode walls the ratio is noise,
+        # so it rides the same switch as the other wall-clock checks.
+        # The full gate (slots=64, 0.2s+ walls) enforces it.
         top = slots_seen[-1]
         f = nsweep.get((top, "float"))
         q = nsweep.get((top, "int8_per_token"))
@@ -110,6 +124,20 @@ def gate(new: dict, base: dict, *, tps_tolerance: float,
                    f"sweep[{top}].int8_tokens_per_s",
                    f"{q['tokens_per_s']:.1f} vs float "
                    f"{f['tokens_per_s']:.1f} (floor {floor:.1f})")
+
+    # -- adaptive routing (tolerate baselines predating the section) ---------
+    nada, bada = new.get("adaptive", {}), base.get("adaptive", {})
+    for k in ("k1", "k3"):
+        if k in nada and k in bada:
+            n, b = nada[k]["retraces"], bada[k]["retraces"]
+            _check(n <= b, f"adaptive.{k}.retraces", f"{n} (baseline {b})")
+    if not skip_throughput and "k1" in nada:
+        routed = nada["k1"]["requests_per_s"]
+        unrouted = nada["unrouted_requests_per_s"]
+        floor = (1.0 - ADAPTIVE_OVERHEAD_MAX) * unrouted
+        _check(routed >= floor, "adaptive.k1.requests_per_s",
+               f"{routed:.1f} routed vs {unrouted:.1f} unrouted "
+               f"(floor {floor:.1f})")
 
     if _fails:
         print(f"[bench_gate] {len(_fails)} check(s) failed: "

@@ -12,8 +12,12 @@ contract surface:
 2. ``POST /v1/generate``  -> SSE ``token`` events then one ``done``;
 3. ``GET /metrics``       -> 200 with every name in
    ``repro.serve.metrics.CORE_METRICS``;
-4. ``GET /healthz``       -> 200;
-5. ``SIGTERM``            -> graceful drain, exit code 0.
+4. traffic-class routing  -> an encode tagged ``X-SAMP-Traffic-Class``
+   lands in that cluster's ``samp_cluster_requests_total`` counter
+   (the server boots with ``--clusters task:chat,search`` by default;
+   pass ``--clusters ''`` for an unrouted smoke);
+5. ``GET /healthz``       -> 200;
+6. ``SIGTERM``            -> graceful drain, exit code 0.
 
 Exits non-zero on any violation — this is the gate that keeps
 docs/http-serving.md truthful.
@@ -42,10 +46,10 @@ def fail(msg: str) -> None:
     sys.exit(1)
 
 
-def request(port: int, method: str, path: str, payload=None):
+def request(port: int, method: str, path: str, payload=None, headers=None):
     conn = http.client.HTTPConnection("127.0.0.1", port, timeout=120)
     body = None if payload is None else json.dumps(payload)
-    conn.request(method, path, body=body)
+    conn.request(method, path, body=body, headers=headers or {})
     resp = conn.getresponse()
     data = resp.read()
     headers = {k.lower(): v for k, v in resp.getheaders()}
@@ -62,6 +66,8 @@ def boot(args) -> tuple[subprocess.Popen, int]:
         cmd += ["--plan", args.plan]
     else:
         cmd += ["--policy", args.policy]
+    if args.clusters:
+        cmd += ["--clusters", args.clusters]
     proc = subprocess.Popen(cmd, cwd=REPO, env=env, text=True,
                             stdout=subprocess.PIPE,
                             stderr=subprocess.STDOUT)
@@ -84,6 +90,8 @@ def main() -> None:
     ap.add_argument("--task", default="tnews")
     ap.add_argument("--plan", default="tests/data/golden_plan.json")
     ap.add_argument("--policy", default="ffn")
+    ap.add_argument("--clusters", default="task:chat,search",
+                    help="--clusters spec for the server ('' = unrouted)")
     ap.add_argument("--boot-timeout", type=float, default=300.0)
     args = ap.parse_args()
 
@@ -142,6 +150,38 @@ def main() -> None:
             fail(f"samp_kv_pages_in_use = {kv_pages}, want >= 0")
         print(f"[http_smoke] kv gauges ok: samp_kv_cache_bytes={kv_bytes:g} "
               f"samp_kv_pages_in_use={kv_pages:g}")
+
+        # traffic-class routing: a tagged encode must land in that
+        # cluster's admission counter — the header round-trips through
+        # protocol parsing, router admission, and the metrics exporter
+        if args.clusters:
+            def cluster_count(text, cluster):
+                m = re.search(r'^samp_cluster_requests_total\{[^}]*'
+                              rf'cluster="{cluster}"[^}}]*\}} ([0-9.e+-]+)$',
+                              text, re.M)
+                return float(m.group(1)) if m else None
+
+            # task:chat,search -> "search" is cluster id 1
+            before = cluster_count(text, 1) or 0.0
+            status, _, body = request(
+                port, "POST", "/v1/encode", {"tokens": [2, 17, 9]},
+                headers={"X-SAMP-Traffic-Class": "search"})
+            if status != 200:
+                fail(f"tagged /v1/encode -> {status}: {body[:200]!r}")
+            status, _, body = request(port, "GET", "/metrics")
+            text = body.decode("utf-8")
+            after = cluster_count(text, 1)
+            if after is None or after != before + 1:
+                fail(f"X-SAMP-Traffic-Class did not round-trip: "
+                     f"cluster 1 count {before} -> {after}")
+            m = re.search(r"^samp_active_plans\{[^}]*\} ([0-9.e+-]+)$",
+                          text, re.M)
+            if not m or float(m.group(1)) < 1:
+                fail(f"samp_active_plans missing/zero on a routed "
+                     f"deployment")
+            print(f"[http_smoke] routing ok: tagged request counted "
+                  f"(cluster 1: {before:g} -> {after:g}, "
+                  f"active_plans={float(m.group(1)):g})")
 
         status, _, _ = request(port, "GET", "/healthz")
         if status != 200:
