@@ -48,8 +48,8 @@ def main():
                 f"unsigned fix {r['softmax_unsigned_unused']}/256")
 
     def _fusion():
-        fusion_ablation.main()
-        return "3 fusions"
+        rows = fusion_ablation.main()
+        return f"{len(rows)} fusions"
 
     def _serve():
         r = serve_throughput.main(quick=args.quick)

@@ -10,6 +10,8 @@ recovering the full range.
 """
 from __future__ import annotations
 
+import json
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -22,8 +24,9 @@ from repro.data import get_batch, make_task
 from repro.models import transformer as T
 
 
-def collect(arch="bert-base", n_batches=4, batch=16, seq=32, emit=print):
-    cfg = get_config(arch).reduced().replace(num_layers=12)
+def collect(arch="bert-base", n_batches=4, batch=16, seq=32, layers=12,
+            emit=print):
+    cfg = get_config(arch).reduced().replace(num_layers=layers)
     eng = SAMPEngine(cfg, float_dtype="float32")
     params = T.init_params(jax.random.PRNGKey(0), cfg, eng.float_policy)
     task = make_task("tnews", vocab_size=cfg.vocab_size, seq_len=seq)
@@ -64,8 +67,36 @@ def collect(arch="bert-base", n_batches=4, batch=16, seq=32, emit=print):
          f"{100 * h_unused / 256:.1f}% |")
     emit(f"| attention-softmax out | unsigned (ours) | {pu_used} | "
          f"{pu_unused} | {100 * pu_unused / 256:.1f}% |")
+    # Machine-readable section: tests consume this as a calibration
+    # fixture (``tests/test_int8_dataflow.py`` parses the fenced JSON and
+    # asserts the unsigned scheme's utilization dominates the symmetric
+    # one before trusting the uint8 softmax epilogue).
+    schemes = {
+        "softmax_symmetric": (p_used, p_unused),
+        "mha_symmetric": (h_used, h_unused),
+        "softmax_unsigned": (pu_used, pu_unused),
+    }
+    report = {
+        "softmax_range": {
+            "arch": arch,
+            "n_softmax_values": int(p.size),
+            "n_mha_values": int(h.size),
+            "schemes": {
+                name: {
+                    "codes_used": int(used),
+                    "codes_unused": int(unused),
+                    "utilization": used / 256.0,
+                }
+                for name, (used, unused) in schemes.items()
+            },
+        }
+    }
+    emit("")
+    emit("```json")
+    emit(json.dumps(report, indent=1, sort_keys=True))
+    emit("```")
     return {"softmax_unused": p_unused, "mha_unused": h_unused,
-            "softmax_unsigned_unused": pu_unused}
+            "softmax_unsigned_unused": pu_unused, "report": report}
 
 
 if __name__ == "__main__":

@@ -37,11 +37,13 @@ from typing import Mapping, Optional, Sequence, Union
 
 from repro.core.precision import EncoderPolicy, LayerMode
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 WEIGHT_SCHEMES = ("float", "int8_per_channel", "int8_per_tensor")
 ACT_SCHEMES = ("float", "int8_per_tensor", "int8_per_token")
 KV_CACHE_SCHEMES = ("float", "int8_per_head", "int8_per_token")
+SOFTMAX_SCHEMES = ("float", "uint8")
+NORM_SCHEMES = ("float", "int8")
 BLOCKS = ("qkv", "attn_out", "ffn_in", "ffn_out")
 FLOAT_DTYPES = ("float32", "bfloat16", "float16")
 
@@ -105,7 +107,8 @@ INT8_SPEC = QuantSpec(weight="int8_per_channel", act="int8_per_tensor")
 
 @dataclasses.dataclass(frozen=True)
 class LayerPlan:
-    """Per-block QuantSpecs for one layer, plus the KV-cache scheme.
+    """Per-block QuantSpecs for one layer, plus the KV-cache scheme and the
+    inter-kernel dataflow schemes.
 
     ``kv_cache`` (schema v2) selects how this layer's decode cache stores
     K/V: ``float`` (the cache dtype), ``int8_per_head`` (static scales,
@@ -115,6 +118,26 @@ class LayerPlan:
     the int8 pages). It is a cache-layout decision, orthogonal to the
     GEMM blocks, which is why it lives on the layer rather than inside a
     :class:`QuantSpec`.
+
+    ``softmax`` and ``norm`` (schema v3) name how the *boundaries between*
+    GEMMs carry data, extending the int8 dataflow across the whole layer:
+
+    * ``softmax='uint8'`` — attention probabilities are quantized with the
+      asymmetric unsigned scheme (``scale = amax/255``, zero point -128 —
+      softmax outputs live in [0, 1], so the symmetric signed scheme would
+      waste the negative half of the code space; see
+      ``benchmarks/softmax_range.py``). Requires an int8 P·V matmul to
+      consume the codes: the layer must quantize ``qkv`` (encoder bmms) or
+      its KV cache (decode). The per-layer field overrides the global
+      ``QuantScheme.softmax_mode`` knob for this layer.
+    * ``norm='int8'`` — the attn→norm→ffn chain carries int8 end to end:
+      the ``attn_out`` GEMM re-quantizes its output with the calibrated
+      pre-norm delta scale (the ``attn_delta`` observer site) and the
+      fused add+norm consumes that int8 delta directly and emits int8 at
+      the ``ffn_in`` scale. Requires ``attn_out`` and ``ffn_in`` both
+      int8 with *static* activations (the span is defined by calibrated
+      scales; dynamic acts re-derive scales per token and keep the float
+      boundary).
     """
 
     qkv: QuantSpec = FLOAT_SPEC
@@ -122,11 +145,34 @@ class LayerPlan:
     ffn_in: QuantSpec = FLOAT_SPEC
     ffn_out: QuantSpec = FLOAT_SPEC
     kv_cache: str = "float"
+    softmax: str = "float"
+    norm: str = "float"
 
     def __post_init__(self):
         if self.kv_cache not in KV_CACHE_SCHEMES:
             raise ValueError(f"kv_cache scheme {self.kv_cache!r} not in "
                              f"{KV_CACHE_SCHEMES}")
+        if self.softmax not in SOFTMAX_SCHEMES:
+            raise ValueError(f"softmax scheme {self.softmax!r} not in "
+                             f"{SOFTMAX_SCHEMES}")
+        if self.norm not in NORM_SCHEMES:
+            raise ValueError(f"norm scheme {self.norm!r} not in "
+                             f"{NORM_SCHEMES}")
+        if self.softmax == "uint8" and not (self.qkv.quantized
+                                            or self.kv_cache != "float"):
+            raise ValueError(
+                "softmax='uint8' quantizes the attention probabilities for "
+                "an int8 P·V matmul; the layer must quantize 'qkv' (encoder "
+                "bmms) or its kv_cache (decode)")
+        if self.norm == "int8":
+            for b in ("attn_out", "ffn_in"):
+                s = self.spec(b)
+                if not (s.quantized and s.static_acts):
+                    raise ValueError(
+                        f"norm='int8' carries the attn→norm→ffn boundary in "
+                        f"int8 under calibrated static scales; block {b!r} "
+                        f"is weight={s.weight!r}/act={s.act!r} (needs int8 "
+                        f"weight + act='int8_per_tensor')")
 
     def spec(self, block: str) -> QuantSpec:
         if block not in BLOCKS:
@@ -153,37 +199,57 @@ class LayerPlan:
 
     def to_dict(self) -> dict:
         d = {b: self.spec(b).to_dict() for b in BLOCKS}
+        # non-GEMM fields are omitted at their defaults: the canonical (and
+        # fingerprinted) form of a plan only carries the newest schema field
+        # it actually uses, so pre-existing fingerprints are unchanged
         if self.kv_cache != "float":
-            # omitted when float: the canonical (and fingerprinted) form of
-            # a plan with no KV quantization is byte-identical to schema v1
             d["kv_cache"] = self.kv_cache
+        if self.softmax != "float":
+            d["softmax"] = self.softmax
+        if self.norm != "float":
+            d["norm"] = self.norm
         return d
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "LayerPlan":
-        extra = set(d) - set(BLOCKS) - {"kv_cache"}
+        extra = set(d) - set(BLOCKS) - {"kv_cache", "softmax", "norm"}
         if extra:
             raise ValueError(f"unknown blocks {sorted(extra)}; have {BLOCKS}")
         kw = {b: QuantSpec.from_dict(d[b]) for b in BLOCKS if b in d}
-        if "kv_cache" in d:
-            kw["kv_cache"] = d["kv_cache"]
+        for field in ("kv_cache", "softmax", "norm"):
+            if field in d:
+                kw[field] = d[field]
         return cls(**kw)
 
     @classmethod
     def for_mode(cls, mode: LayerMode, *, dynamic_acts: bool = False,
-                 calibrator: str = "minmax") -> "LayerPlan":
-        """The paper's per-layer modes as block plans."""
+                 calibrator: str = "minmax", softmax: str = "float",
+                 norm: str = "float") -> "LayerPlan":
+        """The paper's per-layer modes as block plans; ``softmax``/``norm``
+        add the schema-v3 dataflow schemes (validated against the mode —
+        e.g. ``softmax='uint8'`` needs ``quant_mha``)."""
         act = "int8_per_token" if dynamic_acts else "int8_per_tensor"
         q = QuantSpec(weight="int8_per_channel", act=act,
                       calibrator=calibrator)
         return cls(qkv=q if mode.quant_mha else FLOAT_SPEC,
                    attn_out=q if mode.quant_mha else FLOAT_SPEC,
                    ffn_in=q if mode.quant_ffn else FLOAT_SPEC,
-                   ffn_out=q if mode.quant_ffn else FLOAT_SPEC)
+                   ffn_out=q if mode.quant_ffn else FLOAT_SPEC,
+                   softmax=softmax, norm=norm)
 
     def with_kv(self, kv_cache: str) -> "LayerPlan":
         """Same GEMM blocks, different KV-cache scheme."""
         return dataclasses.replace(self, kv_cache=kv_cache)
+
+    def with_dataflow(self, *, softmax: Optional[str] = None,
+                      norm: Optional[str] = None) -> "LayerPlan":
+        """Same GEMM blocks, different inter-kernel dataflow schemes."""
+        kw = {}
+        if softmax is not None:
+            kw["softmax"] = softmax
+        if norm is not None:
+            kw["norm"] = norm
+        return dataclasses.replace(self, **kw) if kw else self
 
 
 FLOAT_LAYER = LayerPlan()
@@ -231,6 +297,13 @@ class PrecisionPlan:
         ``quant_mha`` alone would not)."""
         return self.layers[layer_idx].qkv.quantized
 
+    def softmax_scheme(self, layer_idx: int) -> str:
+        """The softmax dataflow scheme of layer ``layer_idx`` (schema v3).
+        Duck-typed by ``build_plan`` the same way as :meth:`bmm_quantized`;
+        EncoderPolicy has no such method, so policy-driven plans keep the
+        legacy global ``QuantScheme.softmax_mode`` behavior."""
+        return self.layers[layer_idx].softmax
+
     def group_boundaries(self) -> list[tuple[int, int, LayerMode]]:
         """Contiguous runs of *identical* LayerPlans: [(start, stop, mode)].
         Splitting on full LayerPlan equality (not just the derived mode)
@@ -253,14 +326,32 @@ class PrecisionPlan:
     def num_quant_kv(self) -> int:
         return sum(lp.kv_cache != "float" for lp in self.layers)
 
+    @property
+    def softmax_schemes(self) -> tuple:
+        """Per-layer softmax dataflow schemes (schema v3)."""
+        return tuple(lp.softmax for lp in self.layers)
+
+    @property
+    def norm_schemes(self) -> tuple:
+        """Per-layer norm dataflow schemes (schema v3)."""
+        return tuple(lp.norm for lp in self.layers)
+
+    @property
+    def num_int8_dataflow(self) -> int:
+        """Layers carrying at least one schema-v3 int8 boundary."""
+        return sum(lp.softmax != "float" or lp.norm != "float"
+                   for lp in self.layers)
+
     def describe(self) -> str:
         n = self.num_layers
         cals = sorted({s.calibrator for lp in self.layers for s in
                        (lp.qkv, lp.attn_out, lp.ffn_in, lp.ffn_out)
                        if s.quantized}) or ["-"]
+        flow = (f" FLOW {self.num_int8_dataflow}/{n}"
+                if self.num_int8_dataflow else "")
         return (f"plan MHA {self.num_quant_mha}/{n} FFN "
-                f"{self.num_quant_ffn}/{n} KV {self.num_quant_kv}/{n} "
-                f"[{self.float_dtype}] "
+                f"{self.num_quant_ffn}/{n} KV {self.num_quant_kv}/{n}"
+                f"{flow} [{self.float_dtype}] "
                 f"cal={','.join(cals)} #{self.fingerprint()[:12]}")
 
     # -- constructors -------------------------------------------------------
@@ -325,11 +416,17 @@ class PrecisionPlan:
     def to_dict(self) -> dict:
         # the canonical form carries the *minimal* schema version that can
         # express the plan: plans without KV-cache quantization serialize
-        # exactly as they did under schema v1, so their fingerprints (and
-        # every executable-cache key / artifact identity derived from them)
-        # are unchanged by the v2 field
-        version = 2 if any(lp.kv_cache != "float"
-                           for lp in self.layers) else 1
+        # exactly as they did under schema v1, and plans without dataflow
+        # schemes as under v2, so their fingerprints (and every
+        # executable-cache key / artifact identity derived from them) are
+        # unchanged by newer fields
+        if any(lp.softmax != "float" or lp.norm != "float"
+               for lp in self.layers):
+            version = 3
+        elif any(lp.kv_cache != "float" for lp in self.layers):
+            version = 2
+        else:
+            version = 1
         return {"schema_version": version,
                 "float_dtype": self.float_dtype,
                 "layers": [lp.to_dict() for lp in self.layers]}
@@ -337,13 +434,18 @@ class PrecisionPlan:
     @classmethod
     def from_dict(cls, d: Mapping) -> "PrecisionPlan":
         version = d.get("schema_version")
-        if version not in (1, SCHEMA_VERSION):
+        if version not in (1, 2, SCHEMA_VERSION):
             raise ValueError(f"plan schema_version {version!r} not in "
-                             f"(1, {SCHEMA_VERSION})")
-        if version == 1 and any(isinstance(lp, Mapping) and "kv_cache" in lp
-                                for lp in d.get("layers") or ()):
+                             f"(1, 2, {SCHEMA_VERSION})")
+        layer_dicts = [lp for lp in d.get("layers") or ()
+                       if isinstance(lp, Mapping)]
+        if version == 1 and any("kv_cache" in lp for lp in layer_dicts):
             raise ValueError("'kv_cache' is a schema v2 field; this plan "
                              "declares schema_version 1")
+        if version < 3 and any("softmax" in lp or "norm" in lp
+                               for lp in layer_dicts):
+            raise ValueError("'softmax'/'norm' are schema v3 fields; this "
+                             f"plan declares schema_version {version}")
         extra = set(d) - {"schema_version", "float_dtype", "layers"}
         if extra:
             # reject rather than drop: a typoed key ("float_dtypes") would

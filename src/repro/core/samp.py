@@ -121,16 +121,45 @@ def _measure(engine: "SAMPEngine", params, stats, precision: PrecisionPlan,
                                                          precision)
 
 
+def int8_dataflow_variant(precision: PrecisionPlan
+                          ) -> Optional[PrecisionPlan]:
+    """The whole-layer int8-dataflow variant of a candidate (schema v3):
+    ``softmax='uint8'`` on every layer whose attention bmms run int8, and
+    ``norm='int8'`` wherever the attn_out/ffn_in blocks carry static int8
+    activations — the maximal span the plan's GEMM choices support.
+    Returns None when no layer is eligible (the variant would duplicate
+    the base candidate)."""
+    layers, changed = [], False
+    for lp in precision.layers:
+        sm = "uint8" if lp.qkv.quantized else None
+        nm = ("int8" if all(lp.spec(b).quantized and lp.spec(b).static_acts
+                            for b in ("attn_out", "ffn_in")) else None)
+        nlp = lp.with_dataflow(softmax=sm, norm=nm)
+        changed = changed or nlp != lp
+        layers.append(nlp)
+    if not changed:
+        return None
+    return dataclasses.replace(precision, layers=tuple(layers))
+
+
 def _grid_candidates(engine: "SAMPEngine", stride: int,
-                     modes: Sequence[LayerMode], calibrator: str):
-    """The paper's (mode, k) grid as (name, k, PrecisionPlan) candidates."""
+                     modes: Sequence[LayerMode], calibrator: str,
+                     dataflow: bool = False):
+    """The paper's (mode, k) grid as (name, k, PrecisionPlan) candidates;
+    ``dataflow`` doubles each eligible candidate with its whole-layer
+    int8-dataflow variant (family ``<mode>+int8flow``)."""
     for name, k, policy in paper_grid(engine.cfg.num_layers,
                                       engine.float_dtype, stride):
         if name != "float" and not any(m.value == name for m in modes):
             continue
-        yield name, k, plan_from_policy(
+        precision = plan_from_policy(
             policy, dynamic_acts=engine.scheme.dynamic_acts,
             calibrator=calibrator)
+        yield name, k, precision
+        if dataflow:
+            flow = int8_dataflow_variant(precision)
+            if flow is not None:
+                yield name + "+int8flow", k, flow
 
 
 @register_strategy("prefix_grid")
@@ -139,12 +168,15 @@ def prefix_grid_strategy(engine: "SAMPEngine", params, stats, eval_fn,
                          modes: Sequence[LayerMode] = (
                              LayerMode.FULLY_QUANT,
                              LayerMode.QUANT_FFN_ONLY),
-                         calibrator: str = "minmax") -> list[SweepPoint]:
+                         calibrator: str = "minmax",
+                         dataflow: bool = False) -> list[SweepPoint]:
     """The paper's Table-2 grid: both modes × every quantized-prefix depth
-    (dedupe in :func:`paper_grid` drops the k=0 duplicates)."""
+    (dedupe in :func:`paper_grid` drops the k=0 duplicates). ``dataflow``
+    adds the whole-layer int8-dataflow variant of each eligible candidate
+    to the search space (schema-v3 softmax/norm schemes)."""
     points: list[SweepPoint] = []
     for name, k, precision in _grid_candidates(engine, stride, modes,
-                                               calibrator):
+                                               calibrator, dataflow):
         acc, lat = _measure(engine, params, stats, precision, eval_fn,
                             latency_fn)
         points.append(SweepPoint(name, k, precision, acc, lat))
@@ -193,7 +225,8 @@ def latency_budget_strategy(engine: "SAMPEngine", params, stats, eval_fn,
                             modes: Sequence[LayerMode] = (
                                 LayerMode.FULLY_QUANT,
                                 LayerMode.QUANT_FFN_ONLY),
-                            calibrator: str = "minmax") -> list[SweepPoint]:
+                            calibrator: str = "minmax",
+                            dataflow: bool = False) -> list[SweepPoint]:
     """Budgeted prefix-grid search: candidates whose latency exceeds
     ``max_latency`` are dropped *before* the expensive work. Analytic
     backends (roofline) price a candidate from its plan alone, so
@@ -204,7 +237,7 @@ def latency_budget_strategy(engine: "SAMPEngine", params, stats, eval_fn,
     budget."""
     points: list[SweepPoint] = []
     for name, k, precision in _grid_candidates(engine, stride, modes,
-                                               calibrator):
+                                               calibrator, dataflow):
         try:
             # param-free probe: analytic backends ignore (qparams, plan)
             lat = latency_fn(None, None, precision)

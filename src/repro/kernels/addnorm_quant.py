@@ -31,10 +31,13 @@ from repro.kernels.pallas_compat import CompilerParams
 from repro.kernels.quant_linear import fit_block
 
 
-def _kernel(x_ref, res_ref, b_ref, g_ref, beta_ref, s_ref, h_ref, q_ref, *,
-            kind: str, eps: float):
-    h = (x_ref[...].astype(jnp.float32) + res_ref[...].astype(jnp.float32)
-         + b_ref[...])
+def _kernel(x_ref, res_ref, b_ref, g_ref, beta_ref, s_ref, xs_ref, h_ref,
+            q_ref, *, kind: str, eps: float):
+    # ``x`` may arrive int8 (the attn_out GEMM's requantized output under a
+    # whole-layer int8 span); ``xs`` dequantizes it in-register — float
+    # deltas carry xs == 1.0 and the multiply is exact.
+    x = x_ref[...].astype(jnp.float32) * xs_ref[...]
+    h = x + res_ref[...].astype(jnp.float32) + b_ref[...]
     if kind == "layernorm":
         mu = jnp.mean(h, axis=-1, keepdims=True)
         var = jnp.mean(jnp.square(h - mu), axis=-1, keepdims=True)
@@ -50,15 +53,28 @@ def _kernel(x_ref, res_ref, b_ref, g_ref, beta_ref, s_ref, h_ref, q_ref, *,
 def addnorm_quant(x: jax.Array, residual: jax.Array, bias: jax.Array,
                   gamma: jax.Array, beta: jax.Array | None,
                   x_scale: Union[float, jax.Array],
-                  *, kind: str = "layernorm", eps: float = 1e-6,
+                  *, x_in_scale: Union[float, jax.Array, None] = None,
+                  kind: str = "layernorm", eps: float = 1e-6,
                   bm: int = 256, interpret: bool = False):
     """x, residual: (M, D); bias/gamma/beta: (D,); x_scale: python float or
     scalar array. Returns (h f32/bf16, q int8). ``kind``: 'layernorm' |
-    'rmsnorm'."""
+    'rmsnorm'.
+
+    ``x`` may be int8 (the producing GEMM requantized it — the whole-layer
+    int8 span), in which case ``x_in_scale`` is its dequantization scale;
+    both scales are scalar operands, so neither a recalibration nor a
+    scale swap retraces.
+    """
     M, D = x.shape
     bm = fit_block(M, bm)
     if beta is None:
         beta = jnp.zeros((D,), jnp.float32)
+    if x.dtype == jnp.int8 and x_in_scale is None:
+        raise ValueError("int8 delta input needs x_in_scale (its dequant "
+                         "scale)")
+    xs_in = jnp.asarray(1.0 if x_in_scale is None else x_in_scale,
+                        jnp.float32).reshape(1, 1)
+    out_dtype = residual.dtype if x.dtype == jnp.int8 else x.dtype
     kernel = functools.partial(_kernel, kind=kind, eps=eps)
     row = pl.BlockSpec((bm, D), lambda i: (i, 0))
     vec = pl.BlockSpec((1, D), lambda i: (0, 0))
@@ -66,9 +82,9 @@ def addnorm_quant(x: jax.Array, residual: jax.Array, bias: jax.Array,
     h, q = pl.pallas_call(
         kernel,
         grid=(M // bm,),
-        in_specs=[row, row, vec, vec, vec, scalar],
+        in_specs=[row, row, vec, vec, vec, scalar, scalar],
         out_specs=[row, row],
-        out_shape=[jax.ShapeDtypeStruct((M, D), x.dtype),
+        out_shape=[jax.ShapeDtypeStruct((M, D), out_dtype),
                    jax.ShapeDtypeStruct((M, D), jnp.int8)],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
@@ -76,5 +92,5 @@ def addnorm_quant(x: jax.Array, residual: jax.Array, bias: jax.Array,
     )(x, residual, bias.reshape(1, D).astype(jnp.float32),
       gamma.reshape(1, D).astype(jnp.float32),
       beta.reshape(1, D).astype(jnp.float32),
-      jnp.asarray(x_scale, jnp.float32).reshape(1, 1))
+      jnp.asarray(x_scale, jnp.float32).reshape(1, 1), xs_in)
     return h, q

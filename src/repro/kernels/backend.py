@@ -83,6 +83,24 @@ class QuantActivation:
     def dequantize(self) -> jax.Array:
         return self.q.dequantize(self.out_dtype)
 
+    def reshape(self, *shape) -> "QuantActivation":
+        """Reshape the int8 payload (scales are per-tensor scalars for every
+        producer in this package), so model-code reshapes between GEMMs —
+        e.g. the (B, S, H, hd) -> (B, S, q_dim) head fold before attn_out —
+        work on pre-quantized activations unchanged."""
+        if len(shape) == 1 and isinstance(shape[0], (tuple, list)):
+            shape = tuple(shape[0])
+        return QuantActivation(
+            QuantizedTensor(self.q.values.reshape(shape), self.q.scale,
+                            self.q.zero_point), self.out_dtype)
+
+    def transpose(self, *axes) -> "QuantActivation":
+        if len(axes) == 1 and isinstance(axes[0], (tuple, list)):
+            axes = tuple(axes[0])
+        return QuantActivation(
+            QuantizedTensor(self.q.values.transpose(axes), self.q.scale,
+                            self.q.zero_point), self.out_dtype)
+
 
 def ffn_input_scale(ffn_p: dict, ffn_kind: str) -> Optional[jax.Array]:
     """The static activation scale the layer's ffn_in GEMMs were calibrated
@@ -121,8 +139,19 @@ class ComputeBackend:
         to use the reference gather."""
         return None
 
+    def attention(self, q, k, v, p: dict, *, k_pos, spec, scale,
+                  softcap=None):
+        """Whole fully-quantized encoder attention core (QK^T + softmax +
+        P·V). ``q``/``k``/``v`` are (B, S, H, hd) float; ``p`` the attention
+        param dict carrying the calibrated ``q/k/p/v_scale`` operands.
+        Return (B, Sq, Hq, hd) — possibly a QuantActivation when the layer's
+        ``norm='int8'`` span requantizes the output for the attn_out GEMM —
+        or None to use the reference :func:`attention_core` path."""
+        return None
+
     def decode_attention(self, q, kv_cache, pages, *, positions, active,
-                         scale, softcap=None, static_scales=None):
+                         scale, softcap=None, static_scales=None,
+                         p_scale=None):
         """Single-token decode attention over a paged KV cache. ``q`` is
         (B, 1, Hq, hd); ``kv_cache`` the paged cache dict (``pages_k``/...);
         ``pages`` the (B, pages_per_slot) table. Return (B, 1, Hq, hd), or
@@ -235,9 +264,19 @@ class FusedBackend(ComputeBackend):
         if w_scale.shape[0] != N:                  # int8_per_tensor weights
             w_scale = jnp.broadcast_to(w_scale, (N,))
         from repro.kernels import ops
+        # ``out_xs`` — attached by apply_plan under a norm='int8' span — is
+        # the next consumer's calibrated activation scale: the epilogue
+        # requantizes to int8 and the result stays quantized between GEMMs.
+        out_xs = p.get("out_xs")
         y = ops.quant_linear(x_q, w.values, w_scale, x_scale,
-                             bias=p.get("b"), act=act, out_dtype=out_dtype)
-        return y.reshape(lead + (N,))
+                             bias=p.get("b"), act=act, out_scale=out_xs,
+                             out_dtype=out_dtype)
+        y = y.reshape(lead + (N,))
+        if out_xs is not None:
+            return QuantActivation(
+                QuantizedTensor(y, jnp.asarray(out_xs, jnp.float32), None),
+                out_dtype)
+        return y
 
     # -- residual boundary ---------------------------------------------------
     def addnorm(self, delta, residual, p: dict, kind: str, next_scale,
@@ -246,10 +285,18 @@ class FusedBackend(ComputeBackend):
             return None
         from repro.kernels import ops
         B, S, D = residual.shape
+        if isinstance(delta, QuantActivation):
+            # the producing GEMM requantized its output (norm='int8' span):
+            # hand the int8 payload straight through; the kernel dequantizes
+            # it in-register via the x_in_scale operand.
+            d2, d_scale = delta.q.values.reshape(-1, D), delta.q.scale
+        else:
+            d2, d_scale = delta.reshape(-1, D), None
         h2, q2 = ops.addnorm_quant(
-            delta.reshape(-1, D), residual.reshape(-1, D),
+            d2, residual.reshape(-1, D),
             jnp.zeros((D,), jnp.float32),          # biases already applied
-            p["scale"], p.get("bias"), next_scale, kind=kind, eps=eps)
+            p["scale"], p.get("bias"), next_scale, x_in_scale=d_scale,
+            kind=kind, eps=eps)
         qa = QuantActivation(
             QuantizedTensor(q2.reshape(B, S, D),
                             jnp.asarray(next_scale, jnp.float32), None),
@@ -284,9 +331,52 @@ class FusedBackend(ComputeBackend):
         return x
 
 
+    # -- fully-quantized encoder attention -----------------------------------
+    def attention(self, q, k, v, p: dict, *, k_pos, spec, scale,
+                  softcap=None):
+        # Claims the bidirectional (encoder) core when the plan calibrated
+        # all four scheme scales — the softmax='uint8' dataflow. Causal /
+        # windowed masks keep the reference path (the kernel holds the
+        # whole key axis per tile and masks on validity only), as do
+        # meshed deployments (the grid indexes the full head axis). GQA is
+        # supported: the kernel's head grid indexes kv heads by division.
+        if (not self._enabled or self.model_shards > 1 or spec.causal
+                or spec.window is not None
+                or any(f"{s}_scale" not in p for s in ("q", "k", "p", "v"))):
+            return None
+        B, Sq, Hq, hd = q.shape
+        if Hq % k.shape[2] != 0:
+            return None
+        qh = q.transpose(0, 2, 1, 3)               # (B, H, S, hd)
+        kh = k.transpose(0, 2, 1, 3)
+        vh = v.transpose(0, 2, 1, 3)
+        # quantize operands host-side at the calibrated scales; the score
+        # scaling rides the q quantization (same as the reference quant_bmm
+        # which quantizes q * rsqrt(d))
+        qq = quantize(qh * jnp.asarray(scale, qh.dtype), p["q_scale"])
+        kq = quantize(kh, p["k_scale"])
+        vq = quantize(vh, p["v_scale"])
+        # requantize the attention output at the attn_out GEMM's calibrated
+        # activation scale (wo["xs"]) so the span's first hop is int8
+        wo = p.get("wo", {})
+        o_scale = wo.get("xs") if isinstance(wo.get("w"), QuantizedTensor) \
+            else None
+        from repro.kernels import ops
+        out = ops.quant_flash_attention(
+            qq, kq, vq, k_pos, q_scale=p["q_scale"], k_scale=p["k_scale"],
+            p_scale=p["p_scale"], v_scale=p["v_scale"], o_scale=o_scale,
+            softcap=softcap, out_dtype=q.dtype)
+        out = out.transpose(0, 2, 1, 3)            # (B, Sq, Hq, hd)
+        if o_scale is not None:
+            return QuantActivation(
+                QuantizedTensor(out, jnp.asarray(o_scale, jnp.float32),
+                                None), q.dtype)
+        return out
+
     # -- paged decode attention ----------------------------------------------
     def decode_attention(self, q, kv_cache, pages, *, positions, active,
-                         scale, softcap=None, static_scales=None):
+                         scale, softcap=None, static_scales=None,
+                         p_scale=None):
         # The kernel's win is skipping the float-cache materialization, so
         # it claims int8 pages only; float paged caches (and MLA's latent
         # pages) keep the XLA gather path. Meshed serving declines too: the
@@ -319,7 +409,8 @@ class FusedBackend(ComputeBackend):
             q[:, 0].reshape(B, Hkv, Hq // Hkv, hd), k, v, pages, lengths,
             k_scale=ks, v_scale=vs, per_head=not per_token,
             scale=float(scale),
-            softcap=float(softcap) if softcap is not None else None)
+            softcap=float(softcap) if softcap is not None else None,
+            p_scale=p_scale)
         return out.reshape(B, 1, Hq, hd)
 
 

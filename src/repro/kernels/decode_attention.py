@@ -43,11 +43,19 @@ NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
 def _decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
-                   o_ref, m_ref, l_ref, acc_ref, *,
+                   ps_ref, o_ref, m_ref, l_ref, acc_ref, *,
                    page_size: int, pages_per_slot: int, scale: float,
-                   softcap: Optional[float], per_head: bool):
+                   softcap: Optional[float], per_head: bool, quant_p: bool):
     b = pl.program_id(0)
     j = pl.program_id(2)
+    # quant_p doubles the page axis: pass 1 (j < pps) accumulates the exact
+    # global softmax max/denominator, pass 2 (j >= pps) revisits every page
+    # with the *normalized* probabilities in hand, quantizes them with the
+    # unsigned uint8 scheme at the calibrated softmax scale, and
+    # accumulates the already-normalized P·V — the quantized-softmax
+    # epilogue cannot ride the single-pass online recurrence because the
+    # codes are defined on final probabilities, not running partials.
+    jj = jax.lax.rem(j, pages_per_slot) if quant_p else j
 
     @pl.when(j == 0)
     def _init():
@@ -56,11 +64,10 @@ def _decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     length = len_ref[b]
-    page = pt_ref[b * pages_per_slot + j]
-    live = jnp.logical_and(page >= 0, length > j * page_size)
+    page = pt_ref[b * pages_per_slot + jj]
+    live = jnp.logical_and(page >= 0, length > jj * page_size)
 
-    @pl.when(live)
-    def _body():
+    def _scores():
         q = q_ref[0, 0].astype(jnp.float32) * scale          # (g, hd)
         k = k_ref[0, :, 0].astype(jnp.float32)               # (ps, hd)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
@@ -72,37 +79,63 @@ def _decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
             s = s * ks_ref[0, :, 0][None, :]
         if softcap is not None:
             s = jnp.tanh(s / softcap) * softcap
-        tok = j * page_size + jax.lax.broadcasted_iota(
+        tok = jj * page_size + jax.lax.broadcasted_iota(
             jnp.int32, (1, page_size), 1)
-        s = jnp.where(tok < length, s, NEG_INF)
+        return jnp.where(tok < length, s, NEG_INF)
 
+    def _fold_vs(p):
+        # PV epilogue: fold the value scale into p, then one int8-V dot.
+        if per_head:
+            return p * vs_ref[0]
+        return p * vs_ref[0, :, 0][None, :]
+
+    def _pv(p):
+        v = v_ref[0, :, 0].astype(jnp.float32)               # (ps, hd)
+        return jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+
+    def _stats_update(s, with_acc: bool):
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
         alpha = jnp.exp(m_prev - m_new)
         p = jnp.exp(s - m_new)                               # (g, ps)
         l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
         m_ref[...] = m_new
+        if with_acc:
+            acc_ref[...] = acc_ref[...] * alpha + _pv(_fold_vs(p))
 
-        # PV epilogue: fold the value scale into p, then one int8-V dot.
-        if per_head:
-            p = p * vs_ref[0]
-        else:
-            p = p * vs_ref[0, :, 0][None, :]
-        v = v_ref[0, :, 0].astype(jnp.float32)               # (ps, hd)
-        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
+    if not quant_p:
+        @pl.when(live)
+        def _body():
+            _stats_update(_scores(), with_acc=True)
 
-    @pl.when(j == pages_per_slot - 1)
-    def _finish():
-        o_ref[0, 0] = (acc_ref[...] /
-                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+        @pl.when(j == pages_per_slot - 1)
+        def _finish():
+            o_ref[0, 0] = (acc_ref[...] /
+                           jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+    else:
+        @pl.when(jnp.logical_and(live, j < pages_per_slot))
+        def _pass1():
+            _stats_update(_scores(), with_acc=False)
+
+        @pl.when(jnp.logical_and(live, j >= pages_per_slot))
+        def _pass2():
+            # normalized probabilities -> uint8 codes -> dequantized P·V
+            p = jnp.exp(_scores() - m_ref[...]) \
+                / jnp.maximum(l_ref[...], 1e-30)
+            pq = jnp.clip(jnp.round(p / ps_ref[...]), 0, 255)
+            acc_ref[...] += _pv(_fold_vs(pq * ps_ref[...]))
+
+        @pl.when(j == 2 * pages_per_slot - 1)
+        def _finish_q():
+            o_ref[0, 0] = acc_ref[...].astype(o_ref.dtype)   # pre-normalized
 
 
 def decode_attention(q, k_pages, v_pages, page_table, lengths, *,
                      k_scale, v_scale, per_head: bool,
                      scale: Optional[float] = None,
                      softcap: Optional[float] = None,
+                     p_scale=None,
                      interpret: bool = False):
     """Paged int8-KV decode attention.
 
@@ -118,6 +151,12 @@ def decode_attention(q, k_pages, v_pages, page_table, lengths, *,
         vectors when ``per_head=True``.
       scale: query scaling, default ``hd**-0.5``.
       softcap: optional tanh soft-capping of logits.
+      p_scale: the layer's calibrated softmax scale (``amax/255``; a scalar
+        operand). When given, softmax probabilities are quantized to
+        unsigned-int8 codes in the PV epilogue (the plan's
+        ``softmax='uint8'`` scheme) via a second pass over the slot's
+        pages — quantized codes are defined on *final* probabilities, so
+        the single-pass online recurrence cannot carry them.
 
     Returns ``(B, Hkv, g, hd)`` in ``q.dtype``.
     """
@@ -126,31 +165,40 @@ def decode_attention(q, k_pages, v_pages, page_table, lengths, *,
     pps = page_table.shape[1]
     if scale is None:
         scale = float(hd) ** -0.5
+    quant_p = p_scale is not None
 
     pt_flat = page_table.reshape(-1).astype(jnp.int32)
     lengths = lengths.astype(jnp.int32)
+    ps_op = jnp.asarray(p_scale if quant_p else 1.0,
+                        jnp.float32).reshape(1, 1)
 
     # Scalar-prefetch args (pt, ln) are appended to every index map; a -1
     # table entry is clamped to page 0 for the DMA and skipped in-kernel.
+    # Under quant_p the page axis runs twice, so index maps fold j mod pps.
+    def jmod(j):
+        return jax.lax.rem(j, pps) if quant_p else j
+
     def page_map(bi, h, j, pt, ln):
-        return (jnp.maximum(pt[bi * pps + j], 0), 0, h, 0)
+        return (jnp.maximum(pt[bi * pps + jmod(j)], 0), 0, h, 0)
 
     if per_head:
         scale_spec = pl.BlockSpec((1,), lambda bi, h, j, pt, ln: (h,))
     else:
         scale_spec = pl.BlockSpec(
             (1, page_size, 1),
-            lambda bi, h, j, pt, ln: (jnp.maximum(pt[bi * pps + j], 0), 0, h))
+            lambda bi, h, j, pt, ln: (
+                jnp.maximum(pt[bi * pps + jmod(j)], 0), 0, h))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(B, Hkv, pps),
+        grid=(B, Hkv, 2 * pps if quant_p else pps),
         in_specs=[
             pl.BlockSpec((1, 1, g, hd), lambda bi, h, j, pt, ln: (bi, h, 0, 0)),
             pl.BlockSpec((1, page_size, 1, hd), page_map),
             pl.BlockSpec((1, page_size, 1, hd), page_map),
             scale_spec,
             scale_spec,
+            pl.BlockSpec((1, 1), lambda bi, h, j, pt, ln: (0, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, g, hd),
                                lambda bi, h, j, pt, ln: (bi, h, 0, 0)),
@@ -162,7 +210,7 @@ def decode_attention(q, k_pages, v_pages, page_table, lengths, *,
     )
     kernel = functools.partial(
         _decode_kernel, page_size=page_size, pages_per_slot=pps,
-        scale=scale, softcap=softcap, per_head=per_head)
+        scale=scale, softcap=softcap, per_head=per_head, quant_p=quant_p)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -170,4 +218,4 @@ def decode_attention(q, k_pages, v_pages, page_table, lengths, *,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(pt_flat, lengths, q, k_pages, v_pages, k_scale, v_scale)
+    )(pt_flat, lengths, q, k_pages, v_pages, k_scale, v_scale, ps_op)

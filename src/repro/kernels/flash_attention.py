@@ -24,8 +24,10 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.pallas_compat import CompilerParams
+from repro.kernels.quant_linear import fit_block
 
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+INT8_MIN = -128
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
@@ -85,6 +87,100 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     def _finish():
         l = jnp.maximum(l_ref[...], 1e-30)
         o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def _quant_kernel(q_ref, k_ref, v_ref, kpos_ref, qs_ref, ks_ref, ps_ref,
+                  vs_ref, os_ref, o_ref, *,
+                  softcap: Optional[float], requant: bool):
+    """Fully-int8 encoder attention for one (batch*head, q-block) tile.
+
+    QK^T and P·V run int8 on the MXU; the softmax itself is exact f32 (it
+    is a reduction, not a GEMM), but its *output* is quantized with the
+    asymmetric unsigned scheme (zero point -128, scale = amax/255 — all
+    256 code points land in [0, 1]) before the value matmul, exactly
+    mirroring ``quant_bmm(..., unsigned_a=True)`` in the reference path.
+    With ``requant`` the epilogue emits int8 at the attn_out GEMM's
+    calibrated activation scale — the whole-layer int8 span's first hop.
+    """
+    s = jax.lax.dot_general(q_ref[0], k_ref[0], (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.int32)
+    s = s.astype(jnp.float32) * (qs_ref[...] * ks_ref[...])
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(kpos_ref[...] >= 0, s, NEG_INF)       # validity mask
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)          # exact softmax
+    # unsigned-int8 softmax epilogue: codes = round(p / ps) + INT8_MIN
+    pq = jnp.clip(jnp.round(p / ps_ref[...]) + INT8_MIN, -128, 127) \
+        .astype(jnp.int8)
+    v = v_ref[0]
+    acc = jax.lax.dot_general(pq, v, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    # zero-point correction: dot(codes - zp, v) = dot(codes, v) - zp*sum(v)
+    vsum = jnp.sum(v.astype(jnp.int32), axis=0, keepdims=True)
+    acc = acc - INT8_MIN * vsum
+    o = acc.astype(jnp.float32) * (ps_ref[...] * vs_ref[...])
+    if requant:
+        o_ref[0] = jnp.clip(jnp.round(o / os_ref[...]), -128, 127) \
+            .astype(jnp.int8)
+    else:
+        o_ref[0] = o.astype(o_ref.dtype)
+
+
+def quant_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                          k_pos: jax.Array, *,
+                          q_scale, k_scale, p_scale, v_scale,
+                          o_scale=None, softcap: Optional[float] = None,
+                          out_dtype=jnp.float32, bq: int = 256,
+                          interpret: bool = False) -> jax.Array:
+    """Fully-quantized bidirectional (encoder) attention.
+
+    q: (B, Hq, Sq, d) int8 — quantized from ``q_float * rsqrt(d)`` at the
+    calibrated ``q`` scale, so no further score scaling happens in-kernel;
+    k, v: (B, Hkv, Sk, d) int8 with Hq % Hkv == 0 (GQA: the head grid
+    indexes kv heads by integer division, like the float flash kernel);
+    k_pos: (B, Sk) int32 key positions, -1 = padding (masked). The four
+    scheme scales are scalar **operands**; ``o_scale`` (also an operand)
+    switches the epilogue to int8 output at the attn_out GEMM's activation
+    scale. The whole key axis is resident per tile (encoder lengths; no
+    online-softmax state), queries tile by ``bq``.
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    g = Hq // Hkv
+    bq = fit_block(Sq, bq)
+    qf = q.reshape(B * Hq, Sq, D)
+    kf = k.reshape(B * Hkv, Sk, D)
+    vf = v.reshape(B * Hkv, Sk, D)
+    kpos = jnp.broadcast_to(jnp.asarray(k_pos, jnp.int32).reshape(-1, Sk),
+                            (B, Sk))
+    requant = o_scale is not None
+    scalars = [jnp.asarray(x, jnp.float32).reshape(1, 1)
+               for x in (q_scale, k_scale, p_scale, v_scale,
+                         o_scale if requant else 1.0)]
+    kernel = functools.partial(_quant_kernel, softcap=softcap,
+                               requant=requant)
+    scalar_spec = pl.BlockSpec((1, 1), lambda h, i: (0, 0))
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, Sq // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, Sk, D), lambda h, i, g=g: (h // g, 0, 0)),
+            pl.BlockSpec((1, Sk, D), lambda h, i, g=g: (h // g, 0, 0)),
+            pl.BlockSpec((1, Sk), lambda h, i, H=Hq: (h // H, 0)),
+            scalar_spec, scalar_spec, scalar_spec, scalar_spec, scalar_spec,
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (B * Hq, Sq, D), jnp.int8 if requant else out_dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(qf, kf, vf, kpos, *scalars)
+    return out.reshape(B, Hq, Sq, D)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -34,13 +34,15 @@ KERNEL_INTERPRET = jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "act", "out_scale", "out_dtype", "bm", "bn", "bk"))
+    "act", "out_dtype", "bm", "bn", "bk"))
 def quant_linear(x_q, w_q, w_scale, x_scale: Union[float, jax.Array], *,
                  bias=None, act: Optional[str] = None,
-                 out_scale: Optional[float] = None,
+                 out_scale: Union[float, jax.Array, None] = None,
                  out_dtype=jnp.bfloat16, bm=128, bn=128, bk=128):
     """Fused W8A8 GEMM; ``x_scale`` is a scalar (static per-tensor) or
-    (M,)/(M, 1) per-token operand."""
+    (M,)/(M, 1) per-token operand. ``out_scale`` (requantize-to-int8
+    epilogue) is likewise an operand — only its presence/absence is
+    structural."""
     return _ql.quant_linear(x_q, w_q, w_scale, x_scale, bias=bias, act=act,
                             out_scale=out_scale, out_dtype=out_dtype,
                             bm=bm, bn=bn, bk=bk,
@@ -50,12 +52,15 @@ def quant_linear(x_q, w_q, w_scale, x_scale: Union[float, jax.Array], *,
 @functools.partial(jax.jit, static_argnames=("kind", "eps", "bm"))
 def addnorm_quant(x, residual, bias, gamma, beta,
                   x_scale: Union[float, jax.Array], *,
+                  x_in_scale: Union[float, jax.Array, None] = None,
                   kind: str = "layernorm", eps: float = 1e-6, bm: int = 256):
     """Fused residual add + norm + requantize; ``x_scale`` is a scalar
-    operand (the consuming GEMM's static activation scale)."""
+    operand (the consuming GEMM's static activation scale). ``x`` may be
+    int8 (a requantized GEMM output), dequantized in-kernel by the
+    ``x_in_scale`` operand."""
     return _anq.addnorm_quant(x, residual, bias, gamma, beta, x_scale,
-                              kind=kind, eps=eps, bm=bm,
-                              interpret=KERNEL_INTERPRET)
+                              x_in_scale=x_in_scale, kind=kind, eps=eps,
+                              bm=bm, interpret=KERNEL_INTERPRET)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "out_dtype"))
@@ -89,18 +94,38 @@ def flash_attention(q, k, v, *, causal: bool = False,
                                interpret=KERNEL_INTERPRET)
 
 
+@functools.partial(jax.jit, static_argnames=(
+    "softcap", "out_dtype", "bq"))
+def quant_flash_attention(q, k, v, k_pos, *, q_scale, k_scale, p_scale,
+                          v_scale, o_scale=None,
+                          softcap: Optional[float] = None,
+                          out_dtype=jnp.float32, bq: int = 256):
+    """Fully-int8 encoder attention with the unsigned-uint8 softmax
+    epilogue. All five scheme scales are scalar **operands** —
+    recalibrating a plan's softmax/attention scales never retraces; only
+    ``o_scale``'s presence (int8 vs float output) is structural."""
+    return _fa.quant_flash_attention(q, k, v, k_pos, q_scale=q_scale,
+                                     k_scale=k_scale, p_scale=p_scale,
+                                     v_scale=v_scale, o_scale=o_scale,
+                                     softcap=softcap, out_dtype=out_dtype,
+                                     bq=bq, interpret=KERNEL_INTERPRET)
+
+
 @functools.partial(jax.jit, static_argnames=("per_head", "scale", "softcap"))
 def decode_attention(q, k_pages, v_pages, page_table, lengths, *,
                      k_scale, v_scale, per_head: bool,
                      scale: Optional[float] = None,
-                     softcap: Optional[float] = None):
+                     softcap: Optional[float] = None,
+                     p_scale=None):
     """Paged int8-KV decode attention (single query token per slot).
 
     ``page_table``/``lengths`` are operands — slots churn every step and
     must not retrace; the kv scheme (``per_head``) and page geometry are
-    static and baked into the executable key by the serving runtime."""
+    static and baked into the executable key by the serving runtime.
+    ``p_scale`` (the plan's ``softmax='uint8'`` scheme) is a scalar
+    operand; its presence selects the two-pass quantized-softmax grid."""
     return _da.decode_attention(q, k_pages, v_pages, page_table, lengths,
                                 k_scale=k_scale, v_scale=v_scale,
                                 per_head=per_head, scale=scale,
-                                softcap=softcap,
+                                softcap=softcap, p_scale=p_scale,
                                 interpret=KERNEL_INTERPRET)

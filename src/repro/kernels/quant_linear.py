@@ -52,8 +52,8 @@ def fit_block(n: int, b: int) -> int:
     return b
 
 
-def _kernel(x_ref, w_ref, ws_ref, xs_ref, b_ref, o_ref, acc_ref, *,
-            nk: int, act: Optional[str], out_scale: Optional[float]):
+def _kernel(x_ref, w_ref, ws_ref, xs_ref, b_ref, os_ref, o_ref, acc_ref, *,
+            nk: int, act: Optional[str], requant: bool):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -71,8 +71,8 @@ def _kernel(x_ref, w_ref, ws_ref, xs_ref, b_ref, o_ref, acc_ref, *,
         y = y * (xs_ref[...] * ws_ref[...])      # dequant: (bm,1) x (1,bn)
         y = y + b_ref[...]
         y = ACTIVATIONS[act](y)
-        if out_scale is not None:                # requantize: int8 stays int8
-            q = jnp.round(y / out_scale)
+        if requant:                              # requantize: int8 stays int8
+            q = jnp.round(y / os_ref[...])
             o_ref[...] = jnp.clip(q, -128, 127).astype(jnp.int8)
         else:
             o_ref[...] = y.astype(o_ref.dtype)
@@ -82,7 +82,7 @@ def quant_linear(x_q: jax.Array, w_q: jax.Array, w_scale: jax.Array,
                  x_scale: Union[float, jax.Array], *,
                  bias: Optional[jax.Array] = None,
                  act: Optional[str] = None,
-                 out_scale: Optional[float] = None,
+                 out_scale: Union[float, jax.Array, None] = None,
                  out_dtype=jnp.bfloat16,
                  bm: int = 128, bn: int = 128, bk: int = 128,
                  interpret: bool = False) -> jax.Array:
@@ -92,7 +92,9 @@ def quant_linear(x_q: jax.Array, w_q: jax.Array, w_scale: jax.Array,
     x_scale: a python float / scalar array (static per-tensor activation
     scale — the paper's calibrated scheme) or an (M,) / (M, 1) array of
     per-token dynamic scales. ``out_scale`` requantizes the output to int8
-    for int8 inter-layer dataflow.
+    for int8 inter-layer dataflow; like ``x_scale`` it is a scalar
+    **operand** (only its presence is structural), so recalibrating the
+    consumer's scale never retraces.
     """
     M, K = x_q.shape
     K2, N = w_q.shape
@@ -106,7 +108,10 @@ def quant_linear(x_q: jax.Array, w_q: jax.Array, w_scale: jax.Array,
         xs = jnp.broadcast_to(xs.reshape(1, 1), (M, 1))
     else:
         xs = xs.reshape(M, 1)
-    kernel = functools.partial(_kernel, nk=nk, act=act, out_scale=out_scale)
+    requant = out_scale is not None
+    os_op = jnp.asarray(out_scale if requant else 1.0,
+                        jnp.float32).reshape(1, 1)
+    kernel = functools.partial(_kernel, nk=nk, act=act, requant=requant)
     out = pl.pallas_call(
         kernel,
         grid=(M // bm, N // bn, nk),
@@ -116,14 +121,15 @@ def quant_linear(x_q: jax.Array, w_q: jax.Array, w_scale: jax.Array,
             pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
             pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
             pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct(
-            (M, N), jnp.int8 if out_scale is not None else out_dtype),
+            (M, N), jnp.int8 if requant else out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x_q, w_q, w_scale.reshape(1, N).astype(jnp.float32), xs,
-      bias.reshape(1, N).astype(jnp.float32))
+      bias.reshape(1, N).astype(jnp.float32), os_op)
     return out

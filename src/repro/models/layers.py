@@ -107,7 +107,14 @@ def dense(x, p: dict, obs: Optional[dict] = None,
             dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())))
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
-    return _ACT[act](y) if act is not None else y
+    y = _ACT[act](y) if act is not None else y
+    if "out_xs" in p:
+        # norm='int8' span: the fused kernel requantizes this GEMM's output
+        # in its epilogue; the reference path mirrors that as a QDQ at the
+        # same calibrated scale so backend choice never changes numerics.
+        oxs = p["out_xs"]
+        y = QuantizedTensor(quantize(y, oxs), oxs, None).dequantize(y.dtype)
+    return y
 
 
 def quant_bmm(a: jax.Array, b: jax.Array,
@@ -192,6 +199,8 @@ def residual_norm(delta: jax.Array, x: jax.Array, p: dict, kind: str, *,
         if fused is not None:
             x_new, h = fused
             return constrain(x_new, "residual"), h
+    if isinstance(delta, QuantActivation):
+        delta = delta.dequantize()      # int8 span ends here (no fused claim)
     x_new = constrain(x + delta, "residual")
     return x_new, norm(x_new, p, kind)
 
@@ -244,9 +253,17 @@ class AttnQuant:
     ``softmax_mode``: 'symmetric' reproduces the paper's pathology
     (Appendix B), 'unsigned' is the beyond-paper fix, 'none' keeps the
     softmax output float even when the rest of MHA is quantized.
+
+    ``plan_scheme`` is the layer's schema-v3 ``softmax`` scheme ('uint8' or
+    None) from the PrecisionPlan — per-layer, overriding the global
+    ``softmax_mode`` policy: 'uint8' forces the unsigned quantized-softmax
+    dataflow in the quant-MHA path, and makes the *reference* (float-bmm /
+    decode-gather) paths quantize-dequantize the softmax output at the
+    calibrated ``p`` scale so backend choice never changes numerics.
     """
     enabled: bool = False
     softmax_mode: str = "symmetric"
+    plan_scheme: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -349,10 +366,19 @@ def attention_core(q: jax.Array, k: jax.Array, v: jax.Array,
         observe(obs, "p", p)
         observe_values(obs, "p", p)
         observe(obs, "v", vh)
-        if quant.enabled and quant.softmax_mode != "none":
+        if (not quant.enabled and quant.plan_scheme == "uint8"
+                and sc.get("p") is not None):
+            # plan says softmax='uint8' but this path keeps float bmms
+            # (e.g. the reference decode gather): QDQ the probabilities at
+            # the calibrated scale so numerics match the fused kernels,
+            # which quantize p in their PV epilogue.
+            p = quantize_unsigned(p, sc["p"] * UINT8_MAX).dequantize(p.dtype)
+        if quant.enabled and (quant.softmax_mode != "none"
+                              or quant.plan_scheme == "uint8"):
             p_scale = sc.get("p")
             o = quant_bmm(p, vh, p_scale, sc.get("v"),
-                          unsigned_a=(quant.softmax_mode == "unsigned"))
+                          unsigned_a=(quant.softmax_mode == "unsigned"
+                                      or quant.plan_scheme == "uint8"))
         elif grouped:
             bq = p.shape[2]
             pg = p.reshape(B, Hkv, groups, bq, -1)
@@ -670,7 +696,9 @@ def attention_block(x: jax.Array, p: dict, cfg, *, positions: jax.Array,
                 o = backend.decode_attention(
                     q, new_cache, pages, positions=positions, active=active,
                     scale=scale, softcap=cfg.attn_softcap,
-                    static_scales=static_sc)
+                    static_scales=static_sc,
+                    p_scale=(p.get("p_scale")
+                             if quant.plan_scheme == "uint8" else None))
             if o is None:
                 (k, v), k_pos = _paged_cache_read(
                     new_cache, pages, ("k", "v"), x.dtype, static_sc)
@@ -685,6 +713,14 @@ def attention_block(x: jax.Array, p: dict, cfg, *, positions: jax.Array,
             k_pos = new_cache["k_pos"]
         # prefill (S > 1): attend over in-sequence K/V (the cache may be a
         # ring buffer narrower than S — it only feeds later decode steps)
+    if (o is None and kv_cache is None and backend is not None
+            and quant.enabled and quant.plan_scheme == "uint8"):
+        # fully-quantized encoder core: the fused kernel runs int8 QK^T,
+        # the unsigned softmax epilogue and int8 P·V in one pass — and
+        # under a norm='int8' span returns the output already requantized
+        # (a QuantActivation) at the attn_out GEMM's activation scale
+        o = backend.attention(q, k, v, p, k_pos=k_pos, spec=spec,
+                              scale=scale, softcap=cfg.attn_softcap)
     if o is None:
         sc = {s: p[f"{s}_scale"] for s in ("q", "k", "p", "v")
               if f"{s}_scale" in p} or None
@@ -696,6 +732,8 @@ def attention_block(x: jax.Array, p: dict, cfg, *, positions: jax.Array,
     observe(obs, "attn_out", o)
     observe_values(obs, "attn_out", o)
     out = dense(o, p["wo"], obs=None, backend=backend)
+    observe(obs, "attn_delta", out)         # pre-norm site: the residual
+    observe_values(obs, "attn_delta", out)  # delta a norm='int8' span carries
     return out, new_cache
 
 

@@ -62,6 +62,11 @@ class Group:
     kinds: tuple[BlockKind, ...]
     steps: int
     quant_bmm: Optional[bool] = None
+    #: schema-v3 per-layer softmax dataflow scheme ('uint8' quantizes the
+    #: softmax output between the score and value matmuls; None = follow
+    #: the global QuantScheme.softmax_mode policy). Uniform within a group:
+    #: PrecisionPlan.group_boundaries splits on full LayerPlan equality.
+    softmax: Optional[str] = None
 
     @property
     def scan(self) -> bool:
@@ -82,9 +87,15 @@ def build_plan(cfg: ArchConfig, policy) -> tuple[Group, ...]:
     # per-block plans quantize the attention bmms iff the qkv block is
     # quantized; the mode lattice ties them to quant_mha
     bmm_fn = getattr(policy, "bmm_quantized", None)
+    # schema-v3 plans carry a per-layer softmax scheme; EncoderPolicy (and
+    # v1/v2 plans, whose layers default to 'float') fall back to the global
+    # QuantScheme policy via None
+    sm_fn = getattr(policy, "softmax_scheme", None)
 
     for (s, e, mode) in policy.group_boundaries():
         quant_bmm = bmm_fn(s) if bmm_fn is not None else mode.quant_mha
+        sm = sm_fn(s) if sm_fn is not None else None
+        sm = None if sm == "float" else sm
         # Greedy maximal runs: prefer a homogeneous run; else a run that is
         # periodic with the arch's block pattern (possibly rotated); else a
         # single unrolled layer. Handles pattern alternation (gemma2,
@@ -103,11 +114,11 @@ def build_plan(cfg: ArchConfig, policy) -> tuple[Group, ...]:
                     jp += p
             if jp - i > max(j1 - i, p):
                 groups.append(Group(i, jp, mode, tuple(kinds[i:i + p]),
-                                    (jp - i) // p, quant_bmm))
+                                    (jp - i) // p, quant_bmm, sm))
                 i = jp
             else:
                 groups.append(Group(i, j1, mode, (kinds[i],), j1 - i,
-                                    quant_bmm))
+                                    quant_bmm, sm))
                 i = j1
     return tuple(groups)
 
@@ -234,10 +245,11 @@ def repack(params: dict, old_plan: tuple[Group, ...],
 def layer_forward(x, lp, cfg: ArchConfig, kind: BlockKind, mode: LayerMode,
                   scheme: QuantScheme, *, positions, obs, cache, chunk,
                   constrain: Constrain, active=None, quant_bmm=None,
-                  pages=None, backend=None):
+                  softmax=None, pages=None, backend=None):
     quant = L.AttnQuant(enabled=(mode.quant_mha if quant_bmm is None
                                  else quant_bmm),
-                        softmax_mode=scheme.softmax_mode)
+                        softmax_mode=scheme.softmax_mode,
+                        plan_scheme=softmax)
     spec = L.MaskSpec(
         causal=cfg.causal,
         window=cfg.sliding_window if kind.local else None,
@@ -257,6 +269,8 @@ def layer_forward(x, lp, cfg: ArchConfig, kind: BlockKind, mode: LayerMode,
                 constrain=constrain, chunk=chunk, pages=pages,
                 backend=backend)
         if kind.moe:
+            if isinstance(a, L.QuantActivation):
+                a = a.dequantize()      # MoE residual keeps the float path
             x = constrain(x + a, "residual")
             h2 = L.norm(x, lp["norm2"], cfg.norm_kind)
             f = L.moe_block(h2, lp["ffn"], cfg, obs=obs, constrain=constrain)
@@ -312,8 +326,8 @@ def run_groups(x, params, cfg: ArchConfig, plan: tuple[Group, ...],
                 return layer_forward(
                     xc, lp, cfg, kind, mode, scheme, positions=positions,
                     obs=lobs, cache=lcache, chunk=chunk, constrain=constrain,
-                    active=active, quant_bmm=g.quant_bmm, pages=pages,
-                    backend=backend)
+                    active=active, quant_bmm=g.quant_bmm, softmax=g.softmax,
+                    pages=pages, backend=backend)
             return (jax.checkpoint(lf) if remat and lobs is None else lf)
 
         if unrolled:

@@ -115,6 +115,10 @@ SITE_BLOCK: dict[str, str] = {
     for (_g, _p, site, block) in entries
 }
 SITE_BLOCK.update({s: "qkv" for s in BMM_SITES})
+# pre-norm residual delta (the attn_out GEMM's *output*): calibrates the
+# requant scale that lets the whole-layer int8 span (LayerPlan.norm='int8')
+# hand the fused add+norm an int8 delta. Rides the attn_out block's spec.
+SITE_BLOCK["attn_delta"] = "attn_out"
 
 
 def _kind_entries(cfg: ArchConfig, kind: BlockKind):
@@ -198,11 +202,44 @@ def quantize_layer(lp: dict, cfg: ArchConfig, kind: BlockKind,
         for s in BMM_SITES:
             if s not in amax:
                 continue
-            if s == "p" and scheme.softmax_mode == "unsigned":
+            if s == "p" and (scheme.softmax_mode == "unsigned"
+                             or layer.softmax == "uint8"):
+                # softmax outputs live in [0, 1]: asymmetric unsigned scale
+                # (amax/255, zero point -128) uses the full code space —
+                # LayerPlan.softmax='uint8' forces it per layer even when
+                # the global scheme knob stays symmetric
                 sc = jnp.float32(max(amax[s], 1e-8)) / UINT8_MAX
             else:
                 sc = compute_scale_symmetric(jnp.float32(amax[s]))
             attn[f"{s}_scale"] = jnp.asarray(sc)
+    elif (kind.body == "attn" and layer.softmax == "uint8"
+          and "p" in amax):
+        # decode-side softmax quantization (int8 KV, float qkv block): the
+        # fused decode kernel re-quantizes the probabilities with p_scale
+        lp["attn"]["p_scale"] = jnp.asarray(
+            jnp.float32(max(amax["p"], 1e-8)) / UINT8_MAX)
+    if kind.body == "attn" and layer.norm == "int8":
+        # whole-layer int8 span: the attn_out GEMM re-quantizes its output
+        # (the pre-norm residual delta) so the fused add+norm consumes int8
+        if "attn_delta" not in amax:
+            raise ValueError(
+                "norm='int8' needs calibrated attn_delta stats for this "
+                "layer; re-run capture_stats on this plan")
+        wo = dict(lp["attn"]["wo"])
+        wo["out_xs"] = jnp.asarray(
+            compute_scale_symmetric(jnp.float32(amax["attn_delta"])))
+        lp["attn"]["wo"] = wo
+        if (cfg.ffn_kind != "glu" and not kind.moe
+                and layer.ffn_out.quantized and layer.ffn_out.static_acts
+                and "ffn_hidden" in amax):
+            # extend the span through the FFN: wi re-quantizes its GELU'd
+            # hidden at the scale wo already consumes it at (its own xs) —
+            # the boundary is numerics-neutral through wo. GLU hiddens are
+            # the product of two GEMMs and keep the float boundary.
+            wi = dict(lp["ffn"]["wi"])
+            wi["out_xs"] = jnp.asarray(
+                compute_scale_symmetric(jnp.float32(amax["ffn_hidden"])))
+            lp["ffn"]["wi"] = wi
     if kind.body == "attn" and layer.kv_cache == "int8_per_head":
         # static KV-cache scales: the per-head amax vectors recorded by
         # observe_per_head at the k_cache/v_cache sites (post-rope)
@@ -232,7 +269,8 @@ def _copy_dicts(tree):
 # calibration capture
 # ---------------------------------------------------------------------------
 
-HIST_SITES = ("attn_in", "attn_out", "ffn_in", "ffn_hidden", "p")
+HIST_SITES = ("attn_in", "attn_out", "attn_delta", "ffn_in", "ffn_hidden",
+              "p")
 
 
 def capture_stats(params: dict, batches: Sequence[dict], cfg: ArchConfig,

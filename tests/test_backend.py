@@ -13,8 +13,8 @@ import pytest
 
 from repro.configs import get_config
 from repro.core.calibration import synthetic_calibration_batches
-from repro.core.plan import (BLOCKS, LayerPlan, PrecisionPlan, QuantSpec,
-                             INT8_SPEC)
+from repro.core.plan import (BLOCKS, LayerMode, LayerPlan, PrecisionPlan,
+                             QuantSpec, INT8_SPEC)
 from repro.kernels import ops, ref
 from repro.kernels.backend import (BACKENDS, ComputeBackend, FusedBackend,
                                    QuantActivation, ffn_input_scale,
@@ -248,6 +248,46 @@ def test_runtime_same_backend_shares_executables(bert_setup):
     rt.encode(qparams, inputs)
     sibling.encode(qparams, inputs)
     assert rt.stats["executables"] == 1              # one shared entry
+
+
+def test_recalibrating_dataflow_scales_does_not_retrace(bert_setup):
+    """Scales are kernel *operands*, never trace constants: recalibrating
+    the whole-layer span's softmax/norm scales (``p_scale``, ``out_xs``,
+    ``xs``) swaps scale values inside an identical pytree structure, so a
+    warm Runtime must serve the new params without retracing."""
+    cfg, params, float_plan, _, batch = bert_setup
+    span = PrecisionPlan.uniform(
+        cfg.num_layers,
+        LayerPlan.for_mode(LayerMode.FULLY_QUANT, softmax="uint8",
+                           norm="int8"),
+        float_dtype="float32")
+    qp = []
+    for seq_len in (16, 24):                   # two calibration passes
+        stats = ptq.capture_stats(
+            params, synthetic_calibration_batches(cfg, num_batches=2,
+                                                  seq_len=seq_len),
+            cfg, float_plan, precision=span)
+        qparams, qplan = ptq.apply_plan(params, cfg, span, stats,
+                                        float_plan=float_plan)
+        qp.append(qparams)
+    # the recalibration really moved the span scales
+    a1 = T.unpack_layers(qp[0], qplan)[0]["attn"]
+    a2 = T.unpack_layers(qp[1], qplan)[0]["attn"]
+    moved = any(
+        not np.allclose(np.asarray(x), np.asarray(y))
+        for x, y in ((a1["p_scale"], a2["p_scale"]),
+                     (a1["wo"]["out_xs"], a2["wo"]["out_xs"]),
+                     (a1["wo"]["xs"], a2["wo"]["xs"])))
+    assert moved, "recalibration produced identical scales"
+    rt = Runtime(cfg, qplan, precision=span, compute_dtype=jnp.float32,
+                 backend="fused")
+    inputs = {k: np.asarray(v) for k, v in batch.items()}
+    out1 = rt.encode(qp[0], inputs)
+    assert rt.stats["traces"] == 1
+    out2 = rt.encode(qp[1], inputs)
+    assert rt.stats["traces"] == 1, "recalibrated scales must not retrace"
+    assert np.all(np.isfinite(np.asarray(out1)))
+    assert np.all(np.isfinite(np.asarray(out2)))
 
 
 # ---------------------------------------------------------------------------

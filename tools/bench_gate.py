@@ -38,6 +38,13 @@ committed baseline and fails (exit 1) when the serving stack regresses:
 
 Both artifacts must record the same ``plan_fingerprint`` — a tokens/s
 delta measured under different precision plans is noise, not signal.
+
+``--fusion`` switches to the kernel-fusion artifact emitted by
+``benchmarks/fusion_ablation.py --out``: every fused row's modeled HBM
+bytes must stay strictly below its unfused sequence, and the
+``layer_span`` row (the whole-layer int8 dataflow) must be present —
+losing it would silently un-gate the span fusion's memory claim. Modeled
+bytes are machine-independent, so no baseline or tolerance applies.
 """
 from __future__ import annotations
 
@@ -147,11 +154,36 @@ def gate(new: dict, base: dict, *, tps_tolerance: float,
     return 0
 
 
+def gate_fusion(artifact: dict) -> int:
+    """Gate a ``fusion_ablation`` artifact: fused < unfused, per row."""
+    rows = artifact.get("fusion_ablation", {})
+    _check("layer_span" in rows, "fusion.layer_span",
+           "whole-layer int8 span row present"
+           if "layer_span" in rows else "row missing from artifact")
+    for name, r in sorted(rows.items()):
+        if not r.get("gated", True):
+            continue          # e.g. fused_embed: CPU cost model artifact
+        fused, unfused = r["fused_bytes"], r["unfused_bytes"]
+        _check(fused < unfused, f"fusion.{name}",
+               f"fused {fused / 1e6:.1f} MB vs unfused "
+               f"{unfused / 1e6:.1f} MB")
+    if _fails:
+        print(f"[bench_gate] {len(_fails)} check(s) failed: "
+              + ", ".join(_fails))
+        return 1
+    print("[bench_gate] all checks passed")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("artifact", help="freshly generated BENCH_serve.json")
     ap.add_argument("--baseline",
                     default="benchmarks/BENCH_serve_baseline.json")
+    ap.add_argument("--fusion", action="store_true",
+                    help="artifact is a fusion_ablation JSON; assert every "
+                         "fused row's modeled HBM bytes < unfused (no "
+                         "baseline needed)")
     ap.add_argument("--tps-tolerance", type=float, default=0.20,
                     help="allowed fractional tokens/s regression")
     ap.add_argument("--skip-throughput", action="store_true",
@@ -161,6 +193,8 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     with open(args.artifact) as f:
         new = json.load(f)
+    if args.fusion:
+        return gate_fusion(new)
     with open(args.baseline) as f:
         base = json.load(f)
     return gate(new, base, tps_tolerance=args.tps_tolerance,
