@@ -26,6 +26,11 @@ emits ``BENCH_serve.json``:
 * ``frontend`` — the HTTP front-end under an over-capacity open-loop
   load (``benchmarks/serve_http_load.py``): client-observed latency plus
   the admission controller's ``rejection_rate``;
+* ``moe`` — the mixture-of-experts point of the architecture matrix:
+  reduced mixtral-8x22b decoding under a schema-v4 ``experts``-family
+  plan (per-expert int8 weight scales, float router) through the same
+  harness — ``tools/bench_gate.py`` asserts the point exists and served
+  with zero steady-state retraces;
 * ``adaptive`` — input-adaptive routing cost (docs/adaptive-precision.md):
   the encoder load through a routed deployment at K=1 (pure routing
   overhead — ``tools/bench_gate.py`` holds it within 5% of unrouted) and
@@ -346,6 +351,40 @@ def bench_encoder_routed(n_requests: int, policy: str, *, edges,
             **_percentiles(lat)}
 
 
+def bench_moe(n_requests: int, max_tokens: int, *,
+              backend: str = "reference", mesh=None) -> dict:
+    """Per-expert MoE decode (schema v4): reduced mixtral-8x22b under an
+    ``experts``-family plan — int8_per_channel expert stacks with
+    per-expert (E, 1, 1) activation scales, float router — through the
+    same decode harness as the dense points. The plan rides a temp file
+    through the CLI's ``--plan`` build flow (synthetic calibration
+    captures the per-expert ``expert_in``/``expert_hidden`` amax sites),
+    so the benchmark serves exactly what the launcher serves."""
+    import tempfile
+
+    from repro.core.plan import plan_from_policy
+    from repro.core.precision import make_policy
+    from repro.core.samp import moe_family_variant
+
+    cfg = get_config("mixtral-8x22b").reduced()
+    precision = moe_family_variant(plan_from_policy(make_policy(cfg, "ffn")))
+    with tempfile.NamedTemporaryFile("w", suffix=".json",
+                                     delete=False) as f:
+        path = f.name
+    precision.save(path)
+    try:
+        built = _build("mixtral-8x22b", "ffn", plan_file=path)
+    finally:
+        os.unlink(path)
+    r = bench_decode(n_requests, max_tokens, "ffn", backend=backend,
+                     mesh=mesh, built=built)
+    r["engine"] = "moe_decode"
+    r["plan_fingerprint"] = precision.fingerprint()
+    r["num_experts"] = cfg.moe.num_experts
+    r["moe_top_k"] = cfg.moe.top_k
+    return r
+
+
 def bench_frontend(n_requests: int, policy: str, plan_file=None,
                    backend: str = "reference", mesh=None, *,
                    max_pending: int = 2, concurrency: int = 8) -> dict:
@@ -417,6 +456,11 @@ def main(quick: bool = False, out: str = "BENCH_serve.json",
         "frontend": bench_frontend(8 if quick else 24, policy=policy,
                                    plan_file=plan_file, backend=backend,
                                    mesh=mesh),
+        # the MoE point of the architecture matrix: per-expert int8 under
+        # a schema-v4 experts-family plan (bench_gate asserts presence)
+        "moe": bench_moe(4 if quick else 8,
+                         max_tokens=4 if quick else 12,
+                         backend=backend, mesh=mesh),
         # float-vs-paged-int8 decode at increasing concurrency: the
         # kv_cache_bytes column is the paged-int8 claim, measured
         "decode_sweep": bench_decode_sweep(
@@ -448,6 +492,11 @@ def main(quick: bool = False, out: str = "BENCH_serve.json",
              f"(unrouted {result['adaptive']['unrouted_requests_per_s']:.1f})"
              f" retraces={r['retraces']} executables={r['executables']} "
              f"per_cluster_p95={p95s}")
+    mo = result["moe"]
+    emit(f"[moe] arch={mo['arch']} experts={mo['num_experts']} "
+         f"top_k={mo['moe_top_k']} backend={mo['backend']}: "
+         f"{mo['requests_per_s']:.1f} req/s "
+         f"p95={mo['p95_latency_s']:.3f}s retraces={mo['retraces']}")
     for side in ("decode", "encoder", "encoder_fused"):
         r = result[side]
         emit(f"[{side}] backend={r['backend']} mesh={r['mesh']}: "

@@ -38,13 +38,23 @@ def synthetic_calibration_batches(cfg, *, num_batches: int = 4,
     synthetic uniform-token batches when no task stream exists (randomly
     initialized weights see no distribution shift either way); this is the
     one implementation of that batch stream. BERT-family configs get the
-    zero segment ids their embedding expects.
+    zero segment ids their embedding expects; audio front-ends get unit
+    normal feature frames instead of tokens, and vision-prefixed configs
+    get normal prefix embeddings alongside the token stream.
     """
     batches = []
     for i in range(num_batches):
-        b = {"tokens": jax.random.randint(jax.random.PRNGKey(seed + i),
-                                          (batch_size, seq_len), 0,
+        key = jax.random.PRNGKey(seed + i)
+        if cfg.frontend == "audio":
+            batches.append({"frames": jax.random.normal(
+                key, (batch_size, seq_len, cfg.frontend_dim))})
+            continue
+        b = {"tokens": jax.random.randint(key, (batch_size, seq_len), 0,
                                           cfg.vocab_size)}
+        if cfg.frontend == "vision":
+            b["prefix_embeds"] = jax.random.normal(
+                jax.random.fold_in(key, 1),
+                (batch_size, cfg.num_prefix_embeds, cfg.frontend_dim))
         if cfg.num_segments:
             b["segments"] = jnp.zeros((batch_size, seq_len), jnp.int32)
         batches.append(b)

@@ -37,7 +37,7 @@ from typing import Mapping, Optional, Sequence, Union
 
 from repro.core.precision import EncoderPolicy, LayerMode
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 WEIGHT_SCHEMES = ("float", "int8_per_channel", "int8_per_tensor")
 ACT_SCHEMES = ("float", "int8_per_tensor", "int8_per_token")
@@ -45,6 +45,19 @@ KV_CACHE_SCHEMES = ("float", "int8_per_head", "int8_per_token")
 SOFTMAX_SCHEMES = ("float", "uint8")
 NORM_SCHEMES = ("float", "int8")
 BLOCKS = ("qkv", "attn_out", "ffn_in", "ffn_out")
+# Schema v4: named block *families* beyond the fixed 4-GEMM encoder layer.
+# ``experts`` spans the routed expert GEMMs of a MoE layer (per-expert
+# weight scales, shape (E, 1, F)); ``router`` is the MoE gate projection
+# (validated float-only); ``shared_ffn`` the always-on shared experts.
+BLOCK_FAMILIES = ("experts", "router", "shared_ffn")
+# Family aliases: architecture-specific GEMM groups that map onto existing
+# sites instead of silently falling to float. Alias keys are accepted in
+# plan JSON and by ``LayerPlan.spec`` and resolve to the named block.
+FAMILY_ALIASES = {
+    "recurrence_gates": "ffn_in",   # RG-LRU / xLSTM gate projections
+    "recurrence_out": "ffn_out",    # recurrent block output projection
+    "conv_stem": "ffn_in",          # audio/vision conv front-end GEMMs
+}
 FLOAT_DTYPES = ("float32", "bfloat16", "float16")
 
 
@@ -147,8 +160,30 @@ class LayerPlan:
     kv_cache: str = "float"
     softmax: str = "float"
     norm: str = "float"
+    # schema-v4 block families (None = family absent: MoE layers fall back
+    # to the ffn_in/ffn_out blocks, the router stays float)
+    experts: Optional[QuantSpec] = None
+    router: Optional[QuantSpec] = None
+    shared_ffn: Optional[QuantSpec] = None
 
     def __post_init__(self):
+        for fam in BLOCK_FAMILIES:
+            v = getattr(self, fam)
+            if v is not None and not isinstance(v, QuantSpec):
+                raise TypeError(f"family {fam!r} must be a QuantSpec or "
+                                f"None, got {type(v).__name__}")
+        if self.router is not None and self.router.quantized:
+            raise ValueError(
+                f"family 'router' must stay float: the MoE gate projection "
+                f"decides dispatch and does not survive int8 (got weight="
+                f"{self.router.weight!r}/act={self.router.act!r})")
+        if self.experts is not None and self.experts.quantized:
+            if self.experts.weight != "int8_per_channel":
+                raise ValueError(
+                    f"family 'experts' quantizes with per-expert "
+                    f"per-channel scales (shape (E, 1, F)); weight scheme "
+                    f"must be 'int8_per_channel', got "
+                    f"{self.experts.weight!r}")
         if self.kv_cache not in KV_CACHE_SCHEMES:
             raise ValueError(f"kv_cache scheme {self.kv_cache!r} not in "
                              f"{KV_CACHE_SCHEMES}")
@@ -175,9 +210,24 @@ class LayerPlan:
                         f"weight + act='int8_per_tensor')")
 
     def spec(self, block: str) -> QuantSpec:
+        block = FAMILY_ALIASES.get(block, block)
+        if block in BLOCK_FAMILIES:
+            fam = getattr(self, block)
+            if fam is not None:
+                return fam
+            # family absent: experts/shared_ffn GEMMs fall back to the
+            # input-side FFN block, the router to float
+            return FLOAT_SPEC if block == "router" else self.ffn_in
         if block not in BLOCKS:
-            raise KeyError(f"unknown block {block!r}; have {BLOCKS}")
+            raise KeyError(
+                f"unknown block {block!r}; have blocks {BLOCKS}, families "
+                f"{BLOCK_FAMILIES}, aliases {tuple(sorted(FAMILY_ALIASES))}")
         return getattr(self, block)
+
+    @property
+    def has_families(self) -> bool:
+        """Whether any schema-v4 block family is set on this layer."""
+        return any(getattr(self, fam) is not None for fam in BLOCK_FAMILIES)
 
     @property
     def quant_mha(self) -> bool:
@@ -185,6 +235,10 @@ class LayerPlan:
 
     @property
     def quant_ffn(self) -> bool:
+        if self.experts is not None and self.experts.quantized:
+            return True
+        if self.shared_ffn is not None and self.shared_ffn.quantized:
+            return True
         return self.ffn_in.quantized or self.ffn_out.quantized
 
     @property
@@ -208,14 +262,37 @@ class LayerPlan:
             d["softmax"] = self.softmax
         if self.norm != "float":
             d["norm"] = self.norm
+        for fam in BLOCK_FAMILIES:
+            v = getattr(self, fam)
+            if v is not None:
+                d[fam] = v.to_dict()
         return d
 
     @classmethod
-    def from_dict(cls, d: Mapping) -> "LayerPlan":
-        extra = set(d) - set(BLOCKS) - {"kv_cache", "softmax", "norm"}
+    def from_dict(cls, d: Mapping, *, arch_family: Optional[str] = None
+                  ) -> "LayerPlan":
+        known = set(BLOCKS) | set(BLOCK_FAMILIES) | set(FAMILY_ALIASES) \
+            | {"kv_cache", "softmax", "norm"}
+        extra = set(d) - known
         if extra:
-            raise ValueError(f"unknown blocks {sorted(extra)}; have {BLOCKS}")
+            arch = (f" (config architecture family: {arch_family!r})"
+                    if arch_family else "")
+            raise ValueError(
+                f"unknown blocks {sorted(extra)}; accepted blocks are "
+                f"{BLOCKS}, block families {BLOCK_FAMILIES}, family "
+                f"aliases {tuple(sorted(FAMILY_ALIASES))}, and layer "
+                f"fields ('kv_cache', 'softmax', 'norm'){arch}")
         kw = {b: QuantSpec.from_dict(d[b]) for b in BLOCKS if b in d}
+        for alias, target in FAMILY_ALIASES.items():
+            if alias in d:
+                if target in d:
+                    raise ValueError(
+                        f"alias {alias!r} resolves to block {target!r}, "
+                        f"which the plan also sets explicitly")
+                kw[target] = QuantSpec.from_dict(d[alias])
+        for fam in BLOCK_FAMILIES:
+            if fam in d:
+                kw[fam] = QuantSpec.from_dict(d[fam])
         for field in ("kv_cache", "softmax", "norm"):
             if field in d:
                 kw[field] = d[field]
@@ -249,6 +326,20 @@ class LayerPlan:
             kw["softmax"] = softmax
         if norm is not None:
             kw["norm"] = norm
+        return dataclasses.replace(self, **kw) if kw else self
+
+    def with_families(self, *, experts: Optional[QuantSpec] = None,
+                      router: Optional[QuantSpec] = None,
+                      shared_ffn: Optional[QuantSpec] = None) -> "LayerPlan":
+        """Same GEMM blocks, with schema-v4 block families set (only the
+        families passed are changed; pass ``FLOAT_SPEC`` to pin one float)."""
+        kw = {}
+        if experts is not None:
+            kw["experts"] = experts
+        if router is not None:
+            kw["router"] = router
+        if shared_ffn is not None:
+            kw["shared_ffn"] = shared_ffn
         return dataclasses.replace(self, **kw) if kw else self
 
 
@@ -342,16 +433,25 @@ class PrecisionPlan:
         return sum(lp.softmax != "float" or lp.norm != "float"
                    for lp in self.layers)
 
+    @property
+    def num_expert_layers(self) -> int:
+        """Layers with a quantized ``experts`` block family (schema v4)."""
+        return sum(lp.experts is not None and lp.experts.quantized
+                   for lp in self.layers)
+
     def describe(self) -> str:
         n = self.num_layers
         cals = sorted({s.calibrator for lp in self.layers for s in
-                       (lp.qkv, lp.attn_out, lp.ffn_in, lp.ffn_out)
-                       if s.quantized}) or ["-"]
+                       (lp.qkv, lp.attn_out, lp.ffn_in, lp.ffn_out,
+                        lp.experts, lp.shared_ffn)
+                       if s is not None and s.quantized}) or ["-"]
         flow = (f" FLOW {self.num_int8_dataflow}/{n}"
                 if self.num_int8_dataflow else "")
+        moe = (f" MOE {self.num_expert_layers}/{n}"
+               if self.num_expert_layers else "")
         return (f"plan MHA {self.num_quant_mha}/{n} FFN "
                 f"{self.num_quant_ffn}/{n} KV {self.num_quant_kv}/{n}"
-                f"{flow} [{self.float_dtype}] "
+                f"{flow}{moe} [{self.float_dtype}] "
                 f"cal={','.join(cals)} #{self.fingerprint()[:12]}")
 
     # -- constructors -------------------------------------------------------
@@ -420,8 +520,10 @@ class PrecisionPlan:
         # schemes as under v2, so their fingerprints (and every
         # executable-cache key / artifact identity derived from them) are
         # unchanged by newer fields
-        if any(lp.softmax != "float" or lp.norm != "float"
-               for lp in self.layers):
+        if any(lp.has_families for lp in self.layers):
+            version = 4
+        elif any(lp.softmax != "float" or lp.norm != "float"
+                 for lp in self.layers):
             version = 3
         elif any(lp.kv_cache != "float" for lp in self.layers):
             version = 2
@@ -432,11 +534,12 @@ class PrecisionPlan:
                 "layers": [lp.to_dict() for lp in self.layers]}
 
     @classmethod
-    def from_dict(cls, d: Mapping) -> "PrecisionPlan":
+    def from_dict(cls, d: Mapping, *,
+                  arch_family: Optional[str] = None) -> "PrecisionPlan":
         version = d.get("schema_version")
-        if version not in (1, 2, SCHEMA_VERSION):
+        if version not in (1, 2, 3, SCHEMA_VERSION):
             raise ValueError(f"plan schema_version {version!r} not in "
-                             f"(1, 2, {SCHEMA_VERSION})")
+                             f"(1, 2, 3, {SCHEMA_VERSION})")
         layer_dicts = [lp for lp in d.get("layers") or ()
                        if isinstance(lp, Mapping)]
         if version == 1 and any("kv_cache" in lp for lp in layer_dicts):
@@ -446,6 +549,13 @@ class PrecisionPlan:
                                for lp in layer_dicts):
             raise ValueError("'softmax'/'norm' are schema v3 fields; this "
                              f"plan declares schema_version {version}")
+        fam_keys = set(BLOCK_FAMILIES) | set(FAMILY_ALIASES)
+        if version < 4 and any(fam_keys & set(lp) for lp in layer_dicts):
+            used = sorted(set().union(*(fam_keys & set(lp)
+                                        for lp in layer_dicts)))
+            raise ValueError(
+                f"block families {used} are schema v4 fields; this plan "
+                f"declares schema_version {version}")
         extra = set(d) - {"schema_version", "float_dtype", "layers"}
         if extra:
             # reject rather than drop: a typoed key ("float_dtypes") would
@@ -454,7 +564,8 @@ class PrecisionPlan:
         layers = d.get("layers")
         if not isinstance(layers, (list, tuple)) or not layers:
             raise ValueError("plan needs a non-empty 'layers' list")
-        return cls(tuple(LayerPlan.from_dict(lp) for lp in layers),
+        return cls(tuple(LayerPlan.from_dict(lp, arch_family=arch_family)
+                         for lp in layers),
                    d.get("float_dtype", "bfloat16"))
 
     def to_json(self, indent: Optional[int] = 1) -> str:
@@ -583,7 +694,8 @@ class PlanSet:
                             for cid, p in self.members]}
 
     @classmethod
-    def from_dict(cls, d: Mapping) -> "PlanSet":
+    def from_dict(cls, d: Mapping, *,
+                  arch_family: Optional[str] = None) -> "PlanSet":
         version = d.get("planset_version")
         if version != PLANSET_VERSION:
             raise ValueError(f"planset_version {version!r} != "
@@ -602,7 +714,8 @@ class PlanSet:
             # PrecisionPlan.from_dict enforces the per-member schema rules
             # (kv_cache is v2-only, unknown fields rejected)
             pairs.append((int(m["cluster"]),
-                          PrecisionPlan.from_dict(m["plan"])))
+                          PrecisionPlan.from_dict(m["plan"],
+                                                  arch_family=arch_family)))
         return cls(tuple(pairs), d.get("default", pairs[0][0]))
 
     def to_json(self, indent: Optional[int] = 1) -> str:

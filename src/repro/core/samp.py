@@ -29,7 +29,7 @@ from typing import Callable, Optional, Sequence, Union
 
 from repro.configs.base import ArchConfig
 from repro.core import allocator
-from repro.core.plan import (LayerPlan, PrecisionPlan, as_plan,
+from repro.core.plan import (LayerPlan, PrecisionPlan, QuantSpec, as_plan,
                              plan_from_policy)
 from repro.core.precision import EncoderPolicy, LayerMode, paper_grid
 from repro.models.transformer import QuantScheme, build_plan
@@ -142,12 +142,36 @@ def int8_dataflow_variant(precision: PrecisionPlan
     return dataclasses.replace(precision, layers=tuple(layers))
 
 
+def moe_family_variant(precision: PrecisionPlan, *,
+                       dynamic_acts: bool = False
+                       ) -> Optional[PrecisionPlan]:
+    """The per-expert ``experts``-family variant of a candidate (schema
+    v4): every layer whose ffn blocks quantize additionally routes its
+    expert GEMMs through int8_per_channel weights (per-expert (E, 1, F)
+    scales) with per-expert activation scales. Returns None when no layer
+    is eligible — a dense plan, or families already set — so the grid
+    never emits duplicate candidates."""
+    act = "int8_per_token" if dynamic_acts else "int8_per_tensor"
+    spec = QuantSpec(weight="int8_per_channel", act=act)
+    layers, changed = [], False
+    for lp in precision.layers:
+        if lp.ffn_in.quantized and lp.experts is None:
+            layers.append(lp.with_families(experts=spec))
+            changed = True
+        else:
+            layers.append(lp)
+    if not changed:
+        return None
+    return dataclasses.replace(precision, layers=tuple(layers))
+
+
 def _grid_candidates(engine: "SAMPEngine", stride: int,
                      modes: Sequence[LayerMode], calibrator: str,
-                     dataflow: bool = False):
+                     dataflow: bool = False, moe_families: bool = False):
     """The paper's (mode, k) grid as (name, k, PrecisionPlan) candidates;
     ``dataflow`` doubles each eligible candidate with its whole-layer
-    int8-dataflow variant (family ``<mode>+int8flow``)."""
+    int8-dataflow variant (family ``<mode>+int8flow``); ``moe_families``
+    (MoE configs only) adds the per-expert variant (``<mode>+experts``)."""
     for name, k, policy in paper_grid(engine.cfg.num_layers,
                                       engine.float_dtype, stride):
         if name != "float" and not any(m.value == name for m in modes):
@@ -160,6 +184,11 @@ def _grid_candidates(engine: "SAMPEngine", stride: int,
             flow = int8_dataflow_variant(precision)
             if flow is not None:
                 yield name + "+int8flow", k, flow
+        if moe_families and engine.cfg.moe is not None:
+            moe = moe_family_variant(
+                precision, dynamic_acts=engine.scheme.dynamic_acts)
+            if moe is not None:
+                yield name + "+experts", k, moe
 
 
 @register_strategy("prefix_grid")
@@ -169,14 +198,17 @@ def prefix_grid_strategy(engine: "SAMPEngine", params, stats, eval_fn,
                              LayerMode.FULLY_QUANT,
                              LayerMode.QUANT_FFN_ONLY),
                          calibrator: str = "minmax",
-                         dataflow: bool = False) -> list[SweepPoint]:
+                         dataflow: bool = False,
+                         moe_families: bool = False) -> list[SweepPoint]:
     """The paper's Table-2 grid: both modes × every quantized-prefix depth
     (dedupe in :func:`paper_grid` drops the k=0 duplicates). ``dataflow``
     adds the whole-layer int8-dataflow variant of each eligible candidate
-    to the search space (schema-v3 softmax/norm schemes)."""
+    to the search space (schema-v3 softmax/norm schemes); ``moe_families``
+    adds the per-expert schema-v4 variant on MoE configs."""
     points: list[SweepPoint] = []
     for name, k, precision in _grid_candidates(engine, stride, modes,
-                                               calibrator, dataflow):
+                                               calibrator, dataflow,
+                                               moe_families):
         acc, lat = _measure(engine, params, stats, precision, eval_fn,
                             latency_fn)
         points.append(SweepPoint(name, k, precision, acc, lat))

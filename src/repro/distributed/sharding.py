@@ -132,6 +132,13 @@ class Rules:
         c = self.cfg
         if re.search(r"ffn/(wg|wu|wd)/w$", path) and len(shape) == 3:
             return self._expert(shape, row=path.endswith("wd/w"))
+        if re.search(r"ffn/(wg|wu|wd)/xs$", path) and len(shape) == 3:
+            # per-expert static activation scales (E, 1, 1): ride the same
+            # expert axis as the int8 values they dequantize (EP over data
+            # when divisible); replicate for the FSDP fallback, whose
+            # sharded d_model axis they do not carry
+            return ((self.axes.data if _div(shape[0], self.dsize) else None),
+                    None, None)
         if path.endswith("router/w"):
             return (None, None)
         if re.search(r"rec/(wa|wi)/w$", path):      # (R, R) gate GEMMs

@@ -139,6 +139,14 @@ class ComputeBackend:
         to use the reference gather."""
         return None
 
+    def expert_gemm(self, xe, w, xs=None):
+        """Routed MoE expert GEMM: xe (..., E, C, D) @ w.values (E, D, F)
+        with per-expert scale operands (weight scales (E, 1, F); static
+        activation scales (E, 1, 1) under the v4 ``experts`` family, or
+        per-token dynamic when ``xs`` is None). Return (..., E, C, F), or
+        None to use the reference batched einsum."""
+        return None
+
     def attention(self, q, k, v, p: dict, *, k_pos, spec, scale,
                   softcap=None):
         """Whole fully-quantized encoder attention core (QK^T + softmax +
@@ -180,9 +188,15 @@ class ComputeBackend:
         """Fail at apply time — not serve time — if the plan names a spec
         :meth:`supports` rejects. A no-op for the built-in backends; the
         hook exists for custom registered backends."""
-        from repro.core.plan import BLOCKS
+        from repro.core.plan import BLOCKS, BLOCK_FAMILIES
         bad = [(i, b) for i, lp in enumerate(precision.layers)
                for b in BLOCKS if not self.supports(lp.spec(b))]
+        # schema-v4 block families: only families the layer actually sets
+        # are validated (the fallback spec is already covered above)
+        bad += [(i, f) for i, lp in enumerate(precision.layers)
+                for f in BLOCK_FAMILIES
+                if getattr(lp, f) is not None
+                and not self.supports(getattr(lp, f))]
         if bad:
             shown = ", ".join(f"layer{i}/{b}" for i, b in bad[:4])
             raise ValueError(
@@ -277,6 +291,25 @@ class FusedBackend(ComputeBackend):
                 QuantizedTensor(y, jnp.asarray(out_xs, jnp.float32), None),
                 out_dtype)
         return y
+
+    # -- routed expert GEMM stack --------------------------------------------
+    def expert_gemm(self, xe, w, xs=None):
+        # Claims int8 expert stacks: each expert's routed token shard runs
+        # through the fused quant_linear kernel with its own per-expert
+        # scale operands (weights (E, 1, F); static acts (E, 1, 1) — a
+        # scalar xs, the pre-v4 ffn_in fallback, broadcasts to every
+        # expert). Declines float stacks and — mirroring `linear` — any
+        # deployment where the per-expert (D, F) GEMM would shard below
+        # one kernel tile under the bound mesh.
+        if (not self._enabled or not isinstance(w, QuantizedTensor)
+                or w.values.ndim != 3):
+            return None
+        E, D, F = w.values.shape
+        if self._shard_too_narrow(D, F):
+            return None          # per-device expert shard below one tile
+        from repro.kernels import ops
+        return ops.quant_expert_gemm(xe, w.values, w.scale, xs,
+                                     out_dtype=jnp.float32)
 
     # -- residual boundary ---------------------------------------------------
     def addnorm(self, delta, residual, p: dict, kind: str, next_scale,

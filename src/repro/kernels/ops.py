@@ -79,6 +79,62 @@ def dynamic_quant(x, *, bm: int = 256):
     return _dq.dynamic_quant(x, bm=bm, interpret=KERNEL_INTERPRET)
 
 
+@functools.partial(jax.jit, static_argnames=("out_dtype", "bm", "bn", "bk"))
+def quant_expert_gemm(xe, w_q, w_scale, xs=None, *, out_dtype=jnp.float32,
+                      bm: int = 128, bn: int = 128, bk: int = 128):
+    """Batched per-expert W8A8 GEMM: a routed capacity buffer
+    ``xe (..., E, C, D)`` against an int8 expert stack ``w_q (E, D, F)``
+    -> ``(..., E, C, F)``.
+
+    Per-expert scales are **operands**: ``w_scale`` broadcastable to
+    (E, 1, F) (per-expert-per-channel, the v4 ``experts`` family layout) and
+    ``xs`` broadcastable to (E, 1, 1) (per-expert static activation scales;
+    ``None`` selects per-token dynamic quantization via ``dynamic_quant``).
+    The expert axis is a static Python grid — expert count is model
+    structure, not data — so each expert's token shard runs through one
+    fused ``quant_linear`` with exactly its own scale operands.
+    """
+    from repro.core.quantize import quantize, quantize_per_token
+    E, D, F = w_q.shape
+    lead = xe.shape[:-3]
+    ws = jnp.asarray(w_scale, jnp.float32)
+    ws = jnp.broadcast_to(ws.reshape((1, 1, -1) if ws.ndim < 3 else ws.shape),
+                          (E, 1, F)).reshape(E, F)
+    # Quantize the whole routed buffer in ONE op, exactly the subgraph the
+    # reference einsum path builds, then slice codes per expert. Quantizing
+    # per-expert slices separately lets XLA fuse the round differently
+    # (reciprocal-multiply vs divide), and a ±1 code flip at a rounding
+    # boundary is an O(scale) output step — which the MoE router then
+    # amplifies into a different top-k choice. Identical subgraph ->
+    # identical codes -> backend choice never moves the routing.
+    if xs is not None:
+        xs_b = jnp.asarray(xs, jnp.float32)
+        if xs_b.ndim == 0:                               # legacy scalar plan
+            codes = quantize(xe, xs_b)
+            x_scales = [xs_b] * E
+        else:
+            xs3 = jnp.broadcast_to(xs_b.reshape(-1, 1, 1), (E, 1, 1))
+            codes = quantize(xe, xs3)
+            x_scales = [xs3[e, 0, 0] for e in range(E)]
+    else:
+        xq = quantize_per_token(xe)                      # (..., E, C, 1)
+        codes = xq.values
+        sc4 = xq.scale.reshape((-1,) + xq.scale.shape[-3:])
+        x_scales = None
+    x4 = codes.reshape((-1,) + codes.shape[-3:])         # (G, E, C, D) int8
+    G, _, C, _ = x4.shape
+    outs = []
+    for e in range(E):
+        rows_q = x4[:, e].reshape(G * C, D)
+        x_scale = (x_scales[e] if x_scales is not None
+                   else sc4[:, e].reshape(G * C, 1))
+        y = quant_linear(rows_q, w_q[e], ws[e], x_scale, bias=None, act=None,
+                         out_scale=None, out_dtype=out_dtype,
+                         bm=bm, bn=bn, bk=bk)
+        outs.append(y.reshape(G, C, F))
+    return jnp.stack(outs, axis=1).reshape(lead + (E, C, F))
+
+
 @functools.partial(jax.jit, static_argnames=(
     "causal", "window", "softcap", "scale", "bq", "bk"))
 def flash_attention(q, k, v, *, causal: bool = False,

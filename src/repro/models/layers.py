@@ -61,6 +61,19 @@ def observe_per_head(obs: Optional[dict], site: str, x) -> None:
         obs[site] = jnp.max(jnp.abs(x), axis=(0, 1, 3)).astype(jnp.float32)
 
 
+def observe_per_expert(obs: Optional[dict], site: str, x) -> None:
+    """Record per-expert max|x| over a routed (..., E, C, D) capacity
+    buffer — the ``expert_in``/``expert_hidden`` calibration sites of the
+    schema-v4 ``experts`` family, whose static scales are per-expert (E,).
+    Aggregation over the capacity axis is exact: each expert's amax covers
+    precisely the tokens routed to it (dropped tokens scatter as zeros,
+    which never raise a max of real activations)."""
+    if obs is not None and not isinstance(x, QuantActivation):
+        e_axis = x.ndim - 3
+        axes = tuple(i for i in range(x.ndim) if i != e_axis)
+        obs[site] = jnp.max(jnp.abs(x), axis=axes).astype(jnp.float32)
+
+
 # ---------------------------------------------------------------------------
 # quant-aware GEMMs
 # ---------------------------------------------------------------------------
@@ -921,12 +934,20 @@ def init_moe(key, cfg, dtype=jnp.float32) -> dict:
 
 
 def _expert_gemm(xe: jax.Array, w, xs: Optional[jax.Array],
-                 obs: Optional[dict], site: str) -> jax.Array:
+                 obs: Optional[dict], site: str, backend=None) -> jax.Array:
     """Batched per-expert GEMM: xe (..., E, C, D) @ w (E, D, F) ->
     (..., E, C, F); the optional leading axis is the token-shard group.
-    Quantized experts hold per-expert-per-channel weight scales (E, 1, F)."""
+    Quantized experts hold per-expert-per-channel weight scales (E, 1, N)
+    (2-D blocks) or, under the v4 ``experts`` family, per-expert static
+    activation scales ``xs`` shaped (E, 1, 1). ``backend`` may claim the
+    op via ``expert_gemm`` (the fused per-expert quant_linear path) or
+    decline, keeping this reference einsum."""
     eq = ("gecd,edf->gecf" if xe.ndim == 4 else "ecd,edf->ecf")
     observe(obs, site, xe)
+    if backend is not None and isinstance(w, QuantizedTensor):
+        y = backend.expert_gemm(xe, w, xs)
+        if y is not None:
+            return y.astype(xe.dtype)
     if isinstance(w, QuantizedTensor):
         if xs is not None:
             xq = QuantizedTensor(quantize(xe, xs), xs, None)
@@ -969,8 +990,8 @@ def _combine_one(ye, st, sg, keep, slot, Tl, D, dtype):
 
 
 def moe_block(x: jax.Array, p: dict, cfg, obs: Optional[dict] = None,
-              constrain: Callable[[jax.Array, str], jax.Array] = lambda a, _: a
-              ) -> jax.Array:
+              constrain: Callable[[jax.Array, str], jax.Array] = lambda a, _: a,
+              backend=None) -> jax.Array:
     """Top-k MoE with capacity-bounded sort-based dispatch.
 
     Router (always float — it is tiny and precision-critical) picks top-k
@@ -1011,14 +1032,18 @@ def moe_block(x: jax.Array, p: dict, cfg, obs: Optional[dict] = None,
     xe, st, sg, keep, slot = jax.vmap(
         lambda xt, lg: _dispatch_one(xt, lg, E, K, C))(xg, logits)
     xe = constrain(xe, "moe_dispatch")                  # (G, E, C, D)
+    observe_per_expert(obs, "expert_in", xe)
 
     # --- expert GEMMs (GLU) --------------------------------------------------
     h = (jax.nn.silu(_expert_gemm(xe, p["wg"]["w"], p["wg"].get("xs"),
-                                  obs, "ffn_in_e"))
-         * _expert_gemm(xe, p["wu"]["w"], p["wu"].get("xs"), None, "ffn_in_e"))
+                                  obs, "ffn_in_e", backend=backend))
+         * _expert_gemm(xe, p["wu"]["w"], p["wu"].get("xs"), None, "ffn_in_e",
+                        backend=backend))
     h = constrain(h, "moe_hidden")
     observe(obs, "ffn_hidden", h)
-    ye = _expert_gemm(h, p["wd"]["w"], p["wd"].get("xs"), None, "ffn_hidden")
+    observe_per_expert(obs, "expert_hidden", h)
+    ye = _expert_gemm(h, p["wd"]["w"], p["wd"].get("xs"), None, "ffn_hidden",
+                      backend=backend)
     ye = constrain(ye, "moe_dispatch")                  # (G, E, C, D)
 
     # --- combine (group-local scatter) ----------------------------------------
@@ -1027,7 +1052,7 @@ def moe_block(x: jax.Array, p: dict, cfg, obs: Optional[dict] = None,
     y = y.reshape(T, D)
     if "shared" in p:
         y = y + ffn_block(x, p["shared"], cfg, obs=obs,
-                          prefix="shared_").reshape(T, D)
+                          prefix="shared_", backend=backend).reshape(T, D)
     return y.reshape(B, S, D)
 
 

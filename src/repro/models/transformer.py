@@ -273,7 +273,8 @@ def layer_forward(x, lp, cfg: ArchConfig, kind: BlockKind, mode: LayerMode,
                 a = a.dequantize()      # MoE residual keeps the float path
             x = constrain(x + a, "residual")
             h2 = L.norm(x, lp["norm2"], cfg.norm_kind)
-            f = L.moe_block(h2, lp["ffn"], cfg, obs=obs, constrain=constrain)
+            f = L.moe_block(h2, lp["ffn"], cfg, obs=obs, constrain=constrain,
+                            backend=backend)
         else:
             # fused backends collapse add-residual + norm + requant into one
             # kernel when the ffn_in GEMM has a static int8 scale to feed

@@ -119,6 +119,33 @@ SITE_BLOCK.update({s: "qkv" for s in BMM_SITES})
 # requant scale that lets the whole-layer int8 span (LayerPlan.norm='int8')
 # hand the fused add+norm an int8 delta. Rides the attn_out block's spec.
 SITE_BLOCK["attn_delta"] = "attn_out"
+# schema-v4 block families: the per-expert vector sites recorded inside the
+# routed _expert_gemm (amax over each expert's capacity buffer, shape (E,))
+# and the shared-expert scalar sites ride their family's spec —
+# LayerPlan.spec resolves the family with its documented fallback when the
+# plan predates v4.
+SITE_BLOCK["expert_in"] = "experts"
+SITE_BLOCK["expert_hidden"] = "experts"
+
+
+def _entry_spec(layer: LayerPlan, kind: BlockKind, path: tuple[str, ...],
+                block: str):
+    """Resolve the QuantSpec governing one SITE_MAP entry, honoring the
+    schema-v4 block families on MoE layers.
+
+    Returns ``(spec, expert_site)``: ``expert_site`` names the per-expert
+    vector amax site ('expert_in' / 'expert_hidden') when the entry is a
+    routed expert GEMM under the ``experts`` family (static activation
+    scales then become per-expert, shape (E, 1, 1)), else ``None``.
+    """
+    if kind.moe and path and path[0] == "ffn" and len(path) >= 2:
+        if path[1] == "shared":
+            if layer.shared_ffn is not None:
+                return layer.shared_ffn, None
+        elif path[1] in ("wg", "wu", "wd") and layer.experts is not None:
+            site = "expert_hidden" if path[1] == "wd" else "expert_in"
+            return layer.experts, site
+    return layer.spec(block), None
 
 
 def _kind_entries(cfg: ArchConfig, kind: BlockKind):
@@ -185,7 +212,7 @@ def quantize_layer(lp: dict, cfg: ArchConfig, kind: BlockKind,
         return lp
     lp = _copy_dicts(lp)                     # containers copied, leaves shared
     for group, path, site, block in _kind_entries(cfg, kind):
-        spec = layer.spec(block)
+        spec, expert_site = _entry_spec(layer, kind, path, block)
         if not spec.quantized:
             continue
         sub = _get_path(lp, path)
@@ -193,9 +220,22 @@ def quantize_layer(lp: dict, cfg: ArchConfig, kind: BlockKind,
             continue
         new = dict(sub)
         new["w"] = quantize_weight(sub["w"], spec.weight)
-        if spec.static_acts and site in amax:
-            new["xs"] = jnp.asarray(
-                compute_scale_symmetric(jnp.float32(amax[site])))
+        if spec.static_acts:
+            if expert_site is not None:
+                # experts family: per-expert static scales from the (E,)
+                # vector amax recorded inside the routed _expert_gemm;
+                # shaped (E, 1, 1) to broadcast against (..., E, C, D)
+                if expert_site not in amax:
+                    raise ValueError(
+                        f"experts family with act='int8_per_tensor' needs "
+                        f"calibrated {expert_site!r} stats for this layer; "
+                        f"re-run capture_stats (or use act="
+                        f"'int8_per_token')")
+                vec = jnp.asarray(amax[expert_site], jnp.float32)
+                new["xs"] = compute_scale_symmetric(vec).reshape(-1, 1, 1)
+            elif site in amax:
+                new["xs"] = jnp.asarray(
+                    compute_scale_symmetric(jnp.float32(amax[site])))
         _set_path(lp, path, new)
     if kind.body == "attn" and layer.qkv.quantized and layer.qkv.static_acts:
         attn = lp["attn"]
@@ -341,9 +381,10 @@ def capture_stats(params: dict, batches: Sequence[dict], cfg: ArchConfig,
         use_hist = calibrator != "minmax"
     else:
         use_hist = precision is not None and any(
-            lp.spec(b).quantized and lp.spec(b).calibrator != "minmax"
-            for lp in precision.layers for b in
-            ("qkv", "attn_out", "ffn_in", "ffn_out"))
+            s is not None and s.quantized and s.calibrator != "minmax"
+            for lp in precision.layers for s in
+            (lp.qkv, lp.attn_out, lp.ffn_in, lp.ffn_out,
+             lp.experts, lp.shared_ffn))
 
     def calibrator_kw(name: str) -> dict:
         # a plan may mix calibrator families in one capture run; hand each

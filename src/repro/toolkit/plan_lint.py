@@ -35,9 +35,13 @@ from repro.core.plan import PlanSet, PrecisionPlan
 
 
 def lint(path: str, *, num_layers: int | None = None,
+         arch_family: str | None = None, is_moe: bool | None = None,
          log=print) -> Union[PrecisionPlan, PlanSet]:
     """Validate the plan/planset file; raises ValueError on any
-    violation."""
+    violation. ``arch_family``/``is_moe`` (from ``--arch``) put the
+    target architecture into schema-violation messages and reject
+    ``experts``/``router``/``shared_ffn`` families aimed at a dense
+    config."""
     try:
         with open(path) as f:
             raw = json.load(f)
@@ -46,7 +50,7 @@ def lint(path: str, *, num_layers: int | None = None,
     kind = PlanSet if (isinstance(raw, dict)
                        and "planset_version" in raw) else PrecisionPlan
     try:
-        plan = kind.from_dict(raw)
+        plan = kind.from_dict(raw, arch_family=arch_family)
     except (ValueError, KeyError, TypeError) as e:
         raise ValueError(f"{path}: schema violation: {e}") from e
     reloaded = kind.from_json(plan.to_json())
@@ -56,6 +60,15 @@ def lint(path: str, *, num_layers: int | None = None,
     if num_layers is not None and plan.num_layers != num_layers:
         raise ValueError(f"{path}: plan has {plan.num_layers} layers, "
                          f"target architecture has {num_layers}")
+    if is_moe is False:
+        plans = ([p for _, p in plan.members]
+                 if isinstance(plan, PlanSet) else [plan])
+        if any(lp.has_families for p in plans for lp in p.layers):
+            fam = f" {arch_family!r}" if arch_family else ""
+            raise ValueError(
+                f"{path}: plan sets MoE block families "
+                f"(experts/router/shared_ffn) but the target "
+                f"architecture family{fam} has no expert layers")
     log(f"{path}: OK — {plan.describe()}")
     log(f"fingerprint {plan.fingerprint()}")
     return plan
@@ -76,15 +89,18 @@ def main(argv=None) -> int:
                     help="expected layer count (alternative to --arch)")
     args = ap.parse_args(argv)
 
-    num_layers = args.layers
+    num_layers, arch_family, is_moe = args.layers, None, None
     if args.arch is not None:
         from repro.configs import get_config
         cfg = get_config(args.arch)
         if args.reduced:
             cfg = cfg.reduced()
         num_layers = cfg.num_layers
+        arch_family = cfg.family
+        is_moe = cfg.moe is not None
     try:
-        lint(args.plan, num_layers=num_layers)
+        lint(args.plan, num_layers=num_layers, arch_family=arch_family,
+             is_moe=is_moe)
     except ValueError as e:
         print(f"plan_lint: {e}", file=sys.stderr)
         return 1

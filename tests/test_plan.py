@@ -60,8 +60,11 @@ def test_layerplan_block_lookup_and_mode():
     assert lp.mode is LayerMode.QUANT_FFN_ONLY
     assert LayerPlan(qkv=INT8).mode is LayerMode.FULLY_QUANT
     assert FLOAT_LAYER.mode is LayerMode.FLOAT
+    # "router" became a schema-v4 block family (resolves, stays float) —
+    # only genuinely unknown names raise
+    assert not lp.spec("router").quantized
     with pytest.raises(KeyError, match="unknown block"):
-        lp.spec("router")
+        lp.spec("bogus")
 
 
 def test_plan_rejects_bad_inputs():
@@ -69,9 +72,14 @@ def test_plan_rejects_bad_inputs():
         PrecisionPlan((FLOAT_LAYER,), "int8")
     with pytest.raises(ValueError, match="schema_version"):
         PrecisionPlan.from_dict({"layers": [{}]})
-    with pytest.raises(ValueError, match="unknown blocks"):
+    # "router" is a v4 family now: under a v1 header it is rejected as a
+    # version violation, and truly unknown keys still fail as unknown
+    with pytest.raises(ValueError, match="schema v4"):
         PrecisionPlan.from_dict({"schema_version": 1,
                                  "layers": [{"router": {}}]})
+    with pytest.raises(ValueError, match="unknown blocks"):
+        PrecisionPlan.from_dict({"schema_version": 1,
+                                 "layers": [{"bogus": {}}]})
     with pytest.raises(ValueError, match="non-empty"):
         PrecisionPlan.from_dict({"schema_version": 1, "layers": []})
     # typoed top-level keys must fail loudly, not fall back to defaults

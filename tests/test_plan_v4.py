@@ -1,0 +1,258 @@
+"""Schema v4 (block families): round-trip identity, fingerprint stability
+for pre-v4 plans, and the lint accept/reject matrix.
+
+Property tests ride tests/_hypothesis_shim.py — on minimal environments
+(no hypothesis) they skip visibly while the example-based tests still
+run. The pinned fingerprints below are BYTE-STABILITY guards: a v1-v3
+plan constructed today must serialize exactly as it did before v4 landed
+(minimal-version canonical serialization), or every executable-cache key
+and artifact identity in the wild silently rots.
+"""
+import dataclasses
+import json
+import os
+
+import pytest
+from _hypothesis_shim import hypothesis, st
+
+from repro.core.plan import (BLOCK_FAMILIES, BLOCKS, FAMILY_ALIASES,
+                             FLOAT_SPEC, LayerPlan, PrecisionPlan,
+                             QuantSpec)
+from repro.toolkit.plan_lint import lint
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+GOLDEN_V4 = os.path.join(DATA, "golden_plan_v4.json")
+GOLDEN_V4_FINGERPRINT = (
+    "1975482e7c32269fe19291e8b571accbfec0a6647da894a507e6531f228bc9ac")
+
+INT8 = QuantSpec(weight="int8_per_channel", act="int8_per_tensor")
+DYN = QuantSpec(weight="int8_per_channel", act="int8_per_token")
+
+# (constructor, expected schema_version, pinned fingerprint): minimal-
+# version serialization means pre-v4 plans keep their pre-v4 bytes
+PINNED = [
+    (lambda: PrecisionPlan((LayerPlan(qkv=INT8, ffn_in=INT8), LayerPlan()),
+                           "float32"), 1,
+     "98dc4f2a61cc732fe6413b4fd4051d94cd9722901fe4851e729228efbda8e5a1"),
+    (lambda: PrecisionPlan((LayerPlan(qkv=INT8,
+                                      kv_cache="int8_per_token"),
+                            LayerPlan()), "float32"), 2,
+     "5c153768ba96c2ff4a379de72321c6cd9c287b56a91423f8fd9fd3103b824ab0"),
+    (lambda: PrecisionPlan((LayerPlan(qkv=INT8, softmax="uint8"),
+                            LayerPlan()), "float32"), 3,
+     "113d45cdb31d8dce2440e201690be72f518bc4a6bdde35c41559d5d5d2e66775"),
+]
+
+
+# ---------------------------------------------------------------------------
+# schema basics
+# ---------------------------------------------------------------------------
+
+
+def test_family_spec_lookup_fallbacks_and_aliases():
+    lp = LayerPlan(ffn_in=INT8, ffn_out=INT8)
+    # unset families fall back: router -> float, experts/shared -> ffn_in
+    assert lp.spec("router") == FLOAT_SPEC
+    assert lp.spec("experts") == lp.ffn_in
+    assert lp.spec("shared_ffn") == lp.ffn_in
+    # aliases resolve onto their target block
+    assert lp.spec("recurrence_gates") == lp.ffn_in
+    assert lp.spec("recurrence_out") == lp.ffn_out
+    assert lp.spec("conv_stem") == lp.ffn_in
+    with pytest.raises(KeyError, match="experts"):
+        lp.spec("nonsense")
+
+
+def test_router_must_stay_float():
+    with pytest.raises(ValueError, match="router.*must stay float"):
+        LayerPlan(router=INT8)
+
+
+def test_experts_require_per_channel_weights():
+    with pytest.raises(ValueError, match="per-expert per-channel"):
+        LayerPlan(experts=QuantSpec(weight="int8_per_tensor",
+                                    act="int8_per_tensor"))
+
+
+def test_with_families_and_describe():
+    lp = LayerPlan(ffn_in=INT8, ffn_out=INT8).with_families(experts=INT8)
+    assert lp.has_families and lp.experts == INT8
+    plan = PrecisionPlan((lp, LayerPlan()), "float32")
+    assert plan.num_expert_layers == 1
+    assert "MOE 1/2" in plan.describe()
+
+
+def test_unknown_block_error_names_families_and_arch():
+    d = {"bogus_block": INT8.to_dict()}
+    with pytest.raises(ValueError) as ei:
+        LayerPlan.from_dict(d, arch_family="moe")
+    msg = str(ei.value)
+    assert "bogus_block" in msg
+    for fam in BLOCK_FAMILIES:
+        assert fam in msg
+    for alias in FAMILY_ALIASES:
+        assert alias in msg
+    assert "architecture family" in msg and "moe" in msg
+    # without arch context the error still names the accepted families
+    with pytest.raises(ValueError, match="experts"):
+        LayerPlan.from_dict(d)
+
+
+def test_alias_keys_parse_and_conflict_with_target():
+    lp = LayerPlan.from_dict({"recurrence_gates": INT8.to_dict()})
+    assert lp.ffn_in == INT8
+    with pytest.raises(ValueError, match="recurrence_gates"):
+        LayerPlan.from_dict({"recurrence_gates": INT8.to_dict(),
+                             "ffn_in": INT8.to_dict()})
+    # canonical serialization never emits alias keys
+    assert not (set(FAMILY_ALIASES)
+                & set(LayerPlan(ffn_in=INT8).to_dict()))
+
+
+# ---------------------------------------------------------------------------
+# serialization: minimal version + fingerprint stability
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("build,version,fp",
+                         PINNED, ids=["v1", "v2", "v3"])
+def test_pre_v4_plans_keep_their_bytes(build, version, fp):
+    plan = build()
+    d = plan.to_dict()
+    assert d["schema_version"] == version
+    assert plan.fingerprint() == fp
+    assert PrecisionPlan.from_dict(d).fingerprint() == fp
+
+
+def test_v4_emitted_only_with_families():
+    base = PrecisionPlan((LayerPlan(ffn_in=INT8, ffn_out=INT8),), "float32")
+    assert base.to_dict()["schema_version"] == 1
+    v4 = dataclasses.replace(
+        base, layers=(base.layers[0].with_families(experts=INT8),))
+    assert v4.to_dict()["schema_version"] == 4
+    assert v4.fingerprint() != base.fingerprint()
+
+
+def test_golden_v4_schema_and_fingerprint():
+    """Schema v4's on-disk shape is frozen. If this fails you changed the
+    serialization; bump the schema instead — deployed v4 plan files must
+    keep their fingerprints."""
+    plan = PrecisionPlan.load(GOLDEN_V4)
+    assert plan.fingerprint() == GOLDEN_V4_FINGERPRINT
+    with open(GOLDEN_V4) as f:
+        d = json.load(f)
+    assert d["schema_version"] == 4
+    assert plan.layers[0].router == FLOAT_SPEC
+    assert plan.layers[0].experts.quantized
+    assert plan.num_expert_layers == 3
+
+
+def test_v4_fields_rejected_under_old_headers():
+    with open(GOLDEN_V4) as f:
+        d = json.load(f)
+    for version in (1, 2, 3):
+        bad = dict(d, schema_version=version)
+        if version < 3:       # golden layer 0 also carries v2/v3 fields
+            bad["layers"] = [{"experts": INT8.to_dict()}]
+        with pytest.raises(ValueError, match="schema v4"):
+            PrecisionPlan.from_dict(bad)
+
+
+# ---------------------------------------------------------------------------
+# lint accept/reject matrix
+# ---------------------------------------------------------------------------
+
+
+def _write(tmp_path, obj):
+    p = tmp_path / "plan.json"
+    p.write_text(json.dumps(obj))
+    return str(p)
+
+
+def test_lint_accepts_golden_v4(tmp_path):
+    plan = lint(GOLDEN_V4, log=lambda *a: None)
+    assert plan.fingerprint() == GOLDEN_V4_FINGERPRINT
+
+
+def test_lint_rejects_quantized_router(tmp_path):
+    with open(GOLDEN_V4) as f:
+        d = json.load(f)
+    d["layers"][0]["router"] = INT8.to_dict()
+    with pytest.raises(ValueError, match="router.*must stay float"):
+        lint(_write(tmp_path, d), log=lambda *a: None)
+
+
+def test_lint_rejects_unknown_family_with_arch_context(tmp_path):
+    with open(GOLDEN_V4) as f:
+        d = json.load(f)
+    d["layers"][0]["exprts"] = INT8.to_dict()       # typo
+    with pytest.raises(ValueError, match="exprts.*moe"):
+        lint(_write(tmp_path, d), arch_family="moe",
+             log=lambda *a: None)
+
+
+def test_lint_rejects_families_on_dense_arch(tmp_path):
+    with pytest.raises(ValueError, match="no expert layers"):
+        lint(GOLDEN_V4, arch_family="dense", is_moe=False,
+             log=lambda *a: None)
+    # and the CLI path wires --arch through to the same rejection
+    from repro.toolkit import plan_lint
+    assert plan_lint.main([GOLDEN_V4, "--arch", "qwen2-0.5b",
+                           "--reduced"]) == 1
+    assert plan_lint.main([GOLDEN_V4, "--arch", "mixtral-8x22b",
+                           "--reduced"]) == 0
+
+
+def test_lint_rejects_v4_fields_under_old_header(tmp_path):
+    bad = {"schema_version": 3, "float_dtype": "float32",
+           "layers": [{"experts": INT8.to_dict()}]}
+    with pytest.raises(ValueError, match="schema v4"):
+        lint(_write(tmp_path, bad), log=lambda *a: None)
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis; skip visibly without it)
+# ---------------------------------------------------------------------------
+
+_SPECS = st.sampled_from([FLOAT_SPEC, INT8, DYN,
+                          QuantSpec(weight="int8_per_tensor",
+                                    act="int8_per_tensor")])
+_EXPERT_SPECS = st.sampled_from([None, INT8, DYN])
+
+
+@st.composite
+def _layer_plans(draw):
+    kw = {b: draw(_SPECS) for b in BLOCKS}
+    exp = draw(_EXPERT_SPECS)
+    if exp is not None:
+        kw["experts"] = exp
+    shared = draw(_EXPERT_SPECS)
+    if shared is not None:
+        kw["shared_ffn"] = shared
+    if draw(st.booleans()):
+        kw["router"] = FLOAT_SPEC
+    return LayerPlan(**kw)
+
+
+@hypothesis.settings(max_examples=50, deadline=None)
+@hypothesis.given(st.lists(_layer_plans(), min_size=1, max_size=4),
+                  st.sampled_from(["float32", "bfloat16"]))
+def test_v4_round_trip_identity(layers, dtype):
+    plan = PrecisionPlan(tuple(layers), dtype)
+    d = plan.to_dict()
+    reloaded = PrecisionPlan.from_dict(json.loads(json.dumps(d)))
+    assert reloaded == plan
+    assert reloaded.fingerprint() == plan.fingerprint()
+    # canonical: re-serialization is byte-identical
+    assert reloaded.to_json() == plan.to_json()
+
+
+@hypothesis.settings(max_examples=50, deadline=None)
+@hypothesis.given(st.lists(_layer_plans(), min_size=1, max_size=4))
+def test_version_is_minimal(layers):
+    plan = PrecisionPlan(tuple(layers), "float32")
+    v = plan.to_dict()["schema_version"]
+    has_fam = any(lp.has_families for lp in plan.layers)
+    assert (v == 4) == has_fam
+    if not has_fam:
+        assert v <= 3

@@ -28,6 +28,11 @@ committed baseline and fails (exit 1) when the serving stack regresses:
   tolerance ("no worse at equal concurrency"). Intra-artifact, but still
   a wall-clock ratio, so ``--skip-throughput`` disables it too — quick
   mode's ms-scale walls can't hold it on shared runners.
+* **moe presence** — the new artifact must carry the ``moe`` section
+  (reduced mixtral decoding under a schema-v4 per-expert plan) and it
+  must have served with zero steady-state retraces; baselines predating
+  the section only skip the retrace *trend* comparison. Losing the
+  point would silently un-gate the per-expert serving path.
 * **adaptive routing** — steady-state retraces in the routed sections
   (``adaptive.k1`` / ``adaptive.k3``) must not grow (baselines predating
   the section are tolerated), and — unless ``--skip-throughput`` — the
@@ -131,6 +136,25 @@ def gate(new: dict, base: dict, *, tps_tolerance: float,
                    f"sweep[{top}].int8_tokens_per_s",
                    f"{q['tokens_per_s']:.1f} vs float "
                    f"{f['tokens_per_s']:.1f} (floor {floor:.1f})")
+
+    # -- MoE point: must exist and serve retrace-free ------------------------
+    # (baselines predating the section are tolerated for the retrace
+    # comparison, but the NEW artifact must always carry the point —
+    # losing it would silently un-gate the per-expert serving path)
+    nmoe = new.get("moe")
+    _check(nmoe is not None, "moe.present",
+           "per-expert MoE decode point in artifact" if nmoe is not None
+           else "section missing from artifact — serve_throughput no "
+                "longer benches the experts-family plan")
+    if nmoe is not None:
+        _check(nmoe.get("num_experts", 0) > 1 and nmoe.get("retraces") == 0,
+               "moe.retraces",
+               f"experts={nmoe.get('num_experts')} steady-state "
+               f"retraces={nmoe.get('retraces')} (must be 0)")
+        bmoe = base.get("moe")
+        if bmoe is not None:
+            _check(nmoe["retraces"] <= bmoe["retraces"], "moe.retraces_trend",
+                   f"{nmoe['retraces']} (baseline {bmoe['retraces']})")
 
     # -- adaptive routing (tolerate baselines predating the section) ---------
     nada, bada = new.get("adaptive", {}), base.get("adaptive", {})
